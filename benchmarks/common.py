@@ -1,0 +1,159 @@
+"""Shared harness for the paper-replication benchmarks.
+
+Every benchmark drives a real VirtualClusterFramework (no mocks besides the
+paper's own virtual-kubelet instant-ready provider) and measures end-to-end
+WorkUnit creation latency exactly as §IV defines it: tenant-side creation
+timestamp -> tenant-side Ready-condition timestamp, including all queuing
+delays and synchronization overheads.
+"""
+from __future__ import annotations
+
+import statistics
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import VirtualClusterFramework, Namespace, WorkUnit
+
+
+@dataclass
+class LatencyStats:
+    latencies: List[float] = field(default_factory=list)
+
+    @property
+    def n(self) -> int:
+        return len(self.latencies)
+
+    def pct(self, p: float) -> float:
+        if not self.latencies:
+            return 0.0
+        s = sorted(self.latencies)
+        return s[min(len(s) - 1, int(len(s) * p))]
+
+    @property
+    def mean(self) -> float:
+        return statistics.mean(self.latencies) if self.latencies else 0.0
+
+    def histogram(self, bucket: float = 1.0, max_b: float = 20.0
+                  ) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for lat in self.latencies:
+            lo = min(int(lat / bucket), int(max_b / bucket)) * bucket
+            key = f"[{lo:g},{lo + bucket:g})"
+            out[key] = out.get(key, 0) + 1
+        return dict(sorted(out.items(), key=lambda kv: float(
+            kv[0][1:].split(",")[0])))
+
+
+def make_framework(num_nodes: int = 100, *, downward_workers: int = 20,
+                   upward_workers: int = 100, fair_queuing: bool = True,
+                   scan_interval: float = 0.0,
+                   parallel_scorers: int = 0) -> VirtualClusterFramework:
+    return VirtualClusterFramework(
+        num_nodes=num_nodes, downward_workers=downward_workers,
+        upward_workers=upward_workers, fair_queuing=fair_queuing,
+        scan_interval=scan_interval, router_scan_interval=0.0,
+        heartbeat_interval=3600.0,   # heartbeats off the hot path
+        parallel_scorers=parallel_scorers)
+
+
+def submit_burst(fw: VirtualClusterFramework, planes, units_per_tenant: int,
+                 chips: int = 0) -> float:
+    """All tenants submit their units concurrently; returns submit wall time."""
+    t0 = time.monotonic()
+
+    def submit(plane):
+        ns = Namespace()
+        ns.metadata.name = "bench"
+        try:
+            plane.api.create(ns)
+        except Exception:
+            pass
+        for j in range(units_per_tenant):
+            unit = fw.make_unit(f"u{j:05d}", "bench", chips=chips)
+            plane.api.create(unit)
+
+    threads = [threading.Thread(target=submit, args=(p,)) for p in planes]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return time.monotonic() - t0
+
+
+def wait_and_collect(fw: VirtualClusterFramework, planes,
+                     units_per_tenant: int, timeout: float = 600.0
+                     ) -> Tuple[LatencyStats, float]:
+    """Wait until all Ready; return (per-unit latencies, total wall time)."""
+    t0 = time.monotonic()
+    for plane in planes:
+        fw.wait_all_ready(plane, "bench", units_per_tenant, timeout=timeout)
+    total = time.monotonic() - t0
+    stats = LatencyStats()
+    for plane in planes:
+        for u in plane.api.list("WorkUnit", "bench"):
+            cond = u.status.condition("Ready")
+            if cond and cond.status == "True":
+                stats.latencies.append(
+                    cond.last_transition_time - u.metadata.creation_timestamp)
+    return stats, total
+
+
+def baseline_burst(num_nodes: int, tenants: int, units_per_tenant: int,
+                   timeout: float = 600.0) -> Tuple[LatencyStats, float]:
+    """Paper baseline: the load generator sends all requests straight to the
+    super cluster with one thread per tenant."""
+    fw = make_framework(num_nodes)
+    with fw:
+        t0 = time.monotonic()
+
+        def submit(i):
+            ns = Namespace()
+            ns.metadata.name = f"direct-{i}"
+            fw.super_api.create(ns)
+            for j in range(units_per_tenant):
+                unit = fw.make_unit(f"u{j:05d}", f"direct-{i}", chips=0)
+                fw.super_api.create(unit)
+
+        threads = [threading.Thread(target=submit, args=(i,))
+                   for i in range(tenants)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        deadline = time.monotonic() + timeout
+        want = tenants * units_per_tenant
+        while time.monotonic() < deadline:
+            ready = sum(1 for u in fw.super_api.list("WorkUnit")
+                        if u.status.phase == "Ready")
+            if ready >= want:
+                break
+            time.sleep(0.05)
+        total = time.monotonic() - t0
+        stats = LatencyStats()
+        for u in fw.super_api.list("WorkUnit"):
+            cond = u.status.condition("Ready")
+            if cond and cond.status == "True":
+                stats.latencies.append(
+                    cond.last_transition_time - u.metadata.creation_timestamp)
+        return stats, total
+
+
+def vc_burst(tenants: int, units_per_tenant: int, *, num_nodes: int = 100,
+             downward_workers: int = 20, upward_workers: int = 100,
+             fair_queuing: bool = True, timeout: float = 600.0
+             ) -> Tuple[LatencyStats, float, VirtualClusterFramework]:
+    """Full VirtualCluster path; caller must iterate results before stop()."""
+    fw = make_framework(num_nodes, downward_workers=downward_workers,
+                        upward_workers=upward_workers,
+                        fair_queuing=fair_queuing)
+    fw.start()
+    try:
+        planes = [fw.add_tenant(f"t{i:03d}") for i in range(tenants)]
+        submit_burst(fw, planes, units_per_tenant)
+        stats, total = wait_and_collect(fw, planes, units_per_tenant,
+                                        timeout=timeout)
+        return stats, total, fw
+    finally:
+        fw.stop()

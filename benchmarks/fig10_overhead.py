@@ -1,0 +1,78 @@
+"""Fig.10 + §IV-C: syncer resource usage, restart (cache rebuild) time, and
+periodic-scan cost.
+
+Measures process CPU time + peak RSS deltas across the burst (the syncer and
+its informers dominate), the syncer's own informer-cache memory estimate,
+cache-rebuild time after a syncer restart, and scan_once() duration at load.
+"""
+from __future__ import annotations
+
+import resource
+import time
+from typing import Dict, List
+
+from repro.core import Syncer
+from .common import make_framework, submit_burst, wait_and_collect
+
+
+def _cpu_seconds() -> float:
+    ru = resource.getrusage(resource.RUSAGE_SELF)
+    return ru.ru_utime + ru.ru_stime
+
+
+def _peak_rss_bytes() -> int:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024
+
+
+def run(full: bool = False) -> List[Dict]:
+    out: List[Dict] = []
+    cases = [(100, 25), (100, 50), (100, 100)] if full else \
+            [(20, 25), (20, 50), (20, 100)]
+    for tenants, per_tenant in cases:
+        fw = make_framework(100)
+        fw.start()
+        try:
+            planes = [fw.add_tenant(f"t{i:03d}") for i in range(tenants)]
+            cpu0, t0 = _cpu_seconds(), time.monotonic()
+            submit_burst(fw, planes, per_tenant)
+            _, total = wait_and_collect(fw, planes, per_tenant)
+            cpu = _cpu_seconds() - cpu0
+            wall = time.monotonic() - t0
+            units = tenants * per_tenant
+
+            # periodic scan cost at load (paper: <2 s for 10k pods)
+            ts0 = time.monotonic()
+            fixes = fw.syncer.scan_once()
+            scan_s = time.monotonic() - ts0
+
+            # restart: rebuild every informer cache (paper: <21 s)
+            tr0 = time.monotonic()
+            fw.syncer.stop()
+            syncer2 = Syncer(fw.super_api, scan_interval=0.0)
+            for name, plane in fw.operator.planes.items():
+                syncer2.register_tenant(plane, name)
+            syncer2.start()          # returns after wait_for_cache_sync
+            restart_s = time.monotonic() - tr0
+            mem_est = syncer2.memory_estimate()
+            syncer2.stop()
+
+            rec = {
+                "name": f"fig10/t{tenants}_u{units}",
+                "tenants": tenants, "units": units,
+                "cpu_s": cpu, "wall_s": wall,
+                "avg_cpus": cpu / wall if wall else 0.0,
+                "peak_rss_bytes": _peak_rss_bytes(),
+                "informer_cache_bytes": mem_est,
+                "cache_bytes_per_unit": mem_est / max(1, units),
+                "scan_s": scan_s, "scan_fixes": fixes,
+                "restart_rebuild_s": restart_s,
+            }
+            out.append(rec)
+            print(f"  fig10 u={units}: cpu={cpu:.1f}s ({rec['avg_cpus']:.1f} "
+                  f"cpus) cache={mem_est/1e6:.1f}MB "
+                  f"({rec['cache_bytes_per_unit']/1e3:.1f}KB/unit) "
+                  f"scan={scan_s*1e3:.0f}ms restart={restart_s:.2f}s",
+                  flush=True)
+        finally:
+            fw.stop()
+    return out

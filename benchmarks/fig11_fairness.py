@@ -1,0 +1,89 @@
+"""Fig.11: impact of fair queuing on fairness.
+
+Paper §IV-D: 10 greedy tenants issue 900 creations concurrently each; 40
+regular tenants issue 10 sequentially each; all weights equal. With WRR fair
+queuing the regular tenants' average creation time stays small; with the
+shared FIFO they are starved behind the greedy burst.
+"""
+from __future__ import annotations
+
+import statistics
+import threading
+import time
+from typing import Dict, List
+
+from repro.core import Namespace
+from .common import make_framework
+
+
+def _run_one(fair: bool, greedy: int, greedy_units: int, regular: int,
+             regular_units: int) -> Dict:
+    fw = make_framework(100, fair_queuing=fair)
+    fw.start()
+    try:
+        gplanes = [fw.add_tenant(f"greedy{i:02d}") for i in range(greedy)]
+        rplanes = [fw.add_tenant(f"reg{i:02d}") for i in range(regular)]
+        for p in gplanes + rplanes:
+            ns = Namespace()
+            ns.metadata.name = "bench"
+            p.api.create(ns)
+
+        def greedy_submit(plane):
+            for j in range(greedy_units):     # burst: all at once
+                plane.api.create(fw.make_unit(f"g{j:05d}", "bench", chips=0))
+
+        def regular_submit(plane):
+            for j in range(regular_units):    # sequential: wait each Ready
+                plane.api.create(fw.make_unit(f"r{j:05d}", "bench", chips=0))
+                fw.wait_ready(plane, "bench", f"r{j:05d}", timeout=300)
+
+        threads = [threading.Thread(target=greedy_submit, args=(p,))
+                   for p in gplanes]
+        threads += [threading.Thread(target=regular_submit, args=(p,))
+                    for p in rplanes]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for p in gplanes:
+            fw.wait_all_ready(p, "bench", greedy_units, timeout=600)
+
+        def avg_latency(planes) -> List[float]:
+            outs = []
+            for p in planes:
+                lats = []
+                for u in p.api.list("WorkUnit", "bench"):
+                    c = u.status.condition("Ready")
+                    if c and c.status == "True":
+                        lats.append(c.last_transition_time
+                                    - u.metadata.creation_timestamp)
+                if lats:
+                    outs.append(statistics.mean(lats))
+            return outs
+
+        return {"greedy_avg_s": avg_latency(gplanes),
+                "regular_avg_s": avg_latency(rplanes)}
+    finally:
+        fw.stop()
+
+
+def run(full: bool = False) -> List[Dict]:
+    greedy, gu, regular, ru = (10, 900, 40, 10) if full else (4, 150, 12, 5)
+    out = []
+    for fair in (True, False):
+        r = _run_one(fair, greedy, gu, regular, ru)
+        reg_worst = max(r["regular_avg_s"]) if r["regular_avg_s"] else 0.0
+        reg_mean = statistics.mean(r["regular_avg_s"]) if r["regular_avg_s"] else 0.0
+        gr_mean = statistics.mean(r["greedy_avg_s"]) if r["greedy_avg_s"] else 0.0
+        rec = {
+            "name": f"fig11/{'fair' if fair else 'fifo'}",
+            "fair_queuing": fair,
+            "greedy_tenants": greedy, "greedy_units_each": gu,
+            "regular_tenants": regular, "regular_units_each": ru,
+            "regular_mean_s": reg_mean, "regular_worst_s": reg_worst,
+            "greedy_mean_s": gr_mean,
+        }
+        out.append(rec)
+        print(f"  fig11 fair={fair}: regular mean {reg_mean:.2f}s worst "
+              f"{reg_worst:.2f}s | greedy mean {gr_mean:.2f}s", flush=True)
+    return out

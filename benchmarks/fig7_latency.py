@@ -1,0 +1,42 @@
+"""Fig.7: WorkUnit-creation latency histograms.
+
+Factors (paper §IV-A): number of created units, number of tenants, number of
+downward worker threads — VirtualCluster vs direct-to-super baseline.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .common import baseline_burst, vc_burst
+
+# (tenants, total units); paper scale = [(10,1250),(50,2500),(100,5000),(100,10000)]
+SCALED = [(5, 250), (10, 500), (20, 1000)]
+FULL = [(10, 1250), (50, 2500), (100, 5000), (100, 10000)]
+WORKER_COUNTS = [5, 20]
+
+
+def run(full: bool = False) -> List[Dict]:
+    cases = FULL if full else SCALED
+    out: List[Dict] = []
+    for tenants, total_units in cases:
+        per_tenant = total_units // tenants
+        base_stats, base_total = baseline_burst(100, tenants, per_tenant)
+        for workers in WORKER_COUNTS:
+            stats, total, _ = vc_burst(tenants, per_tenant,
+                                       downward_workers=workers)
+            out.append({
+                "name": f"fig7/t{tenants}_u{total_units}_w{workers}",
+                "tenants": tenants, "units": total_units,
+                "dws_workers": workers,
+                "vc_p50_s": stats.pct(0.5), "vc_p99_s": stats.pct(0.99),
+                "vc_mean_s": stats.mean, "vc_total_s": total,
+                "base_p50_s": base_stats.pct(0.5),
+                "base_p99_s": base_stats.pct(0.99),
+                "base_total_s": base_total,
+                "vc_hist": stats.histogram(),
+                "base_hist": base_stats.histogram(),
+            })
+            print(f"  fig7 t={tenants} u={total_units} w={workers}: "
+                  f"vc p99={stats.pct(0.99):.2f}s (base {base_stats.pct(0.99):.2f}s) "
+                  f"total {total:.1f}s (base {base_total:.1f}s)", flush=True)
+    return out

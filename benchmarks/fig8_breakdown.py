@@ -1,0 +1,57 @@
+"""Fig.8 + Table I: Pod-creation round-trip latency breakdown.
+
+Five chronological phases per WorkUnit: DWS-Queue, DWS-Process, Super-Sched,
+UWS-Queue, UWS-Process (paper defines them identically). Table I buckets the
+per-phase times in 2-second buckets.
+"""
+from __future__ import annotations
+
+import statistics
+from typing import Dict, List
+
+from .common import make_framework, submit_burst, wait_and_collect
+
+PHASES = ["DWS-Queue", "DWS-Process", "Super-Sched", "UWS-Queue",
+          "UWS-Process"]
+BUCKETS = [(0, 2), (2, 4), (4, 6), (6, 8), (8, 10)]
+
+
+def run(full: bool = False) -> List[Dict]:
+    tenants, per_tenant = (100, 100) if full else (20, 50)
+    fw = make_framework(100)
+    fw.start()
+    try:
+        planes = [fw.add_tenant(f"t{i:03d}") for i in range(tenants)]
+        submit_burst(fw, planes, per_tenant)
+        _, total = wait_and_collect(fw, planes, per_tenant)
+        tls = [tl for tl in fw.syncer.metrics.timelines.values()
+               if tl.complete]
+        phase_means: Dict[str, float] = {}
+        bucket_counts: Dict[str, List[int]] = {p: [0] * len(BUCKETS)
+                                               for p in PHASES}
+        per_phase: Dict[str, List[float]] = {p: [] for p in PHASES}
+        for tl in tls:
+            for p, v in tl.phases().items():
+                per_phase[p].append(v)
+                for bi, (lo, hi) in enumerate(BUCKETS):
+                    if lo <= v < hi or (bi == len(BUCKETS) - 1 and v >= hi):
+                        bucket_counts[p][bi] += 1
+                        break
+        for p in PHASES:
+            phase_means[p] = statistics.mean(per_phase[p]) if per_phase[p] else 0.0
+        e2e = statistics.mean([tl.uws_done - tl.tenant_create for tl in tls])
+        rec = {
+            "name": f"fig8/t{tenants}_u{tenants*per_tenant}",
+            "tenants": tenants, "units": tenants * per_tenant,
+            "total_s": total, "e2e_mean_s": e2e,
+            "phase_means_s": phase_means,
+            "phase_fraction": {p: (phase_means[p] / e2e if e2e else 0.0)
+                               for p in PHASES},
+            "table1_buckets": bucket_counts,
+        }
+        print(f"  fig8 e2e={e2e:.2f}s breakdown=" + " ".join(
+            f"{p}:{phase_means[p]*1e3:.0f}ms({rec['phase_fraction'][p]*100:.0f}%)"
+            for p in PHASES), flush=True)
+        return [rec]
+    finally:
+        fw.stop()

@@ -1,0 +1,38 @@
+"""Fig.9: creation throughput — (a) fixed units, varying tenants;
+(b) fixed tenants, varying units; VirtualCluster vs baseline."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .common import baseline_burst, vc_burst
+
+
+def run(full: bool = False) -> List[Dict]:
+    out: List[Dict] = []
+    if full:
+        fixed_units = [(10, 5000), (50, 5000), (100, 5000)]
+        fixed_tenants = [(100, 2500), (100, 5000), (100, 10000)]
+    else:
+        fixed_units = [(5, 600), (10, 600), (20, 600)]
+        fixed_tenants = [(10, 300), (10, 600), (10, 1200)]
+
+    for label, cases in (("a_fixed_units", fixed_units),
+                         ("b_fixed_tenants", fixed_tenants)):
+        for tenants, total_units in cases:
+            per_tenant = total_units // tenants
+            stats, total, _ = vc_burst(tenants, per_tenant)
+            bstats, btotal = baseline_burst(100, tenants, per_tenant)
+            vc_tput = stats.n / total if total else 0.0
+            base_tput = bstats.n / btotal if btotal else 0.0
+            rec = {
+                "name": f"fig9{label}/t{tenants}_u{total_units}",
+                "tenants": tenants, "units": total_units,
+                "vc_throughput_per_s": vc_tput,
+                "base_throughput_per_s": base_tput,
+                "degradation": (1 - vc_tput / base_tput) if base_tput else 0.0,
+            }
+            out.append(rec)
+            print(f"  fig9{label} t={tenants} u={total_units}: "
+                  f"vc {vc_tput:.0f}/s base {base_tput:.0f}/s "
+                  f"degradation {rec['degradation']*100:.0f}%", flush=True)
+    return out

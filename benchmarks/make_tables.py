@@ -1,0 +1,76 @@
+"""Generate markdown tables for EXPERIMENTS.md from result JSONs.
+
+    PYTHONPATH=src python -m benchmarks.make_tables > results/tables.md
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def roofline_table(path: str, title: str) -> str:
+    if not os.path.exists(path):
+        return f"*(missing {path})*\n"
+    rows = json.load(open(path))
+    out = [f"### {title}", "",
+           "| arch | shape | strat | mb | t_comp (s) | t_mem (s) | t_coll (s) "
+           "| bottleneck | MODEL/HLO flops | mfu_bound | mem/dev (GiB) |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | | "
+                       f"{r.get('error','')[:60]} | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['strategy']} "
+            f"| {r.get('microbatches',1)} "
+            f"| {r['t_compute']:.3f} | {r['t_memory']:.3f} "
+            f"| {r['t_collective']:.3f} | **{r['bottleneck']}** "
+            f"| {r['useful_flops_ratio']:.2f} | {r['mfu_bound']:.3f} "
+            f"| {fmt_bytes(r['bytes_per_device'])} |")
+    out.append("")
+    return "\n".join(out)
+
+
+def collective_table(path: str, title: str) -> str:
+    if not os.path.exists(path):
+        return ""
+    rows = json.load(open(path))
+    out = [f"### {title}: collective schedule (per-device send GB / counts)",
+           "",
+           "| arch | shape | all-reduce | all-gather | reduce-scatter "
+           "| all-to-all | permute |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") != "ok":
+            continue
+        c = r.get("collectives", {})
+        n = r.get("collective_counts", {})
+
+        def cell(op):
+            if op not in c:
+                return "-"
+            return f"{c[op]/1e9:.2f} ({n.get(op, 0)})"
+        out.append(f"| {r['arch']} | {r['shape']} | {cell('all-reduce')} "
+                   f"| {cell('all-gather')} | {cell('reduce-scatter')} "
+                   f"| {cell('all-to-all')} | {cell('collective-permute')} |")
+    out.append("")
+    return "\n".join(out)
+
+
+def main():
+    print(roofline_table("results/dryrun_single_pod.json",
+                         "Single-pod 16x16 (256 chips) — baseline roofline"))
+    print(roofline_table("results/dryrun_multi_pod.json",
+                         "Multi-pod 2x16x16 (512 chips)"))
+    print(collective_table("results/dryrun_single_pod.json",
+                           "Single-pod 16x16"))
+
+
+if __name__ == "__main__":
+    main()

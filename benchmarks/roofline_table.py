@@ -1,0 +1,39 @@
+"""Roofline table from dry-run result JSONs (benchmarks/run.py prints it;
+launch/dryrun.py produces the inputs)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+RESULTS = [
+    ("results/dryrun_single_pod.json", "16x16"),
+    ("results/dryrun_multi_pod.json", "2x16x16"),
+]
+
+
+def run(full: bool = False) -> List[Dict]:
+    out: List[Dict] = []
+    for path, mesh in RESULTS:
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            rows = json.load(f)
+        for r in rows:
+            if r.get("status") != "ok":
+                out.append({"name": f"roofline/{mesh}/{r['arch']}/{r['shape']}",
+                            "status": r.get("status", "fail")})
+                continue
+            out.append({
+                "name": f"roofline/{mesh}/{r['arch']}/{r['shape']}",
+                "bottleneck": r["bottleneck"],
+                "t_compute_s": r["t_compute"], "t_memory_s": r["t_memory"],
+                "t_collective_s": r["t_collective"],
+                "mfu_bound": r["mfu_bound"],
+                "useful_flops_ratio": r["useful_flops_ratio"],
+                "bytes_per_device_gib": r["bytes_per_device"] / 2**30,
+            })
+    if not out:
+        print("  roofline: no dry-run results found "
+              "(run python -m repro.launch.dryrun --all first)")
+    return out

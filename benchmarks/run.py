@@ -1,0 +1,80 @@
+"""Benchmark runner: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract, where
+us_per_call is the mean per-WorkUnit end-to-end latency (microseconds) where
+meaningful, and ``derived`` carries the figure-specific headline metric.
+
+Default scale is CPU-budget-friendly; ``--full`` reproduces the paper's
+scale (100 tenants / 10k pods — minutes of wall time).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from . import (fig7_latency, fig8_breakdown, fig9_throughput, fig10_overhead,
+               fig11_fairness, kubeproxy_rules, roofline_table)
+
+SUITES = [
+    ("fig7", fig7_latency.run),
+    ("fig8", fig8_breakdown.run),
+    ("fig9", fig9_throughput.run),
+    ("fig10", fig10_overhead.run),
+    ("fig11", fig11_fairness.run),
+    ("kubeproxy", kubeproxy_rules.run),
+    ("roofline", roofline_table.run),
+]
+
+
+def _csv_row(rec) -> str:
+    name = rec.get("name", "?")
+    us = 0.0
+    for key in ("vc_mean_s", "e2e_mean_s", "inject_mean_s", "regular_mean_s"):
+        if key in rec:
+            us = rec[key] * 1e6
+            break
+    derived = []
+    for key in ("vc_p99_s", "base_p99_s", "vc_throughput_per_s",
+                "base_throughput_per_s", "degradation", "avg_cpus",
+                "cache_bytes_per_unit", "scan_s", "restart_rebuild_s",
+                "regular_worst_s", "greedy_mean_s", "gated_total_s",
+                "bottleneck", "mfu_bound", "t_compute_s", "t_memory_s",
+                "t_collective_s"):
+        if key in rec:
+            v = rec[key]
+            derived.append(f"{key}={v:.4g}" if isinstance(v, float) else
+                           f"{key}={v}")
+    return f"{name},{us:.1f},{';'.join(derived)}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale workloads (slow)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated suite names")
+    ap.add_argument("--json", default="", help="also dump records to file")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    all_recs = []
+    print("name,us_per_call,derived")
+    for name, fn in SUITES:
+        if only and name not in only:
+            continue
+        t0 = time.monotonic()
+        print(f"# suite {name}", flush=True)
+        recs = fn(full=args.full)
+        for rec in recs:
+            print(_csv_row(rec), flush=True)
+        all_recs.extend(recs)
+        print(f"# suite {name} done in {time.monotonic()-t0:.1f}s", flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(all_recs, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

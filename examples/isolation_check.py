@@ -1,0 +1,66 @@
+"""Data-plane isolation proof: tenant programs cannot talk across slices.
+
+The paper's Kata/VPC guarantee, TPU-native: a tenant's compiled XLA program
+may only issue collectives whose replica groups stay inside its mesh slice.
+We carve two 4-device tenant slices out of an 8-device host mesh, compile a
+sharded train-ish program per tenant, and run MeshRouter.validate_isolation
+over the REAL optimized HLO — then show a cross-slice program being caught.
+
+    PYTHONPATH=src python examples/isolation_check.py
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import IsolationViolation, MeshRouter
+
+
+def tenant_program(mesh):
+    """A small sharded forward+psum program compiled for one slice."""
+    def fn(x, w):
+        h = jnp.tanh(x @ w)
+        return h.sum()
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 64), jnp.float32)
+    with mesh:
+        return jax.jit(
+            jax.grad(fn),
+            in_shardings=(NamedSharding(mesh, P("data", None)),
+                          NamedSharding(mesh, P(None, "model"))),
+        ).lower(x, w).compile()
+
+
+def main():
+    devices = np.array(jax.devices())
+    slice_a = Mesh(devices[:4].reshape(2, 2), ("data", "model"))
+    slice_b = Mesh(devices[4:].reshape(2, 2), ("data", "model"))
+    full = Mesh(devices.reshape(2, 4), ("data", "model"))
+
+    for name, mesh, allowed in (("tenant-A", slice_a, range(0, 4)),
+                                ("tenant-B", slice_b, range(4, 8))):
+        compiled = tenant_program(mesh)
+        order = [d.id for d in mesh.devices.flatten()]   # logical -> physical
+        n = MeshRouter.validate_isolation(compiled.as_text(), allowed, order)
+        ids = sorted(order)
+        print(f"[{name}] slice devices {ids}: {n} collectives, "
+              f"all inside the slice OK")
+
+    # a program spanning the full mesh must NOT validate against one slice
+    compiled = tenant_program(full)
+    order = [d.id for d in full.devices.flatten()]
+    try:
+        MeshRouter.validate_isolation(compiled.as_text(), range(0, 4), order)
+        raise SystemExit("ERROR: cross-slice program passed validation")
+    except IsolationViolation as e:
+        print(f"[full-mesh program vs tenant-A slice] correctly rejected: "
+              f"{e}")
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Quickstart: a multi-tenant VirtualCluster in ~40 lines.
+
+Two tenants get dedicated control planes on a shared 4-node super cluster;
+each submits WorkUnits with identical names — full API compatibility, no
+collisions, vNode views preserved. Run:
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+from repro.core import VirtualClusterFramework
+
+
+def main():
+    fw = VirtualClusterFramework(num_nodes=4, scan_interval=5.0,
+                                 heartbeat_interval=2.0)
+    with fw:
+        # tenants are provisioned by the tenant operator from VC objects
+        acme = fw.add_tenant("acme", weight=2)
+        globex = fw.add_tenant("globex", weight=1)
+        print("tenants provisioned:",
+              [vc.metadata.name
+               for vc in fw.super_api.list("VirtualClusterCR")])
+
+        # both tenants use the same namespace/name — isolated control planes
+        for plane in (acme, globex):
+            unit = fw.make_unit("train-job", "default", chips=2,
+                                arch="tiny-dense", shape="train_4k")
+            fw.submit(plane, unit)
+
+        for plane in (acme, globex):
+            u = fw.wait_ready(plane, "default", "train-job", timeout=30)
+            print(f"[{plane.name}] train-job -> {u.status.phase} on "
+                  f"vNode {u.status.node}")
+            print(f"[{plane.name}] vNodes visible: "
+                  f"{[v.metadata.name for v in plane.api.list('VirtualNode')]}")
+
+        # the super cluster sees namespace-prefixed copies (paper §III-B(2))
+        print("super-cluster namespaces:",
+              [n.metadata.name for n in fw.super_api.list("Namespace")])
+
+        # logs flow through the vn-agent with credential-based identity
+        u = acme.api.get("WorkUnit", "default", "train-job")
+        log = fw.vn_agent.logs(acme.api.credential, u.status.node,
+                               "default", "train-job")
+        print("acme logs via vn-agent:", log.strip())
+
+        # tenant deletion cascades: super copies and vNodes are GC'd
+        acme.api.delete("WorkUnit", "default", "train-job")
+        time.sleep(0.5)
+        print("super WorkUnits after acme delete:",
+              len(fw.super_api.list("WorkUnit")))
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

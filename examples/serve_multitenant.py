@@ -1,0 +1,72 @@
+"""Multi-tenant serving: two tenants share one GenerationEngine fleet.
+
+Each tenant registers a Service (router injects its routing rules into the
+serving WorkUnits' guest tables before they start — the paper's enhanced-
+kubeproxy path), then streams generation requests through the continuous
+batcher. Fair queuing keeps the bursty tenant from starving the steady one.
+
+    PYTHONPATH=src python examples/serve_multitenant.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core import Service, VirtualClusterFramework
+from repro.models import init_params
+from repro.serving import ContinuousBatcher, GenerationEngine
+
+
+def main():
+    cfg = reduced(get_config("qwen2-7b"), n_layers=2, d_model=64, vocab=512)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    engine = GenerationEngine(cfg, params, slots=4, max_len=64)
+    batcher = ContinuousBatcher(engine)
+
+    fw = VirtualClusterFramework(num_nodes=2, scan_interval=0.0,
+                                 heartbeat_interval=3600)
+    with fw:
+        tenants = {name: fw.add_tenant(name) for name in ("bursty", "steady")}
+        # each tenant publishes a model endpoint service
+        for name, plane in tenants.items():
+            svc = Service()
+            svc.metadata.name = f"{cfg.name}-endpoint"
+            svc.metadata.namespace = "default"
+            svc.virtual_ip = f"10.96.0.{len(name)}"
+            svc.endpoints = ["engine-0"]
+            fw.submit(plane, fw.make_unit("server", "default", chips=1,
+                                          init_gate=True))
+            plane.api.create(svc)
+            fw.wait_ready(plane, "default", "server", timeout=30)
+            u = plane.api.get("WorkUnit", "default", "server")
+            print(f"[{name}] serving unit ready on vNode {u.status.node} "
+                  f"(routing rules gated before start)")
+
+        rng = np.random.default_rng(0)
+        uids = {}
+        t0 = time.monotonic()
+        # bursty tenant: 12 requests at once; steady: 4
+        for i in range(12):
+            uids[batcher.submit(rng.integers(0, cfg.vocab, 12),
+                                max_new_tokens=8)] = "bursty"
+        for i in range(4):
+            uids[batcher.submit(rng.integers(0, cfg.vocab, 12),
+                                max_new_tokens=8)] = "steady"
+        batcher.run_until_drained()
+        wall = time.monotonic() - t0
+        by_tenant = {}
+        for uid, req in batcher.completed.items():
+            by_tenant.setdefault(uids[uid], []).append(
+                req.finished_at - req.submitted_at)
+        toks = sum(len(r.tokens) for r in batcher.completed.values())
+        print(f"served {len(batcher.completed)} requests / {toks} tokens "
+              f"in {wall:.2f}s ({toks/wall:.0f} tok/s)")
+        for name, lats in sorted(by_tenant.items()):
+            print(f"  {name:7s}: {len(lats)} reqs, "
+                  f"mean latency {sum(lats)/len(lats):.2f}s")
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: VirtualCluster multi-tenant framework on a JAX/TPU substrate."""
+__version__ = "1.0.0"

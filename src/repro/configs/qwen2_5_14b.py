@@ -1,0 +1,10 @@
+"""qwen2.5-14b [dense] — GQA kv=8, QKV bias [hf:Qwen/Qwen2.5; hf]."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-14b", family="dense",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, head_dim=128,
+    d_ff=13824, vocab=152064,
+    qkv_bias=True, rope_theta=1e6, act="silu", norm_eps=1e-6,
+    layer_pattern="g",
+)

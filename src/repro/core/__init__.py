@@ -1,0 +1,28 @@
+"""VirtualCluster core: the paper's multi-tenant control plane."""
+from .agent import CallableProvider, MockProvider, NodeAgent, Provider, VnAgent
+from .apiserver import APIServer, TenantControlPlane
+from .cluster import VirtualClusterFramework
+from .fairqueue import FairWorkQueue
+from .informer import Informer, InformerCache
+from .objects import (KINDS, ConfigMap, Namespace, Node, Secret, Service,
+                      VirtualClusterCR, VirtualNode, WorkUnit, WorkUnitSpec)
+from .router import IsolationViolation, MeshRouter
+from .scheduler import SuperScheduler
+from .store import (ADDED, DELETED, MODIFIED, AlreadyExistsError,
+                    ConflictError, NotFoundError, ObjectStore)
+from .syncer import Syncer, ns_prefix
+from .tenant_operator import TenantOperator
+from .vnode import VNodeManager
+from .workqueue import DelayingQueue, RateLimiter, WorkQueue
+
+__all__ = [
+    "APIServer", "TenantControlPlane", "VirtualClusterFramework",
+    "FairWorkQueue", "WorkQueue", "DelayingQueue", "RateLimiter",
+    "Informer", "InformerCache", "ObjectStore", "Syncer", "ns_prefix",
+    "SuperScheduler", "TenantOperator", "VNodeManager", "MeshRouter",
+    "IsolationViolation", "NodeAgent", "VnAgent", "Provider", "MockProvider",
+    "CallableProvider", "WorkUnit", "WorkUnitSpec", "Service", "Secret",
+    "ConfigMap", "Namespace", "Node", "VirtualNode", "VirtualClusterCR",
+    "KINDS", "ADDED", "MODIFIED", "DELETED", "ConflictError",
+    "AlreadyExistsError", "NotFoundError",
+]

@@ -1,0 +1,162 @@
+"""Top-level wiring: a complete VirtualCluster deployment in one object.
+
+Composes the super cluster (apiserver + scheduler + node agents + router +
+vn-agent), the syncer, and the tenant operator. This is the public entry
+point used by examples, tests, and the paper-replication benchmarks.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from .agent import MockProvider, NodeAgent, Provider, VnAgent
+from .apiserver import APIServer, TenantControlPlane
+from .objects import VirtualClusterCR, WorkUnit, WorkUnitSpec
+from .router import MeshRouter
+from .scheduler import SuperScheduler
+from .store import NotFoundError
+from .syncer import Syncer
+from .tenant_operator import TenantOperator
+
+
+class VirtualClusterFramework:
+    def __init__(self, *, num_nodes: int = 4, chips_per_node: int = 8,
+                 downward_workers: int = 20, upward_workers: int = 100,
+                 fair_queuing: bool = True, scan_interval: float = 60.0,
+                 router_scan_interval: float = 60.0,
+                 provider_factory: Optional[Callable[[str], Provider]] = None,
+                 parallel_scorers: int = 0,
+                 heartbeat_interval: float = 5.0,
+                 grpc_latency_ms: float = 0.0):
+        self.super_api = APIServer("super")
+        self.router = MeshRouter(self.super_api,
+                                 grpc_latency_ms=grpc_latency_ms,
+                                 scan_interval=router_scan_interval)
+        self.agents: Dict[str, NodeAgent] = {}
+        for i in range(num_nodes):
+            name = f"node-{i:04d}"
+            provider = (provider_factory(name) if provider_factory
+                        else MockProvider())
+            chip_ids = list(range(i * chips_per_node, (i + 1) * chips_per_node))
+            self.agents[name] = NodeAgent(
+                self.super_api, name, chips=chips_per_node, chip_ids=chip_ids,
+                provider=provider, router=self.router,
+                heartbeat_interval=heartbeat_interval)
+        self.vn_agent = VnAgent(self.super_api, self.agents)
+        self.scheduler = SuperScheduler(self.super_api,
+                                        parallel_scorers=parallel_scorers)
+        self.syncer = Syncer(self.super_api,
+                             downward_workers=downward_workers,
+                             upward_workers=upward_workers,
+                             fair_queuing=fair_queuing,
+                             scan_interval=scan_interval)
+        self.operator = TenantOperator(self.super_api, self.syncer,
+                                       vn_agents=[self.vn_agent])
+        self._started = False
+
+    # -- lifecycle --------------------------------------------------------------
+
+    def start(self) -> None:
+        for agent in self.agents.values():
+            agent.start()
+        self.router.start()
+        self.scheduler.start()
+        self.syncer.start()
+        self.operator.start()
+        self._started = True
+
+    def stop(self) -> None:
+        self.operator.stop()
+        self.syncer.stop()
+        self.scheduler.stop()
+        self.router.stop()
+        for agent in self.agents.values():
+            agent.stop()
+        self.super_api.close()
+
+    def __enter__(self) -> "VirtualClusterFramework":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- tenants -----------------------------------------------------------------
+
+    def add_tenant(self, name: str, weight: int = 1,
+                   timeout: float = 10.0) -> TenantControlPlane:
+        vc = VirtualClusterCR()
+        vc.metadata.name = name
+        vc.weight = weight
+        self.super_api.create(vc)
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            plane = self.operator.planes.get(name)
+            if plane is not None and name in self.syncer.tenants:
+                return plane
+            time.sleep(0.005)
+        raise TimeoutError(f"tenant {name} not provisioned in {timeout}s")
+
+    def remove_tenant(self, name: str) -> None:
+        self.super_api.delete("VirtualClusterCR", "", name)
+
+    # -- workload helpers --------------------------------------------------------------
+
+    @staticmethod
+    def make_unit(name: str, namespace: str = "default", *, arch: str = "tiny-dense",
+                  shape: str = "train_4k", chips: int = 1,
+                  anti_affinity: Optional[List[str]] = None,
+                  labels: Optional[Dict[str, str]] = None,
+                  init_gate: bool = False,
+                  payload: Optional[Dict[str, Any]] = None) -> WorkUnit:
+        unit = WorkUnit()
+        unit.metadata.name = name
+        unit.metadata.namespace = namespace
+        unit.metadata.labels.update(labels or {})
+        unit.spec = WorkUnitSpec(arch=arch, shape=shape, chips=chips,
+                                 anti_affinity=anti_affinity or [],
+                                 init_gate=init_gate, payload=payload or {})
+        return unit
+
+    def submit(self, plane: TenantControlPlane, unit: WorkUnit) -> WorkUnit:
+        try:
+            plane.api.get("Namespace", "", unit.metadata.namespace)
+        except NotFoundError:
+            from .objects import Namespace
+            ns = Namespace()
+            ns.metadata.name = unit.metadata.namespace
+            plane.api.create(ns)
+        return plane.api.create(unit)
+
+    @staticmethod
+    def wait_ready(plane: TenantControlPlane, namespace: str, name: str,
+                   timeout: float = 60.0) -> WorkUnit:
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            try:
+                unit = plane.api.get("WorkUnit", namespace, name)
+                if unit.status.phase == "Ready":
+                    return unit
+                if unit.status.phase == "Failed":
+                    raise RuntimeError(f"unit failed: {unit.status.message}")
+            except NotFoundError:
+                pass
+            time.sleep(0.01)
+        raise TimeoutError(f"{namespace}/{name} not Ready in {timeout}s")
+
+    @staticmethod
+    def wait_all_ready(plane: TenantControlPlane, namespace: str,
+                       count: int, timeout: float = 300.0,
+                       poll: float = 0.05) -> float:
+        """Block until ``count`` units in ``namespace`` are Ready; returns
+        the wall time spent waiting."""
+        t0 = time.monotonic()
+        deadline = t0 + timeout
+        while time.monotonic() < deadline:
+            units = plane.api.list("WorkUnit", namespace)
+            ready = sum(1 for u in units if u.status.phase == "Ready")
+            if ready >= count:
+                return time.monotonic() - t0
+            time.sleep(poll)
+        raise TimeoutError(
+            f"only {ready}/{count} units Ready after {timeout}s")

@@ -1,0 +1,218 @@
+"""Versioned, watchable object store — the etcd analogue.
+
+Semantics modelled on etcd + the k8s apiserver storage layer:
+- a single monotonically increasing resourceVersion counter per store;
+- optimistic concurrency: update() with a stale resourceVersion conflicts;
+- watches deliver ADDED/MODIFIED/DELETED events in version order;
+- reads return copies (mutating a returned object never mutates the store).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+
+from .objects import deepcopy_obj, new_uid, obj_key
+
+ADDED, MODIFIED, DELETED = "ADDED", "MODIFIED", "DELETED"
+
+
+class ConflictError(Exception):
+    """Optimistic-concurrency failure (stale resourceVersion)."""
+
+
+class AlreadyExistsError(Exception):
+    pass
+
+
+class NotFoundError(Exception):
+    pass
+
+
+@dataclass
+class WatchEvent:
+    type: str              # ADDED | MODIFIED | DELETED
+    object: Any
+    resource_version: int
+
+
+class _Watch:
+    """A single watch stream: bounded event buffer + close signal."""
+
+    def __init__(self, kind: str, namespace: Optional[str], maxlen: int = 100_000):
+        self.kind = kind
+        self.namespace = namespace
+        self._events: List[WatchEvent] = []
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._closed = False
+        self._maxlen = maxlen
+        self.overflowed = False
+
+    def _push(self, ev: WatchEvent) -> None:
+        with self._cv:
+            if self._closed:
+                return
+            if len(self._events) >= self._maxlen:
+                # etcd watch-channel overflow: client must relist.
+                self.overflowed = True
+                self._closed = True
+            else:
+                self._events.append(ev)
+            self._cv.notify_all()
+
+    def next(self, timeout: Optional[float] = None) -> Optional[WatchEvent]:
+        with self._cv:
+            if not self._events and not self._closed:
+                self._cv.wait(timeout)
+            if self._events:
+                return self._events.pop(0)
+            return None  # closed or timed out
+
+    def close(self) -> None:
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+
+    @property
+    def closed(self) -> bool:
+        return self._closed and not self._events
+
+
+class ObjectStore:
+    """Thread-safe versioned store for API objects."""
+
+    def __init__(self, name: str = "store"):
+        self.name = name
+        self._lock = threading.RLock()
+        self._objects: Dict[Tuple[str, str, str], Any] = {}
+        self._rv = 0
+        self._watches: List[_Watch] = []
+
+    # -- CRUD ---------------------------------------------------------------
+
+    def create(self, obj: Any) -> Any:
+        with self._lock:
+            key = obj_key(obj)
+            if key in self._objects:
+                raise AlreadyExistsError(f"{key} already exists")
+            stored = deepcopy_obj(obj)
+            self._rv += 1
+            stored.metadata.uid = stored.metadata.uid or new_uid()
+            stored.metadata.resource_version = self._rv
+            stored.metadata.creation_timestamp = (
+                stored.metadata.creation_timestamp or time.time())
+            self._objects[key] = stored
+            self._notify(WatchEvent(ADDED, deepcopy_obj(stored), self._rv))
+            return deepcopy_obj(stored)
+
+    def get(self, kind: str, namespace: str, name: str) -> Any:
+        with self._lock:
+            obj = self._objects.get((kind, namespace, name))
+            if obj is None:
+                raise NotFoundError(f"{kind} {namespace}/{name} not found")
+            return deepcopy_obj(obj)
+
+    def update(self, obj: Any, *, force: bool = False) -> Any:
+        """Replace an object; conflicts on stale resourceVersion unless force."""
+        with self._lock:
+            key = obj_key(obj)
+            cur = self._objects.get(key)
+            if cur is None:
+                raise NotFoundError(f"{key} not found")
+            if not force and obj.metadata.resource_version != cur.metadata.resource_version:
+                raise ConflictError(
+                    f"{key}: rv {obj.metadata.resource_version} != {cur.metadata.resource_version}")
+            stored = deepcopy_obj(obj)
+            self._rv += 1
+            stored.metadata.uid = cur.metadata.uid
+            stored.metadata.creation_timestamp = cur.metadata.creation_timestamp
+            stored.metadata.resource_version = self._rv
+            self._objects[key] = stored
+            self._notify(WatchEvent(MODIFIED, deepcopy_obj(stored), self._rv))
+            return deepcopy_obj(stored)
+
+    def update_status(self, kind: str, namespace: str, name: str,
+                      mutate: Callable[[Any], None]) -> Any:
+        """Read-modify-write with retry under the store lock (status subresource)."""
+        with self._lock:
+            cur = self._objects.get((kind, namespace, name))
+            if cur is None:
+                raise NotFoundError(f"{kind} {namespace}/{name} not found")
+            stored = deepcopy_obj(cur)
+            mutate(stored)
+            self._rv += 1
+            stored.metadata.resource_version = self._rv
+            self._objects[(kind, namespace, name)] = stored
+            self._notify(WatchEvent(MODIFIED, deepcopy_obj(stored), self._rv))
+            return deepcopy_obj(stored)
+
+    def delete(self, kind: str, namespace: str, name: str) -> Any:
+        with self._lock:
+            obj = self._objects.pop((kind, namespace, name), None)
+            if obj is None:
+                raise NotFoundError(f"{kind} {namespace}/{name} not found")
+            self._rv += 1
+            self._notify(WatchEvent(DELETED, deepcopy_obj(obj), self._rv))
+            return obj
+
+    def list(self, kind: str, namespace: Optional[str] = None) -> List[Any]:
+        with self._lock:
+            out = []
+            for (k, ns, _), obj in self._objects.items():
+                if k != kind:
+                    continue
+                if namespace is not None and ns != namespace:
+                    continue
+                out.append(deepcopy_obj(obj))
+            return out
+
+    def count(self, kind: Optional[str] = None) -> int:
+        with self._lock:
+            if kind is None:
+                return len(self._objects)
+            return sum(1 for (k, _, _) in self._objects if k == kind)
+
+    @property
+    def resource_version(self) -> int:
+        with self._lock:
+            return self._rv
+
+    # -- watch --------------------------------------------------------------
+
+    def watch(self, kind: str, namespace: Optional[str] = None) -> _Watch:
+        with self._lock:
+            w = _Watch(kind, namespace)
+            self._watches.append(w)
+            return w
+
+    def list_and_watch(self, kind: str, namespace: Optional[str] = None
+                       ) -> Tuple[List[Any], _Watch]:
+        """Atomic snapshot + watch from that version (reflector primitive)."""
+        with self._lock:
+            snapshot = self.list(kind, namespace)
+            w = self.watch(kind, namespace)
+            return snapshot, w
+
+    def _notify(self, ev: WatchEvent) -> None:
+        kind = type(ev.object).kind
+        ns = ev.object.metadata.namespace
+        dead = []
+        for w in self._watches:
+            if w.closed:
+                dead.append(w)
+                continue
+            if w.kind != kind:
+                continue
+            if w.namespace is not None and w.namespace != ns:
+                continue
+            w._push(ev)
+        for w in dead:
+            self._watches.remove(w)
+
+    def close(self) -> None:
+        with self._lock:
+            for w in self._watches:
+                w.close()
+            self._watches.clear()

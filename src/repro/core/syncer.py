@@ -1,0 +1,558 @@
+"""The centralized resource syncer (paper §III-C, Fig.5).
+
+One syncer instance serves many tenant control planes. Per tenant, per synced
+kind, a tenant-side informer feeds the shared **downward** fair work queue
+(per-tenant sub-queues + WRR dispatch); a super-side informer feeds the
+**upward** work queue. Per-resource reconcilers perform:
+
+- downward synchronization: tenant spec -> super cluster (namespace-prefixed);
+- upward synchronization: super status -> tenant control plane (vNode-mapped).
+
+State comparisons are made against informer caches, never the apiservers.
+A periodic scan remediates rare permanently-inconsistent states by re-sending
+objects to the worker queues (paper: "significantly reduces the complexity of
+recovering inconsistencies caused by various rare reasons").
+
+Defaults follow the paper: 20 downward workers, 100 upward workers, 60 s scan
+interval.
+"""
+from __future__ import annotations
+
+import hashlib
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from .apiserver import APIServer, TenantControlPlane
+from .fairqueue import FairWorkQueue
+from .informer import Informer
+from .objects import (SYNCED_KINDS_DOWNWARD, SYNCED_KINDS_UPWARD, Namespace,
+                      WorkUnit, deepcopy_obj, obj_kind)
+from .store import (ADDED, DELETED, MODIFIED, AlreadyExistsError,
+                    ConflictError, NotFoundError)
+from .vnode import VNodeManager
+from .workqueue import RateLimiter, WorkQueue
+
+DownItem = Tuple[str, str, str]        # (kind, tenant_ns, name) under a tenant
+UpItem = Tuple[str, str, str]          # (kind, super_ns, name)
+
+
+def ns_prefix(vc_name: str, vc_uid: str) -> str:
+    """Paper §III-B (2): prefix = VC object name + short hash of its UID."""
+    h = hashlib.sha256(vc_uid.encode()).hexdigest()[:6]
+    return f"{vc_name}-{h}"
+
+
+@dataclass
+class UnitTimeline:
+    """Per-WorkUnit phase timestamps for the Fig.8 breakdown."""
+    tenant_create: float = 0.0
+    dws_enqueue: float = 0.0
+    dws_dequeue: float = 0.0
+    dws_done: float = 0.0
+    super_ready: float = 0.0
+    uws_enqueue: float = 0.0
+    uws_dequeue: float = 0.0
+    uws_done: float = 0.0
+
+    def phases(self) -> Dict[str, float]:
+        return {
+            "DWS-Queue": max(0.0, self.dws_dequeue - self.dws_enqueue),
+            "DWS-Process": max(0.0, self.dws_done - self.dws_dequeue),
+            "Super-Sched": max(0.0, self.super_ready - self.dws_done),
+            "UWS-Queue": max(0.0, self.uws_dequeue - self.uws_enqueue),
+            "UWS-Process": max(0.0, self.uws_done - self.uws_dequeue),
+        }
+
+    @property
+    def complete(self) -> bool:
+        return self.uws_done > 0 and self.dws_enqueue > 0
+
+
+@dataclass
+class SyncerMetrics:
+    timelines: Dict[Tuple[str, str, str], UnitTimeline] = field(default_factory=dict)
+    downward_syncs: int = 0
+    upward_syncs: int = 0
+    scan_fixes: int = 0
+    scan_runs: int = 0
+    scan_duration_sum: float = 0.0
+    _lock: threading.Lock = field(default_factory=threading.Lock)
+
+    def timeline(self, tenant: str, ns: str, name: str) -> UnitTimeline:
+        key = (tenant, ns, name)
+        with self._lock:
+            tl = self.timelines.get(key)
+            if tl is None:
+                tl = self.timelines[key] = UnitTimeline()
+            return tl
+
+
+class TenantRegistration:
+    """Everything the syncer holds per tenant."""
+
+    def __init__(self, plane: TenantControlPlane, prefix: str):
+        self.plane = plane
+        self.prefix = prefix
+        self.informers: Dict[str, Informer] = {}
+
+
+class Syncer:
+    def __init__(self, super_api: APIServer, *,
+                 downward_workers: int = 20,
+                 upward_workers: int = 100,
+                 fair_queuing: bool = True,
+                 scan_interval: float = 60.0,
+                 batch_upward: bool = False):
+        self.super_api = super_api
+        self.downward_workers = downward_workers
+        self.upward_workers = upward_workers
+        self.scan_interval = scan_interval
+        self.batch_upward = batch_upward
+        self.down_queue = FairWorkQueue("downward", fair=fair_queuing)
+        self.up_queue = WorkQueue("upward")
+        self.limiter = RateLimiter()
+        self.metrics = SyncerMetrics()
+        self.vnodes = VNodeManager()
+        self.tenants: Dict[str, TenantRegistration] = {}
+        self._tenants_lock = threading.Lock()
+        self._super_informers: Dict[str, Informer] = {}
+        self._threads: List[threading.Thread] = []
+        self._stop = threading.Event()
+        self._started = False
+        # reverse map: super_ns -> (tenant, tenant_ns); rebuilt from prefixes
+        self._ns_map: Dict[str, Tuple[str, str]] = {}
+        self._ns_lock = threading.Lock()
+
+    # ------------------------------------------------------------------ setup
+
+    def register_tenant(self, plane: TenantControlPlane, vc_uid: str = "") -> str:
+        prefix = ns_prefix(plane.name, vc_uid or plane.name)
+        reg = TenantRegistration(plane, prefix)
+        with self._tenants_lock:
+            self.tenants[plane.name] = reg
+        self.down_queue.register_tenant(plane.name, plane.weight)
+        for kind in SYNCED_KINDS_DOWNWARD:
+            inf = Informer(plane.api, kind, name=f"{plane.name}/{kind}")
+            inf.add_handler(self._tenant_handler(plane.name, kind))
+            reg.informers[kind] = inf
+            if self._started:
+                inf.start()
+                inf.wait_for_cache_sync()
+        return prefix
+
+    def unregister_tenant(self, tenant: str) -> None:
+        with self._tenants_lock:
+            reg = self.tenants.pop(tenant, None)
+        if reg is None:
+            return
+        for inf in reg.informers.values():
+            inf.stop()
+        self.down_queue.unregister_tenant(tenant)
+        # remove the tenant's synced objects from the super cluster
+        # (match by the tenant's namespace prefix — the registration is
+        # already popped, so the reverse map may not resolve anymore)
+        prefix = reg.prefix + "-"
+        for kind in reversed(SYNCED_KINDS_DOWNWARD):
+            for obj in self.super_api.list(kind):
+                ns = (obj.metadata.name if kind == "Namespace"
+                      else obj.metadata.namespace)
+                if ns.startswith(prefix):
+                    try:
+                        self.super_api.delete(kind, obj.metadata.namespace,
+                                              obj.metadata.name)
+                    except NotFoundError:
+                        pass
+
+    def start(self) -> None:
+        self._started = True
+        for kind in set(SYNCED_KINDS_UPWARD) | {"Node"}:
+            inf = Informer(self.super_api, kind, name=f"super/{kind}")
+            if kind == "Node":
+                inf.add_handler(self._node_handler)
+            else:
+                inf.add_handler(self._super_handler(kind))
+            self._super_informers[kind] = inf
+            inf.start()
+        with self._tenants_lock:
+            regs = list(self.tenants.values())
+        for reg in regs:
+            for inf in reg.informers.values():
+                inf.start()
+        for inf in self._super_informers.values():
+            inf.wait_for_cache_sync()
+        for reg in regs:
+            for inf in reg.informers.values():
+                inf.wait_for_cache_sync()
+        for i in range(self.downward_workers):
+            t = threading.Thread(target=self._down_worker, name=f"dws-{i}", daemon=True)
+            t.start()
+            self._threads.append(t)
+        for i in range(self.upward_workers):
+            t = threading.Thread(target=self._up_worker, name=f"uws-{i}", daemon=True)
+            t.start()
+            self._threads.append(t)
+        if self.scan_interval > 0:
+            t = threading.Thread(target=self._scan_loop, name="scan", daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def stop(self) -> None:
+        self._stop.set()
+        self.down_queue.shutdown()
+        self.up_queue.shutdown()
+        for inf in self._super_informers.values():
+            inf.stop()
+        with self._tenants_lock:
+            regs = list(self.tenants.values())
+        for reg in regs:
+            for inf in reg.informers.values():
+                inf.stop()
+        for t in self._threads:
+            t.join(timeout=2.0)
+
+    # ------------------------------------------------------------ event handlers
+
+    def _tenant_handler(self, tenant: str, kind: str):
+        def handler(ev_type: str, obj: Any) -> None:
+            ns, name = obj.metadata.namespace, obj.metadata.name
+            if kind == "WorkUnit" and ev_type == ADDED:
+                tl = self.metrics.timeline(tenant, ns, name)
+                if tl.dws_enqueue == 0.0:
+                    tl.tenant_create = obj.metadata.creation_timestamp
+                    tl.dws_enqueue = time.time()
+            self.down_queue.add(tenant, (kind, ns, name))
+        return handler
+
+    def _super_handler(self, kind: str):
+        def handler(ev_type: str, obj: Any) -> None:
+            self.up_queue.add((kind, obj.metadata.namespace, obj.metadata.name))
+            if kind == "WorkUnit":
+                t = self._resolve_super_ns(obj.metadata.namespace)
+                if t is not None and t[0]:
+                    tl = self.metrics.timeline(t[0], t[1], obj.metadata.name)
+                    if tl.uws_enqueue == 0.0:
+                        tl.uws_enqueue = time.time()
+                    if (tl.super_ready == 0.0 and obj.kind == "WorkUnit"
+                            and obj.status.phase == "Ready"):
+                        tl.super_ready = time.time()
+                        tl.uws_enqueue = tl.super_ready
+        return handler
+
+    def _node_handler(self, ev_type: str, node: Any) -> None:
+        if ev_type in (ADDED, MODIFIED):
+            with self._tenants_lock:
+                tenants = {t: r.plane for t, r in self.tenants.items()}
+            self.vnodes.broadcast_heartbeat(tenants, node)
+
+    # ---------------------------------------------------------------- workers
+
+    def _down_worker(self) -> None:
+        while not self._stop.is_set():
+            got = self.down_queue.get(timeout=0.2)
+            if got is None:
+                continue
+            tenant, (kind, ns, name) = got
+            if kind == "WorkUnit":
+                tl = self.metrics.timeline(tenant, ns, name)
+                if tl.dws_dequeue == 0.0:
+                    tl.dws_dequeue = time.time()
+            try:
+                self._reconcile_down(tenant, kind, ns, name)
+                self.limiter.forget((tenant, kind, ns, name))
+            except (ConflictError, AlreadyExistsError):
+                self.down_queue.add(tenant, (kind, ns, name))
+            except Exception:
+                pass
+            finally:
+                if kind == "WorkUnit":
+                    tl = self.metrics.timeline(tenant, ns, name)
+                    if tl.dws_done == 0.0:
+                        tl.dws_done = time.time()
+                self.down_queue.done(got)
+
+    def _up_worker(self) -> None:
+        while not self._stop.is_set():
+            item = self.up_queue.get(timeout=0.2)
+            if item is None:
+                continue
+            kind, super_ns, name = item
+            resolved = self._resolve_super_ns(super_ns)
+            if resolved is not None and kind == "WorkUnit":
+                tl = self.metrics.timeline(resolved[0], resolved[1], name)
+                if tl.uws_dequeue == 0.0 and tl.super_ready > 0.0:
+                    tl.uws_dequeue = time.time()
+            try:
+                self._reconcile_up(kind, super_ns, name)
+            except ConflictError:
+                self.up_queue.add(item)
+            except Exception:
+                pass
+            finally:
+                if resolved is not None and kind == "WorkUnit":
+                    tl = self.metrics.timeline(resolved[0], resolved[1], name)
+                    if tl.uws_done == 0.0 and tl.super_ready > 0.0:
+                        tl.uws_done = time.time()
+                self.up_queue.done(item)
+
+    # ------------------------------------------------------------- reconcilers
+
+    def _reconcile_down(self, tenant: str, kind: str, ns: str, name: str) -> None:
+        """Tenant spec is the source of truth -> project into the super cluster."""
+        with self._tenants_lock:
+            reg = self.tenants.get(tenant)
+        if reg is None:
+            return
+        tenant_obj = reg.informers[kind].cache.get(ns, name)
+        super_ns = self._translate_ns(reg, ns)
+        if kind == "Namespace":
+            super_ns_name = self._translate_ns(reg, name)
+            if tenant_obj is None:
+                self._delete_super("Namespace", "", super_ns_name)
+            else:
+                self._ensure_super_namespace(super_ns_name, tenant, name)
+            return
+
+        if tenant_obj is None:
+            # deleted in tenant -> delete downstream
+            try:
+                super_obj = self.super_api.get(kind, super_ns, name)
+            except NotFoundError:
+                return
+            self._delete_super(kind, super_ns, name)
+            if kind == "WorkUnit":
+                self.vnodes.unbind(reg.plane, ns, name)
+            self.metrics.downward_syncs += 1
+            return
+
+        self._ensure_super_namespace(super_ns, tenant, ns)
+        projected = self._project_down(tenant_obj, tenant, ns, super_ns)
+        try:
+            existing = self.super_api.get(kind, super_ns, name)
+        except NotFoundError:
+            try:
+                self.super_api.create(projected)
+                self.metrics.downward_syncs += 1
+            except AlreadyExistsError:
+                pass
+            return
+        if not _spec_equal(projected, existing):
+            projected.metadata.uid = existing.metadata.uid
+            projected.metadata.resource_version = existing.metadata.resource_version
+            if hasattr(existing, "status"):
+                projected.status = existing.status  # status is super-owned
+            self.super_api.update(projected)
+            self.metrics.downward_syncs += 1
+
+    def _reconcile_up(self, kind: str, super_ns: str, name: str) -> None:
+        """Super status is the source of truth -> project back into the tenant."""
+        resolved = self._resolve_super_ns(super_ns)
+        if resolved is None:
+            return
+        tenant, tenant_ns = resolved
+        with self._tenants_lock:
+            reg = self.tenants.get(tenant)
+        if reg is None:
+            return
+        super_obj = self._super_informers[kind].cache.get(super_ns, name)
+        if super_obj is None:
+            return  # deletion downward is handled by the downward reconciler
+        if kind == "WorkUnit":
+            self._sync_unit_status_up(reg, tenant_ns, name, super_obj)
+        elif kind == "Service":
+            self._sync_service_up(reg, tenant_ns, name, super_obj)
+        self.metrics.upward_syncs += 1
+
+    def _sync_unit_status_up(self, reg: TenantRegistration, tenant_ns: str,
+                             name: str, super_obj: WorkUnit) -> None:
+        vnode_name = ""
+        if super_obj.status.node:
+            node = self._super_informers.get("Node")
+            pnode = None
+            if node is not None:
+                pnode = node.cache.get("", super_obj.status.node)
+            if pnode is None:
+                try:
+                    pnode = self.super_api.get("Node", "", super_obj.status.node)
+                except NotFoundError:
+                    pnode = None
+            if pnode is not None:
+                vnode_name = self.vnodes.bind(reg.plane, pnode, tenant_ns, name)
+        status = deepcopy_obj(super_obj.status)
+        if vnode_name:
+            status.node = vnode_name
+
+        def mutate(u: WorkUnit) -> None:
+            u.status = status
+
+        cached = reg.informers["WorkUnit"].cache.get(tenant_ns, name)
+        if cached is not None and _status_equal(cached.status, status):
+            return
+        try:
+            reg.plane.api.update_status("WorkUnit", tenant_ns, name, mutate)
+        except NotFoundError:
+            pass  # tenant deleted it mid-flight; scan/downward will clean up
+
+    def _sync_service_up(self, reg: TenantRegistration, tenant_ns: str,
+                         name: str, super_obj: Any) -> None:
+        eps = list(super_obj.endpoints)
+        vip = super_obj.virtual_ip
+
+        def mutate(s: Any) -> None:
+            s.endpoints = eps
+            s.virtual_ip = vip
+
+        cached = reg.informers["Service"].cache.get(tenant_ns, name)
+        if cached is not None and cached.endpoints == eps and cached.virtual_ip == vip:
+            return
+        try:
+            reg.plane.api.update_status("Service", tenant_ns, name, mutate)
+        except NotFoundError:
+            pass
+
+    # ------------------------------------------------------------ periodic scan
+
+    def _scan_loop(self) -> None:
+        while not self._stop.wait(self.scan_interval):
+            self.scan_once()
+
+    def scan_once(self) -> int:
+        """Re-enqueue every object whose two-side states mismatch.
+
+        Paper §III-C: "the syncer will periodically scan the synchronized
+        objects and remediate any state mismatch by resending the object to
+        the worker queue again."
+        """
+        t0 = time.monotonic()
+        fixes = 0
+        with self._tenants_lock:
+            regs = list(self.tenants.items())
+        for tenant, reg in regs:
+            for kind in SYNCED_KINDS_DOWNWARD:
+                if kind == "Namespace":
+                    continue
+                tcache = reg.informers[kind].cache
+                scache = self._super_informers.get(kind)
+                seen_super = set()
+                for tobj in tcache.list():
+                    ns, name = tobj.metadata.namespace, tobj.metadata.name
+                    super_ns = self._translate_ns(reg, ns)
+                    try:
+                        sobj = self.super_api.get(kind, super_ns, name)
+                    except NotFoundError:
+                        sobj = None
+                    if sobj is None or not _spec_equal(
+                            self._project_down(tobj, tenant, ns, super_ns), sobj):
+                        self.down_queue.add(tenant, (kind, ns, name))
+                        fixes += 1
+                    elif (kind in SYNCED_KINDS_UPWARD and hasattr(tobj, "status")
+                          and not _status_equal(tobj.status, sobj.status,
+                                                ignore_node=True)):
+                        self.up_queue.add((kind, super_ns, name))
+                        fixes += 1
+                    seen_super.add((super_ns, name))
+                # orphans in super (tenant object gone but super copy remains)
+                for sobj in self.super_api.list(kind):
+                    sns = sobj.metadata.namespace
+                    resolved = self._resolve_super_ns(sns)
+                    if resolved is None or resolved[0] != tenant:
+                        continue
+                    if (sns, sobj.metadata.name) not in seen_super:
+                        self.down_queue.add(
+                            tenant, (kind, resolved[1], sobj.metadata.name))
+                        fixes += 1
+        self.metrics.scan_runs += 1
+        self.metrics.scan_fixes += fixes
+        self.metrics.scan_duration_sum += time.monotonic() - t0
+        return fixes
+
+    # ----------------------------------------------------------------- helpers
+
+    def _translate_ns(self, reg: TenantRegistration, tenant_ns: str) -> str:
+        super_ns = f"{reg.prefix}-{tenant_ns}"
+        with self._ns_lock:
+            self._ns_map[super_ns] = (reg.plane.name, tenant_ns)
+        return super_ns
+
+    def _resolve_super_ns(self, super_ns: str) -> Optional[Tuple[str, str]]:
+        with self._ns_lock:
+            hit = self._ns_map.get(super_ns)
+        if hit is not None:
+            return hit
+        with self._tenants_lock:
+            regs = list(self.tenants.values())
+        for reg in regs:
+            p = reg.prefix + "-"
+            if super_ns.startswith(p):
+                out = (reg.plane.name, super_ns[len(p):])
+                with self._ns_lock:
+                    self._ns_map[super_ns] = out
+                return out
+        return None
+
+    def _ensure_super_namespace(self, super_ns: str, tenant: str,
+                                tenant_ns: str) -> None:
+        try:
+            self.super_api.get("Namespace", "", super_ns)
+        except NotFoundError:
+            nsobj = Namespace()
+            nsobj.metadata.name = super_ns
+            nsobj.metadata.annotations["vc/tenant"] = tenant
+            nsobj.metadata.annotations["vc/namespace"] = tenant_ns
+            try:
+                self.super_api.create(nsobj)
+            except AlreadyExistsError:
+                pass
+
+    def _project_down(self, tenant_obj: Any, tenant: str, tenant_ns: str,
+                      super_ns: str) -> Any:
+        proj = deepcopy_obj(tenant_obj)
+        proj.metadata.namespace = super_ns
+        proj.metadata.uid = ""
+        proj.metadata.resource_version = 0
+        proj.metadata.annotations["vc/tenant"] = tenant
+        proj.metadata.annotations["vc/namespace"] = tenant_ns
+        if hasattr(proj, "status"):
+            proj.status = type(proj.status)()
+        return proj
+
+    def _delete_super(self, kind: str, ns: str, name: str) -> None:
+        try:
+            self.super_api.delete(kind, ns, name)
+        except NotFoundError:
+            pass
+
+    # -------------------------------------------------------------- accounting
+
+    def memory_estimate(self) -> int:
+        total = 0
+        with self._tenants_lock:
+            regs = list(self.tenants.values())
+        for reg in regs:
+            for inf in reg.informers.values():
+                total += inf.cache.nbytes_estimate()
+        for inf in self._super_informers.values():
+            total += inf.cache.nbytes_estimate()
+        return total
+
+
+def _spec_equal(a: Any, b: Any) -> bool:
+    if obj_kind(a) != obj_kind(b):
+        return False
+    if hasattr(a, "spec"):
+        return a.spec == b.spec
+    if hasattr(a, "data"):
+        return a.data == b.data
+    if obj_kind(a) == "Service":
+        return a.selector == b.selector and a.ports == b.ports
+    return True
+
+
+def _status_equal(a: Any, b: Any, ignore_node: bool = False) -> bool:
+    if ignore_node:
+        a, b = deepcopy_obj(a), deepcopy_obj(b)
+        a.node = b.node = ""
+    return (a.phase == b.phase and a.node == b.node
+            and {c.type: c.status for c in a.conditions}
+            == {c.type: c.status for c in b.conditions})

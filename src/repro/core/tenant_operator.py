@@ -1,0 +1,111 @@
+"""Tenant operator (paper Fig.4 (1)).
+
+Watches VirtualClusterCR (VC) objects in the super cluster and reconciles
+tenant-control-plane lifecycle: provision a dedicated apiserver+store per
+tenant ("local mode"), store its kubeconfig as a Secret in the super cluster
+so the syncer can reach every tenant plane, register the tenant with the
+syncer and the vn-agents, and tear everything down on delete.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional
+
+from .agent import VnAgent
+from .apiserver import APIServer, TenantControlPlane
+from .objects import Secret, VirtualClusterCR
+from .store import ADDED, DELETED, MODIFIED, AlreadyExistsError, NotFoundError
+from .syncer import Syncer
+from .informer import Informer
+from .workqueue import DelayingQueue
+
+
+OPERATOR_NS = "vc-system"
+
+
+class TenantOperator:
+    def __init__(self, super_api: APIServer, syncer: Syncer,
+                 vn_agents: Optional[List[VnAgent]] = None):
+        self.super_api = super_api
+        self.syncer = syncer
+        self.vn_agents = vn_agents or []
+        self.queue = DelayingQueue("tenant-operator")
+        self.informer = Informer(super_api, "VirtualClusterCR", name="operator/vc")
+        self.informer.add_handler(self._on_vc)
+        self.planes: Dict[str, TenantControlPlane] = {}
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def start(self) -> None:
+        self.informer.start()
+        self.informer.wait_for_cache_sync()
+        self._thread = threading.Thread(target=self._loop, name="tenant-operator",
+                                        daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        self.queue.shutdown()
+        self.informer.stop()
+        if self._thread:
+            self._thread.join(timeout=5.0)
+
+    def _on_vc(self, ev_type: str, vc: VirtualClusterCR) -> None:
+        self.queue.add((ev_type == DELETED, vc.metadata.name))
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            item = self.queue.get(timeout=0.2)
+            if item is None:
+                continue
+            deleted, name = item
+            try:
+                if deleted:
+                    self._teardown(name)
+                else:
+                    self._reconcile(name)
+            except Exception:
+                self.queue.add_after(item, 0.05)
+            finally:
+                self.queue.done(item)
+
+    def _reconcile(self, name: str) -> None:
+        vc = self.informer.cache.get("", name)
+        if vc is None:
+            self._teardown(name)
+            return
+        with self._lock:
+            if name in self.planes:
+                return
+            plane = TenantControlPlane(name, weight=vc.weight)
+            self.planes[name] = plane
+        # persist the kubeconfig in the super cluster (paper: "stores the
+        # kubeconfig ... so that the syncer controller can access all tenant
+        # control planes")
+        sec = Secret()
+        sec.metadata.name = f"kubeconfig-{name}"
+        sec.metadata.namespace = OPERATOR_NS
+        sec.data = {k: str(v) for k, v in plane.kubeconfig().items()}
+        try:
+            self.super_api.create(sec)
+        except AlreadyExistsError:
+            pass
+        prefix = self.syncer.register_tenant(plane, vc.metadata.uid)
+        for agent in self.vn_agents:
+            agent.register_tenant(plane.api.credential, prefix)
+        self.super_api.update_status(
+            "VirtualClusterCR", "", name,
+            lambda v: setattr(v, "phase", "Running"))
+
+    def _teardown(self, name: str) -> None:
+        with self._lock:
+            plane = self.planes.pop(name, None)
+        if plane is None:
+            return
+        self.syncer.unregister_tenant(name)
+        try:
+            self.super_api.delete("Secret", OPERATOR_NS, f"kubeconfig-{name}")
+        except NotFoundError:
+            pass
+        plane.close()

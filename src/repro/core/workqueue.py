@@ -1,0 +1,138 @@
+"""Deduplicating FIFO work queue with client-go semantics.
+
+Invariants (matching k8s.io/client-go/util/workqueue):
+- a key added while queued is deduplicated (paper: "the client-go worker queue
+  has the capability of deduplicating the incoming requests");
+- a key added while being processed is marked dirty and re-queued when its
+  processing finishes (never processed concurrently by two workers);
+- shutdown drains blocked getters.
+
+Also provides exponential-backoff retry bookkeeping (rate-limited requeue).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, Hashable, List, Optional, Tuple
+
+
+class WorkQueue:
+    def __init__(self, name: str = "queue"):
+        self.name = name
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._queue: List[Hashable] = []
+        self._dirty: set = set()
+        self._processing: set = set()
+        self._shutdown = False
+        # metrics
+        self.added = 0
+        self.deduped = 0
+        self._enqueue_time: Dict[Hashable, float] = {}
+        self.queue_latency_sum = 0.0
+        self.queue_latency_count = 0
+
+    def add(self, key: Hashable) -> None:
+        with self._cv:
+            if self._shutdown:
+                return
+            self.added += 1
+            if key in self._dirty:
+                self.deduped += 1
+                return
+            self._dirty.add(key)
+            if key in self._processing:
+                return  # will re-queue on done()
+            self._queue.append(key)
+            self._enqueue_time.setdefault(key, time.monotonic())
+            self._cv.notify()
+
+    def get(self, timeout: Optional[float] = None) -> Optional[Hashable]:
+        with self._cv:
+            deadline = None if timeout is None else time.monotonic() + timeout
+            while not self._queue and not self._shutdown:
+                remaining = None if deadline is None else deadline - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    return None
+                self._cv.wait(remaining)
+            if self._shutdown and not self._queue:
+                return None
+            key = self._queue.pop(0)
+            self._dirty.discard(key)
+            self._processing.add(key)
+            t0 = self._enqueue_time.pop(key, None)
+            if t0 is not None:
+                self.queue_latency_sum += time.monotonic() - t0
+                self.queue_latency_count += 1
+            return key
+
+    def done(self, key: Hashable) -> None:
+        with self._cv:
+            self._processing.discard(key)
+            if key in self._dirty and key not in self._queue:
+                self._queue.append(key)
+                self._enqueue_time.setdefault(key, time.monotonic())
+                self._cv.notify()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._queue)
+
+    def shutdown(self) -> None:
+        with self._cv:
+            self._shutdown = True
+            self._cv.notify_all()
+
+    @property
+    def is_shutdown(self) -> bool:
+        with self._lock:
+            return self._shutdown
+
+
+class RateLimiter:
+    """Per-key exponential backoff (client-go ItemExponentialFailureRateLimiter)."""
+
+    def __init__(self, base: float = 0.005, cap: float = 1.0):
+        self.base, self.cap = base, cap
+        self._fail: Dict[Hashable, int] = {}
+        self._lock = threading.Lock()
+
+    def when(self, key: Hashable) -> float:
+        with self._lock:
+            n = self._fail.get(key, 0)
+            self._fail[key] = n + 1
+            return min(self.cap, self.base * (2 ** n))
+
+    def forget(self, key: Hashable) -> None:
+        with self._lock:
+            self._fail.pop(key, None)
+
+    def retries(self, key: Hashable) -> int:
+        with self._lock:
+            return self._fail.get(key, 0)
+
+
+class DelayingQueue(WorkQueue):
+    """WorkQueue + add_after (used for rate-limited retries)."""
+
+    def __init__(self, name: str = "delaying"):
+        super().__init__(name)
+        self._timers: List[threading.Timer] = []
+        self._tlock = threading.Lock()
+
+    def add_after(self, key: Hashable, delay: float) -> None:
+        if delay <= 0:
+            self.add(key)
+            return
+        t = threading.Timer(delay, self.add, args=(key,))
+        t.daemon = True
+        with self._tlock:
+            self._timers = [x for x in self._timers if x.is_alive()]
+            self._timers.append(t)
+        t.start()
+
+    def shutdown(self) -> None:
+        with self._tlock:
+            for t in self._timers:
+                t.cancel()
+        super().shutdown()

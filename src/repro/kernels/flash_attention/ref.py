@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for flash attention (naive materialized softmax).
+
+Used as the correctness reference for both the Pallas kernel and the
+XLA-chunked implementation. Supports GQA, causal masking, sliding windows
+(gemma2 local layers) and logit soft-capping.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def mha_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+            causal: bool = True, window: int = 0, softcap: float = 0.0,
+            scale: Optional[float] = None,
+            q_offset: int = 0) -> jnp.ndarray:
+    """Naive attention.
+
+    q: [B, S, H, D]; k, v: [B, T, KV, D] with H % KV == 0.
+    ``q_offset``: global position of q[0] (for decode: T - S).
+    Returns [B, S, H, D] in q.dtype.
+    """
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else D ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, S, KV, G, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bsngd,btnd->bnsgt", qf, kf) * scale  # [B,KV,S,G,T]
+    if softcap > 0.0:
+        scores = jnp.tanh(scores / softcap) * softcap
+    qpos = jnp.arange(S) + q_offset
+    kpos = jnp.arange(T)
+    mask = jnp.ones((S, T), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None, :, None, :], scores, -1e30)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / (p.sum(axis=-1, keepdims=True) + 1e-30)
+    out = jnp.einsum("bnsgt,btnd->bsngd", p, vf)
+    return out.reshape(B, S, H, D).astype(q.dtype)

@@ -1,0 +1,24 @@
+"""Dispatching wrapper for flash-decode."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_decode(q, k_cache, v_cache, lengths, *, window: int = 0,
+                 softcap: float = 0.0, scale: Optional[float] = None,
+                 block_k: int = 512, impl: Optional[str] = None,
+                 interpret: bool = False) -> jnp.ndarray:
+    """q: [B,1,H,D]; caches [B,L,KV,D]; lengths [B] -> [B,1,H,D]."""
+    impl = impl or ("pallas" if jax.default_backend() == "tpu" else "pallas")
+    if impl == "ref":
+        from .ref import flash_decode_ref
+        return flash_decode_ref(q, k_cache, v_cache, lengths, window=window,
+                                softcap=softcap, scale=scale)
+    from .kernel import flash_decode_pallas
+    return flash_decode_pallas(
+        q, k_cache, v_cache, lengths, window=window, softcap=softcap,
+        scale=scale, block_k=block_k,
+        interpret=interpret or jax.default_backend() != "tpu")

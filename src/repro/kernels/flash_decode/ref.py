@@ -1,0 +1,19 @@
+"""Oracle for single-token decode attention (delegates to the naive mha)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..flash_attention.ref import mha_ref
+
+
+def flash_decode_ref(q, k_cache, v_cache, lengths, *, window: int = 0,
+                     softcap: float = 0.0, scale=None):
+    """q: [B,1,H,D]; caches [B,L,KV,D]; lengths [B]. Returns [B,1,H,D]."""
+    B = q.shape[0]
+    outs = []
+    for b in range(B):
+        t = int(lengths[b])
+        outs.append(mha_ref(q[b:b + 1], k_cache[b:b + 1, :t],
+                            v_cache[b:b + 1, :t], causal=True, window=window,
+                            softcap=softcap, scale=scale, q_offset=t - 1))
+    return jnp.concatenate(outs, axis=0)

@@ -1,0 +1,61 @@
+"""Ragged grouped GEMM (dropless-MoE expert matmul) as a Pallas TPU kernel.
+
+The megablocks insight adapted to the MXU: pad each expert's token group to
+a multiple of the row-block (the caller aligns the dispatch), precompute one
+expert id per row block, and let the kernel pick its expert's weight tile
+through the scalar-prefetch index map — every grid cell is then a dense
+[bm, D] x [D, bf] MXU matmul with zero divergence and no gather/scatter in
+the hot loop.
+
+Grid (num_row_blocks, num_col_blocks); block_expert (scalar-prefetched,
+SMEM) drives the W index map.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gg_kernel(block_expert_ref, x_ref, w_ref, o_ref):
+    x = x_ref[...]
+    w = w_ref[0]
+    o_ref[...] = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def grouped_gemm_pallas(x: jnp.ndarray, block_expert: jnp.ndarray,
+                        W: jnp.ndarray, *, block_m: int = 128,
+                        block_f: int = 512,
+                        interpret: bool = False) -> jnp.ndarray:
+    """x: [T, D] block-aligned sorted tokens; block_expert: [T // block_m]
+    expert id per row block; W: [E, D, F] -> [T, F]."""
+    T, D = x.shape
+    E, _, F = W.shape
+    assert T % block_m == 0, "caller must pad groups to block_m multiples"
+    bf = min(block_f, F)
+    nf = -(-F // bf)
+    Fp = nf * bf
+    Wp = jnp.pad(W, ((0, 0), (0, 0), (0, Fp - F))) if Fp != F else W
+    nm = T // block_m
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nm, nf),
+        in_specs=[
+            pl.BlockSpec((block_m, D), lambda i, j, be: (i, 0)),
+            pl.BlockSpec((1, D, bf), lambda i, j, be: (be[i], 0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, bf), lambda i, j, be: (i, j)),
+    )
+    out = pl.pallas_call(
+        _gg_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, Fp), x.dtype),
+        interpret=interpret,
+    )(block_expert.astype(jnp.int32), x, Wp)
+    return out[:, :F]

@@ -1,0 +1,25 @@
+"""Oracle for the ragged grouped GEMM (MoE expert matmul).
+
+x: [T, D] tokens sorted by expert; group_sizes: [E] (sum == T);
+W: [E, D, F]. out[t] = x[t] @ W[expert_of(t)].
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def grouped_gemm_ref(x, group_sizes, W):
+    T, D = x.shape
+    E, _, F = W.shape
+    sizes = np.asarray(group_sizes)
+    out = jnp.zeros((T, F), jnp.float32)
+    start = 0
+    for e in range(E):
+        n = int(sizes[e])
+        if n == 0:
+            continue
+        seg = x[start:start + n].astype(jnp.float32) @ W[e].astype(jnp.float32)
+        out = out.at[start:start + n].set(seg)
+        start += n
+    return out.astype(x.dtype)

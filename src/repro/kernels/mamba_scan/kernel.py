@@ -1,0 +1,102 @@
+"""Mamba selective-scan as a Pallas TPU kernel.
+
+Grid (B, num_channel_blocks, num_chunks): chunks are innermost/sequential so
+the [bd, N] fp32 state stays in VMEM scratch across the whole sequence.
+Channels (d_inner) are blocked at bd=512 — the per-chunk working set
+([C, bd, N] cumulants) is ~0.5 MiB, and (B, channel-block) grid cells are
+independent. dt/B/C tensors stream once; the chunk recurrence uses the
+clamped log-decay cumsum form (see ops.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import LOG_DECAY_CLAMP
+
+
+def _mamba_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, s0_ref,
+                  y_ref, sout_ref, state_ref, *, num_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = s0_ref[0]
+
+    x = x_ref[0].astype(jnp.float32)             # [C, bd]
+    dt = dt_ref[0].astype(jnp.float32)           # [C, bd]
+    A = a_ref[...].astype(jnp.float32)           # [bd, N]
+    Bc = b_ref[0].astype(jnp.float32)            # [C, N]
+    Cc = c_ref[0].astype(jnp.float32)            # [C, N]
+    Dd = d_ref[...].astype(jnp.float32)          # [bd]
+    h0 = state_ref[...]                          # [bd, N]
+
+    lda = dt[:, :, None] * A[None]               # [C, bd, N]
+    lda = jnp.where(dt[:, :, None] > 0,
+                    jnp.clip(lda, -LOG_DECAY_CLAMP, -1e-8), 0.0)
+    cs = jnp.cumsum(lda, axis=0)
+    db = dt[:, :, None] * Bc[:, None, :] * x[:, :, None]
+    contrib = db * jnp.exp(-cs)
+    cum = jnp.cumsum(contrib, axis=0)
+    h = jnp.exp(cs) * (h0[None] + cum)           # [C, bd, N]
+    y = jnp.sum(h * Cc[:, None, :], axis=2) + Dd[None, :] * x
+    state_ref[...] = h[-1]
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == num_chunks - 1)
+    def _emit():
+        sout_ref[0] = h[-1]
+
+
+def mamba_scan_pallas(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                      B: jnp.ndarray, C: jnp.ndarray, D: jnp.ndarray,
+                      state: Optional[jnp.ndarray] = None, *,
+                      chunk: int = 16, block_d: int = 512,
+                      interpret: bool = False
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x, dt: [Bt, S, DI]; A: [DI, N]; B, C: [Bt, S, N]; D: [DI]."""
+    Bt, S, DI = x.shape
+    N = A.shape[-1]
+    Cn = min(chunk, S)
+    nc = -(-S // Cn)
+    Sp = nc * Cn
+    bd = min(block_d, DI)
+    nd = -(-DI // bd)
+
+    def pad_seq(t):
+        return jnp.pad(t, ((0, 0), (0, Sp - S), (0, 0))) if Sp != S else t
+
+    xp, dtp, Bp, Cp = pad_seq(x), pad_seq(dt), pad_seq(B), pad_seq(C)
+    if state is None:
+        state = jnp.zeros((Bt, DI, N), jnp.float32)
+
+    kernel = functools.partial(_mamba_kernel, num_chunks=nc)
+    y, state_out = pl.pallas_call(
+        kernel,
+        grid=(Bt, nd, nc),
+        in_specs=[
+            pl.BlockSpec((1, Cn, bd), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, Cn, bd), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((bd, N), lambda b, d, c: (d, 0)),
+            pl.BlockSpec((1, Cn, N), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((1, Cn, N), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((bd,), lambda b, d, c: (d,)),
+            pl.BlockSpec((1, bd, N), lambda b, d, c: (b, d, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Cn, bd), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, bd, N), lambda b, d, c: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bt, Sp, DI), x.dtype),
+            jax.ShapeDtypeStruct((Bt, DI, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
+        interpret=interpret,
+    )(xp, dtp, A, Bp, Cp, D, state)
+    return y[:, :S], state_out

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the Mamba selective-SSM scan: exact per-step recurrence.
+
+h_t = da_t * h_{t-1} + db_t ;  y_t = (C_t . h_t) + D * x_t
+with da = exp(dt * A), db = dt * B_t * x_t (per channel/state).
+
+dt*A is clamped to [-LOG_DECAY_CLAMP, -1e-8] in BOTH ref and the chunked
+implementations (required for fp32 stability of the chunked form; applied
+identically here so the oracle matches bit-for-bit semantics).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+LOG_DECAY_CLAMP = 5.0
+
+
+def mamba_scan_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                   B: jnp.ndarray, C: jnp.ndarray, D: jnp.ndarray,
+                   state: Optional[jnp.ndarray] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x, dt: [Bt, S, DI]; A: [DI, N]; B, C: [Bt, S, N]; D: [DI].
+
+    Returns (y [Bt, S, DI], final state [Bt, DI, N]).
+    """
+    Bt, S, DI = x.shape
+    N = A.shape[-1]
+    xf, dtf, Bf, Cf = (t.astype(jnp.float32) for t in (x, dt, B, C))
+    Af, Df = A.astype(jnp.float32), D.astype(jnp.float32)
+    if state is None:
+        state = jnp.zeros((Bt, DI, N), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                   # [Bt,DI],[Bt,DI],[Bt,N],[Bt,N]
+        lda = jnp.clip(dtt[..., None] * Af[None], -LOG_DECAY_CLAMP, -1e-8)
+        da = jnp.exp(lda)                                  # [Bt, DI, N]
+        db = dtt[..., None] * bt[:, None, :] * xt[..., None]
+        h = da * h + db
+        y = jnp.einsum("bdn,bn->bd", h, ct) + Df * xt
+        return h, y
+
+    xs = (xf.transpose(1, 0, 2), dtf.transpose(1, 0, 2),
+          Bf.transpose(1, 0, 2), Cf.transpose(1, 0, 2))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2).astype(x.dtype), state

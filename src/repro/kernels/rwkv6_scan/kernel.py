@@ -1,0 +1,114 @@
+"""RWKV6 wkv chunked scan as a Pallas TPU kernel.
+
+Grid (B, H, num_chunks): the innermost chunk dimension is sequential, so the
+[D, D] fp32 wkv state lives in VMEM scratch for the whole row — zero HBM
+state traffic between chunks (the XLA fallback pays a state round-trip per
+group; see ops.py). Per chunk, all terms are [C, D]x[D, C']/[C, C] matmuls:
+with head_size 64 and C=16 the tiles are small but MXU-legal; heads are
+mapped to the grid so lanes stay busy across the (B, H) plane.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ops import LOG_DECAY_CLAMP
+
+
+def _rwkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref,
+                 o_ref, sout_ref, state_ref, *, chunk: int, num_chunks: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = s0_ref[0, 0]
+
+    r = r_ref[0, 0].astype(jnp.float32)          # [C, D]
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    lw = lw_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)             # [D]
+    s = state_ref[...]                           # [D, D]
+
+    cs = jnp.cumsum(lw, axis=0)                  # log A_t
+    a_prev = jnp.exp(cs - lw)                    # A_{t-1}
+    a_inv = jnp.exp(-cs)
+    a_end = jnp.exp(cs[-1:, :])                  # A_C  [1, D]
+    r_t = r * a_prev
+    k_t = k * a_inv
+    att = jax.lax.dot_general(r_t, k_t, (((1,), (1,)), ((), ())))  # [C, C]
+    C = chunk
+    mask = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)             # strict lower
+    att = att * mask
+    out = jax.lax.dot_general(att, v, (((1,), (0,)), ((), ())))
+    out = out + jax.lax.dot_general(r_t, s, (((1,), (0,)), ((), ())))
+    diag = jnp.sum(r * u[None, :] * k, axis=1, keepdims=True)      # [C, 1]
+    out = out + diag * v
+    k_end = k * jnp.exp(cs[-1:, :] - cs)
+    s_new = a_end.T * s + jax.lax.dot_general(
+        k_end, v, (((0,), (0,)), ((), ())))
+    state_ref[...] = s_new
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+    @pl.when(c == num_chunks - 1)
+    def _emit_state():
+        sout_ref[0, 0] = s_new
+
+
+def rwkv6_scan_pallas(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      w: jnp.ndarray, u: jnp.ndarray,
+                      state: Optional[jnp.ndarray] = None, *,
+                      chunk: int = 16,
+                      interpret: bool = False
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """r,k,v,w: [B, S, H, D]; u: [H, D]; state: [B, H, D, D] (fp32)."""
+    B, S, H, D = r.shape
+    C = min(chunk, S)
+    nc = -(-S // C)
+    Sp = nc * C
+
+    logw = jnp.log(jnp.clip(w.astype(jnp.float32), 1e-30, 1.0))
+    logw = jnp.clip(logw, -LOG_DECAY_CLAMP, -1e-6)
+
+    def to_kernel_layout(t):
+        t = jnp.moveaxis(t, 2, 1)                       # [B, H, S, D]
+        if Sp != S:
+            t = jnp.pad(t, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+        return t
+
+    rt, kt, vt = (to_kernel_layout(t) for t in (r, k, v))
+    lwt = to_kernel_layout(logw)
+    if state is None:
+        state = jnp.zeros((B, H, D, D), jnp.float32)
+
+    kernel = functools.partial(_rwkv_kernel, chunk=C, num_chunks=nc)
+    out, state_out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, C, D), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, C, D), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, C, D), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, C, D), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, D), lambda b, h, c: (h, 0)),
+            pl.BlockSpec((1, 1, D, D), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, C, D), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, D, D), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Sp, D), r.dtype),
+            jax.ShapeDtypeStruct((B, H, D, D), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
+        interpret=interpret,
+    )(rt, kt, vt, lwt, u, state)
+    out = jnp.moveaxis(out, 1, 2)[:, :S]
+    return out, state_out

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the RWKV6 (Finch) wkv scan: exact per-step recurrence.
+
+State S [B, H, dk, dv]; per step t:
+    out_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+with data-dependent per-channel decay w_t in (0, 1).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   w: jnp.ndarray, u: jnp.ndarray,
+                   state: Optional[jnp.ndarray] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """r,k,v,w: [B, S, H, D]; u: [H, D]; state: [B, H, D, D] (k-major).
+
+    Returns (out [B, S, H, D], final state [B, H, D, D]).
+    """
+    B, S, H, D = r.shape
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    if state is None:
+        state = jnp.zeros((B, H, D, D), jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                    # [B, H, D]
+        kv = kt[..., :, None] * vt[..., None, :]          # [B,H,Dk,Dv]
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s + uf[..., :, None] * kv)
+        s_new = wt[..., :, None] * s + kv
+        return s_new, out
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (rf, kf, vf, wf))
+    state, outs = jax.lax.scan(step, state, xs)
+    return outs.transpose(1, 0, 2, 3).astype(r.dtype), state

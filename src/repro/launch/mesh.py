@@ -1,0 +1,30 @@
+"""Production mesh definitions.
+
+Functions (never module-level constants) so importing this module never
+touches jax device state — the dry-run must set
+XLA_FLAGS=--xla_force_host_platform_device_count before first jax init.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e production mesh: one pod = 16x16 = 256 chips; two pods = 512.
+
+    Axes: "pod" extends data parallelism across pods (cross-pod DCI carries
+    only the gradient all-reduce / batch split); "data" is in-pod data
+    parallelism; "model" is the tensor/expert/sequence-parallel axis kept
+    inside a pod (ICI-local).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape: Tuple[int, ...] = (2, 4),
+                   axes: Tuple[str, ...] = ("data", "model")):
+    """Small mesh for CPU tests (requires >= prod(shape) host devices)."""
+    return jax.make_mesh(shape, axes)

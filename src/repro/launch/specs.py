@@ -1,0 +1,71 @@
+"""ShapeDtypeStruct stand-ins for every model input/state (no allocation).
+
+The dry-run lowers train/serve steps against these; nothing here ever
+touches a device buffer.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import init_cache, init_params
+from ..models.config import ModelConfig, ShapeConfig
+from ..training.optimizer import init_opt_state
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Batch inputs for one step of the given kind."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch: Dict[str, Any] = {
+            "tokens": SDS((B, S), jnp.int32),
+            "mask": SDS((B, S), jnp.float32),
+        }
+        if cfg.frontend == "vit_stub":
+            batch["patches"] = SDS((B, cfg.frontend_tokens, cfg.frontend_dim),
+                                   jnp.float32)
+        elif cfg.frontend == "speech_stub":
+            batch["frames"] = SDS((B, S, cfg.frontend_dim), jnp.float32)
+        return batch
+    if shape.kind == "prefill":
+        out = {"tokens": SDS((B, S), jnp.int32)}
+        if cfg.frontend == "vit_stub":
+            out["patches"] = SDS((B, cfg.frontend_tokens, cfg.frontend_dim),
+                                 jnp.float32)
+        elif cfg.frontend == "speech_stub":
+            out["frames"] = SDS((B, S, cfg.frontend_dim), jnp.float32)
+        return out
+    # decode: one new token against a seq_len cache
+    return {"tokens": SDS((B, 1), jnp.int32),
+            "lengths": SDS((B,), jnp.int32)}
+
+
+def param_specs(cfg: ModelConfig, dtype=None) -> Any:
+    """ShapeDtypeStructs of the parameter pytree (optionally re-dtyped —
+    serving uses bf16 params, training fp32 masters)."""
+    tree = jax.eval_shape(
+        functools.partial(init_params, cfg=cfg), jax.random.PRNGKey(0))
+    if dtype is not None:
+        tree = jax.tree.map(
+            lambda s: SDS(s.shape, dtype if jnp.issubdtype(s.dtype, jnp.floating)
+                          else s.dtype), tree)
+    return tree
+
+
+def opt_specs(params_tree: Any) -> Any:
+    return jax.eval_shape(init_opt_state, params_tree)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig,
+                dtype=jnp.bfloat16) -> Any:
+    B = shape.global_batch
+    L = shape.seq_len
+    enc_len = shape.seq_len if cfg.is_encdec else 0
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, B, max_len=L, enc_len=enc_len,
+                          dtype=dtype))

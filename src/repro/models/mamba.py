@@ -1,0 +1,97 @@
+"""Mamba block (selective SSM, used by jamba's 'm' layers).
+
+in_proj -> (x, z); causal depthwise conv + silu; data-dependent (dt, B, C);
+selective scan through kernels/mamba_scan; gate with silu(z); out_proj.
+Decode carries (conv_state [B, d_conv-1, DI], ssm_state [B, DI, N]).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.mamba_scan import ops as scan_ops
+from ..sharding.api import shard
+from .config import ModelConfig
+from .layers import dense_axes, init_dense, truncated_normal
+
+
+def init_mamba_block(key, cfg: ModelConfig) -> Dict[str, Any]:
+    d, di, n = cfg.d_model, cfg.mamba_d_inner, cfg.mamba_d_state
+    dc, dtr = cfg.mamba_d_conv, cfg.dt_rank
+    ks = jax.random.split(key, 5)
+    A = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None], (di, 1))
+    return {
+        "in_proj": init_dense(ks[0], d, 2 * di),
+        "conv_w": truncated_normal(ks[1], (dc, di), stddev=dc ** -0.5),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": init_dense(ks[2], di, dtr + 2 * n),
+        "dt_proj": init_dense(ks[3], dtr, di, bias=True),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": init_dense(ks[4], di, d, stddev=di ** -0.5),
+    }
+
+
+def mamba_block_axes(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "in_proj": dense_axes("embed", "inner"),
+        "conv_w": (None, "inner"),
+        "conv_b": ("inner",),
+        "x_proj": dense_axes("inner", None),
+        "dt_proj": dense_axes(None, "inner", bias=True),
+        "A_log": ("inner", None),
+        "D": ("inner",),
+        "out_proj": dense_axes("inner", "embed"),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 prev: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv. x [B,S,DI]; w [dc,DI]. Returns (y, new_state)."""
+    dc = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)            # [B, S+dc-1, DI]
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(dc))
+    new_state = xp[:, -(dc - 1):] if dc > 1 else prev
+    return y + b[None, None], new_state
+
+
+def mamba_apply(p: Dict[str, Any], x: jnp.ndarray, cfg: ModelConfig, *,
+                conv_state: Optional[jnp.ndarray] = None,
+                ssm_state: Optional[jnp.ndarray] = None,
+                impl: Optional[str] = None,
+                compute_dtype=jnp.bfloat16):
+    """x: [B, S, D]. Returns (out, new_conv_state, new_ssm_state)."""
+    B, S, D = x.shape
+    di, n, dtr = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.dt_rank
+    xz = (x.astype(compute_dtype) @ p["in_proj"]["w"].astype(compute_dtype))
+    xi, z = jnp.split(xz, 2, axis=-1)                  # [B,S,DI] each
+    xi = shard(xi, "batch", "act_seq", "inner")
+    z = shard(z, "batch", "act_seq", "inner")
+
+    xi_f = xi.astype(jnp.float32)
+    xc, conv_state = _causal_conv(xi_f, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+
+    dbc = (xc.astype(compute_dtype)
+           @ p["x_proj"]["w"].astype(compute_dtype)).astype(jnp.float32)
+    dt_raw, Bc, Cc = jnp.split(dbc, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw @ p["dt_proj"]["w"].astype(jnp.float32)
+                         + p["dt_proj"]["b"])
+    A = -jnp.exp(p["A_log"])
+
+    if S == 1 and ssm_state is not None:
+        y, ssm_state = scan_ops.mamba_decode_step(
+            xc[:, 0], dt[:, 0], A, Bc[:, 0], Cc[:, 0], p["D"], ssm_state)
+        y = y[:, None]
+    else:
+        y, ssm_state = scan_ops.mamba_scan(xc, dt, A, Bc, Cc, p["D"],
+                                           ssm_state, impl=impl)
+    y = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    out = y.astype(compute_dtype) @ p["out_proj"]["w"].astype(compute_dtype)
+    out = shard(out, "batch", "seq", "embed")   # -> reduce-scatter
+    return out, conv_state, ssm_state

@@ -1,0 +1,167 @@
+"""RWKV6 "Finch" block: data-dependent-decay time mixing + channel mixing.
+
+Faithful to arXiv:2404.05892: token-shift with data-dependent linear
+interpolation (ddlerp, low-rank), decay w = exp(-exp(.)) produced per
+token/channel by a LoRA, bonus u, per-head wkv state of size head_size x
+head_size, group-norm on the wkv output, and squared-ReLU channel mixing.
+
+The wkv recurrence runs through kernels/rwkv6_scan (chunked on TPU/XLA,
+exact per-step oracle in ref). Decode carries (shift_tm, shift_cm, wkv_state).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.rwkv6_scan import ops as wkv_ops
+from ..sharding.api import shard
+from .config import ModelConfig
+from .layers import dense_axes, group_norm, init_dense, truncated_normal
+
+LORA_MIX = 32
+LORA_DECAY = 64
+
+
+def init_rwkv_block(key, cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    H = d // hs
+    ks = jax.random.split(key, 12)
+    return {
+        "tm": {
+            "maa_x": jnp.zeros((d,), jnp.float32),
+            "maa": jnp.zeros((5, d), jnp.float32),          # w,k,v,r,g
+            "mix_w1": truncated_normal(ks[0], (d, 5 * LORA_MIX), stddev=1e-2),
+            "mix_w2": truncated_normal(ks[1], (5, LORA_MIX, d), stddev=1e-2),
+            "decay_w0": jnp.full((d,), -1.0, jnp.float32),
+            "decay_w1": truncated_normal(ks[2], (d, LORA_DECAY), stddev=1e-2),
+            "decay_w2": truncated_normal(ks[3], (LORA_DECAY, d), stddev=1e-2),
+            "bonus": truncated_normal(ks[4], (H, hs), stddev=0.1),
+            "wr": init_dense(ks[5], d, d),
+            "wk": init_dense(ks[6], d, d),
+            "wv": init_dense(ks[7], d, d),
+            "wg": init_dense(ks[8], d, d),
+            "wo": init_dense(ks[9], d, d),
+            "gn_scale": jnp.ones((d,), jnp.float32),
+            "gn_bias": jnp.zeros((d,), jnp.float32),
+        },
+        "cm": {
+            "maa_k": jnp.zeros((d,), jnp.float32),
+            "maa_r": jnp.zeros((d,), jnp.float32),
+            "wk": init_dense(ks[10], d, cfg.d_ff),
+            "wv": init_dense(jax.random.fold_in(ks[10], 1), cfg.d_ff, d,
+                             stddev=cfg.d_ff ** -0.5),
+            "wr": init_dense(ks[11], d, d),
+        },
+    }
+
+
+def rwkv_block_axes(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "tm": {
+            "maa_x": (None,), "maa": (None, None),
+            "mix_w1": (None, None), "mix_w2": (None, None, None),
+            "decay_w0": (None,), "decay_w1": (None, None),
+            "decay_w2": (None, None),
+            "bonus": ("heads", None),
+            "wr": dense_axes("embed", "heads_flat"),
+            "wk": dense_axes("embed", "heads_flat"),
+            "wv": dense_axes("embed", "heads_flat"),
+            "wg": dense_axes("embed", "heads_flat"),
+            "wo": dense_axes("heads_flat", "embed"),
+            "gn_scale": (None,), "gn_bias": (None,),
+        },
+        "cm": {
+            "maa_k": (None,), "maa_r": (None,),
+            "wk": dense_axes("embed", "mlp"),
+            "wv": dense_axes("mlp", "embed"),
+            "wr": dense_axes("embed", "embed2"),
+        },
+    }
+
+
+def _token_shift(x: jnp.ndarray,
+                 prev: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Shift right by one along seq; position 0 gets ``prev`` (or zeros)."""
+    if x.shape[1] == 1:
+        return prev if prev is not None else jnp.zeros_like(x)
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if prev is not None:
+        shifted = shifted.at[:, 0:1].set(prev)
+    return shifted
+
+
+def time_mix(p: Dict[str, Any], x: jnp.ndarray, cfg: ModelConfig, *,
+             shift_state: Optional[jnp.ndarray] = None,
+             wkv_state: Optional[jnp.ndarray] = None,
+             impl: Optional[str] = None,
+             compute_dtype=jnp.bfloat16):
+    """Returns (out, new_shift_state, new_wkv_state)."""
+    B, S, D = x.shape
+    hs = cfg.rwkv_head_size
+    H = D // hs
+    xf = x.astype(jnp.float32)
+    xs = _token_shift(xf, shift_state)
+    dx = xs - xf
+
+    # ddlerp: data-dependent interpolation coefficients via LoRA
+    xxx = xf + dx * p["tm"]["maa_x"]
+    lora = jnp.tanh(xxx @ p["tm"]["mix_w1"]).reshape(B, S, 5, LORA_MIX)
+    mix = jnp.einsum("bsfl,fld->bsfd", lora, p["tm"]["mix_w2"])   # [B,S,5,D]
+    maa = p["tm"]["maa"][None, None]                               # [1,1,5,D]
+    xw, xk, xv, xr, xg = [
+        (xf + dx * (maa[:, :, i] + mix[:, :, i])).astype(compute_dtype)
+        for i in range(5)]
+
+    wdt = p["tm"]
+    r = (xr @ wdt["wr"]["w"].astype(compute_dtype)).reshape(B, S, H, hs)
+    k = (xk @ wdt["wk"]["w"].astype(compute_dtype)).reshape(B, S, H, hs)
+    v = (xv @ wdt["wv"]["w"].astype(compute_dtype)).reshape(B, S, H, hs)
+    g = jax.nn.silu((xg @ wdt["wg"]["w"].astype(compute_dtype))
+                    .astype(jnp.float32))
+
+    # data-dependent decay, clamped into the numerically safe band
+    dlog = (wdt["decay_w0"]
+            + jnp.tanh(xw.astype(jnp.float32) @ wdt["decay_w1"])
+            @ wdt["decay_w2"])                                     # [B,S,D]
+    neg = -jnp.exp(dlog)
+    neg = jnp.clip(neg, -wkv_ops.LOG_DECAY_CLAMP, -1e-6)
+    w = jnp.exp(neg).reshape(B, S, H, hs)
+
+    r = shard(r, "batch", "attn_seq", "heads", None)
+    k = shard(k, "batch", "attn_seq", "heads", None)
+    v = shard(v, "batch", "attn_seq", "heads", None)
+    if S == 1 and wkv_state is not None:
+        out, wkv_state = wkv_ops.rwkv6_decode_step(
+            r[:, 0], k[:, 0], v[:, 0], w[:, 0], wdt["bonus"], wkv_state)
+        out = out[:, None]
+    else:
+        out, wkv_state = wkv_ops.rwkv6_scan(r, k, v, w, wdt["bonus"],
+                                            wkv_state, impl=impl)
+    out = out.reshape(B, S, D)
+    out = group_norm(out, wdt["gn_scale"], wdt["gn_bias"], num_groups=H)
+    out = (out.astype(jnp.float32) * g).astype(compute_dtype)
+    out = out @ wdt["wo"]["w"].astype(compute_dtype)
+    out = shard(out, "batch", "seq", "embed")   # -> reduce-scatter
+    return out, xf[:, -1:], wkv_state
+
+
+def channel_mix(p: Dict[str, Any], x: jnp.ndarray, cfg: ModelConfig, *,
+                shift_state: Optional[jnp.ndarray] = None,
+                compute_dtype=jnp.bfloat16):
+    """Squared-ReLU channel mix. Returns (out, new_shift_state)."""
+    xf = x.astype(jnp.float32)
+    xs = _token_shift(xf, shift_state)
+    dx = xs - xf
+    cm = p["cm"]
+    xk = (xf + dx * cm["maa_k"]).astype(compute_dtype)
+    xr = (xf + dx * cm["maa_r"]).astype(compute_dtype)
+    k = xk @ cm["wk"]["w"].astype(compute_dtype)
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(compute_dtype)
+    k = shard(k, "batch", "act_seq", "mlp")
+    v = k @ cm["wv"]["w"].astype(compute_dtype)
+    rgate = jax.nn.sigmoid((xr @ cm["wr"]["w"].astype(compute_dtype))
+                           .astype(jnp.float32))
+    return (rgate * v.astype(jnp.float32)).astype(compute_dtype), xf[:, -1:]

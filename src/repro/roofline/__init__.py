@@ -1,0 +1,4 @@
+from .analysis import (CollectiveStats, Roofline, model_flops_for,
+                       parse_collectives, PEAK_FLOPS, HBM_BW, ICI_BW)
+__all__ = ["CollectiveStats", "Roofline", "model_flops_for",
+           "parse_collectives", "PEAK_FLOPS", "HBM_BW", "ICI_BW"]

@@ -1,0 +1,430 @@
+"""Trip-count-aware cost analysis over optimized HLO text.
+
+``compiled.cost_analysis()`` counts every computation once — a scan-over-
+layers body (jax.lax.scan -> HLO while) is charged for ONE iteration, which
+under-counts FLOPs/bytes/collectives by the trip count (28-48x for our
+models). This module walks the HLO module text instead:
+
+- builds a per-computation symbol table (every op line carries its result
+  type; operand shapes resolve through it);
+- dot flops = 2 * prod(output dims) * prod(contracted dims), from
+  ``lhs_contracting_dims`` and the lhs operand's shape;
+- while ops multiply their body+cond cost by the trip count, extracted from
+  the largest s32 scalar constant in the condition computation (the jax
+  counter pattern: ``lt(i, N)``);
+- bytes = operand + result buffer sizes of top-level ops (post-fusion, i.e.
+  one HBM round-trip per fusion boundary — interior of a fusion is free,
+  interior *dot* flops still counted);
+- collectives are accumulated with ring-algorithm per-device send bytes and
+  the loop multiplier.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+    "s4": 1, "u4": 1,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+# operands end at the FIRST ')': operand lists are %refs/literals without
+# parens, while attrs (metadata op_name="jit(f)/...") may contain parens.
+_OP_LINE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+"
+                      r"([\w\-]+)\((.*?)\)(.*)$")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_CONST_S32 = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_BRACE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _type_bytes_elems(type_str: str) -> Tuple[float, float]:
+    """(bytes, elements) across all shapes in a (possibly tuple) type."""
+    total_b = total_e = 0.0
+    for m in _SHAPE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1.0
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total_b += n * _DTYPE_BYTES[dt]
+        total_e += n
+    return total_b, total_e
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d.strip()]
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    coll_bytes_by_op: Dict[str, float] = field(default_factory=dict)
+    coll_counts: Dict[str, float] = field(default_factory=dict)
+    bytes_by_region: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for k, v in other.coll_bytes_by_op.items():
+            self.coll_bytes_by_op[k] = self.coll_bytes_by_op.get(k, 0.) + v * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0.) + v * mult
+        for k, v in other.bytes_by_region.items():
+            self.bytes_by_region[k] = \
+                self.bytes_by_region.get(k, 0.) + v * mult
+
+    def add_bytes(self, nbytes: float, region: str) -> None:
+        self.bytes += nbytes
+        self.bytes_by_region[region] = \
+            self.bytes_by_region.get(region, 0.) + nbytes
+
+
+# kernel-interior regions: on TPU these run as Pallas kernels whose HBM
+# traffic is just the boundary tensors, not the XLA-path intermediates.
+REGION_FUNCTIONS = {
+    "attention": {"_mha_fwd_impl", "_mha_bwd_impl", "q_body", "kv_body",
+                  "_decode_partials", "flash_attention", "mha_ref",
+                  "mha", "_mha_xla", "decode_mha", "_decode_mha_seq_sharded",
+                  "flash_decode"},
+    "rwkv": {"_rwkv6_xla", "rwkv6_scan_ref", "rwkv6_scan",
+             "rwkv6_decode_step"},
+    "mamba": {"_mamba_xla", "mamba_scan_ref", "mamba_scan",
+              "mamba_decode_step"},
+}
+
+_STACK_ID = re.compile(r"stack_frame_id=(\d+)")
+_TABLE_ROW = re.compile(r"^(\d+)\s+(.*)$")
+_FLOC = re.compile(r"function_name_id=(\d+)")
+_SFRAME = re.compile(r"file_location_id=(\d+)\s+parent_frame_id=(\d+)")
+
+
+@dataclass
+class _Op:
+    name: str
+    result_type: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    line: str
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: Dict[str, List[_Op]] = {}
+        self.function_names: Dict[int, str] = {}
+        self.floc_func: Dict[int, int] = {}
+        self.frames: Dict[int, Tuple[int, int]] = {}
+        self._parse(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+        self._region_memo: Dict[int, str] = {}
+        self.entry = self._find_entry(hlo_text)
+
+    # ---------------------------------------------------------------- parse
+
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        ops: List[_Op] = []
+        table: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                table = None
+                continue
+            if line in ("FileNames", "FunctionNames", "FileLocations",
+                        "StackFrames"):
+                table = line
+                continue
+            if table is not None and line[0].isdigit():
+                m = _TABLE_ROW.match(line)
+                if m:
+                    idx, body = int(m.group(1)), m.group(2)
+                    if table == "FunctionNames":
+                        self.function_names[idx] = body.strip().strip('"')
+                    elif table == "FileLocations":
+                        fm = _FLOC.search(body)
+                        if fm:
+                            self.floc_func[idx] = int(fm.group(1))
+                    elif table == "StackFrames":
+                        sm = _SFRAME.search(body)
+                        if sm:
+                            self.frames[idx] = (int(sm.group(1)),
+                                                int(sm.group(2)))
+                continue
+            if not line.startswith(" ") and _COMP_HDR.match(line) \
+                    and line.endswith("{"):
+                cur = _COMP_HDR.match(line).group(1)
+                ops = []
+                self.computations[cur] = ops
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+            if cur is None:
+                continue
+            m = _OP_LINE.match(line)
+            if not m:
+                continue
+            name, rtype, opcode, operand_str, attrs = m.groups()
+            operands = _OPERAND.findall(operand_str)
+            ops.append(_Op(name, rtype.strip(), opcode, operands,
+                           attrs, line))
+
+    # ---------------------------------------------------------- region tags
+
+    def _region_of_frame(self, frame_id: int) -> str:
+        if frame_id in self._region_memo:
+            return self._region_memo[frame_id]
+        region = "other"
+        seen = set()
+        fid = frame_id
+        while fid and fid not in seen:
+            seen.add(fid)
+            floc, parent = self.frames.get(fid, (0, 0))
+            fname_id = self.floc_func.get(floc, 0)
+            fname = self.function_names.get(fname_id, "")
+            # names are qualified: "_mha_fwd_impl.<locals>.q_body"
+            parts = set(fname.split("."))
+            for reg, names in REGION_FUNCTIONS.items():
+                if parts & names:
+                    region = reg
+                    break
+            if region != "other":
+                break
+            fid = parent
+        self._region_memo[frame_id] = region
+        return region
+
+    def region_of(self, op: _Op) -> str:
+        m = _STACK_ID.search(op.line)
+        if not m:
+            return "other"
+        return self._region_of_frame(int(m.group(1)))
+
+    def _find_entry(self, text: str) -> str:
+        for line in text.splitlines():
+            if line.startswith("ENTRY"):
+                m = _COMP_HDR.match(line)
+                if m:
+                    return m.group(1)
+        # fallback: computation named like the module
+        return next(iter(self.computations))
+
+    # ---------------------------------------------------------------- costs
+
+    def cost(self) -> Cost:
+        return self._cost_of(self.entry, top_level=True)
+
+    def _symbols(self, comp: str) -> Dict[str, str]:
+        return {op.name: op.result_type for op in self.computations[comp]}
+
+    def _trip_count(self, cond_comp: str) -> float:
+        best = 1.0
+        for op in self.computations.get(cond_comp, []):
+            for m in _CONST_S32.finditer(op.line):
+                best = max(best, float(m.group(1)))
+        return best
+
+    def _dot_flops(self, op: _Op, syms: Dict[str, str]) -> float:
+        out_dims = _shape_dims(op.result_type)
+        out_n = math.prod(out_dims) if out_dims else 1
+        k = 1.0
+        mc = _CONTRACT.search(op.attrs)
+        if mc and op.operands:
+            lhs_type = syms.get(op.operands[0], "")
+            lhs_dims = _shape_dims(lhs_type)
+            for idx in mc.group(1).split(","):
+                if idx.strip() and int(idx) < len(lhs_dims):
+                    k *= lhs_dims[int(idx)]
+        return 2.0 * out_n * k
+
+    def _collective_cost(self, op: _Op, cost: Cost) -> None:
+        out_bytes, _ = _type_bytes_elems(op.result_type)
+        n = 0
+        m = _GROUPS_BRACE.search(op.line)
+        if m:
+            n = len([x for x in m.group(1).split(",") if x.strip()])
+        else:
+            m = _GROUPS_IOTA.search(op.line)
+            if m:
+                n = int(m.group(2))
+            elif "source_target_pairs" in op.line:
+                n = 2
+        if n <= 1:
+            return
+        opc = op.opcode.replace("-start", "").replace("-done", "")
+        if opc == "all-reduce":
+            send = 2.0 * out_bytes * (n - 1) / n
+        elif opc == "all-gather":
+            send = out_bytes * (n - 1) / n
+        elif opc == "reduce-scatter":
+            send = out_bytes * (n - 1)
+        elif opc == "all-to-all":
+            send = out_bytes * (n - 1) / n
+        else:
+            send = out_bytes
+        cost.collective_bytes += send
+        cost.coll_bytes_by_op[opc] = cost.coll_bytes_by_op.get(opc, 0.) + send
+        cost.coll_counts[opc] = cost.coll_counts.get(opc, 0.) + 1
+
+    _SKIP_BYTES = {"tuple", "get-tuple-element", "parameter", "bitcast",
+                   "constant", "after-all", "iota"}
+
+    _INPLACE_ROOTS = {"dynamic-update-slice", "scatter"}
+
+    def _fusion_boundary_bytes(self, op: _Op, syms: Dict[str, str]) -> float:
+        """Operand+output bytes of a fusion, recognizing in-place-update
+        fusions (root = DUS/scatter): the big aliased buffer costs only the
+        touched slice, not the full array per call.
+
+        Alias heuristic: a fusion operand >= 8x the output is almost always
+        a sliced/aliased view (scan-xs dynamic-slice of stacked params or
+        caches) — charge it at output size, not the full buffer, matching
+        the in-place semantics XLA's buffer assignment actually uses."""
+        out_b, _ = _type_bytes_elems(op.result_type)
+        # reduction fusions legitimately read operands >> output: exempt them
+        is_reduce = False
+        called0 = _CALLS.search(op.line)
+        if called0:
+            comp_ops0 = self.computations.get(called0.group(1), [])
+            if comp_ops0 and comp_ops0[-1].opcode in ("reduce",
+                                                      "reduce-window"):
+                is_reduce = True
+        in_b = 0.0
+        for o in op.operands:
+            ob = _type_bytes_elems(syms.get(o, ""))[0]
+            # slice-like: reads ~output-many bytes of the big buffer
+            in_b += out_b if (not is_reduce and out_b > 0
+                              and ob >= 8.0 * out_b) else ob
+        called = _CALLS.search(op.line)
+        if called:
+            comp_ops = self.computations.get(called.group(1), [])
+            if comp_ops:
+                root = comp_ops[-1]
+                if root.opcode in self._INPLACE_ROOTS:
+                    upd_operand = (root.operands[1]
+                                   if root.opcode == "dynamic-update-slice"
+                                   else (root.operands[-1]
+                                         if root.operands else ""))
+                    sub_syms = {o.name: o.result_type for o in comp_ops}
+                    upd_b = _type_bytes_elems(
+                        sub_syms.get(upd_operand, ""))[0]
+                    if upd_b == 0.0:
+                        # update comes straight from a fusion parameter
+                        upd_b = min((_type_bytes_elems(syms.get(o, ""))[0]
+                                     for o in op.operands
+                                     if _type_bytes_elems(
+                                         syms.get(o, ""))[0] not in
+                                     (0.0, out_b)), default=out_b)
+                    # subtract the aliased full buffer on both sides
+                    return max(0.0, in_b - out_b) + 2 * upd_b
+        return out_b + in_b
+
+    def _cost_of(self, comp: str, top_level: bool) -> Cost:
+        if comp in self._memo:
+            return self._memo[comp]
+        cost = Cost()
+        ops = self.computations.get(comp, [])
+        syms = self._symbols(comp)
+        for op in ops:
+            opc = op.opcode
+            base = opc.replace("-start", "").replace("-done", "")
+            if base in COLLECTIVES:
+                if not opc.endswith("-done"):
+                    self._collective_cost(op, cost)
+                    out_b, _ = _type_bytes_elems(op.result_type)
+                    cost.add_bytes(out_b, self.region_of(op))
+                continue
+            if opc == "while":
+                body = _BODY.search(op.line)
+                cond = _COND.search(op.line)
+                if body and cond:
+                    trips = self._trip_count(cond.group(1))
+                    cost.add(self._cost_of(body.group(1), False), trips)
+                    cost.add(self._cost_of(cond.group(1), False), trips)
+                continue
+            if opc in ("call", "fusion", "conditional", "async-start"):
+                for m in _CALLS.finditer(op.line):
+                    sub = self._cost_of(m.group(1), False)
+                    # interior flops count; interior bytes don't (fused)
+                    cost.flops += sub.flops
+                    cost.collective_bytes += sub.collective_bytes
+                    for k, v in sub.coll_bytes_by_op.items():
+                        cost.coll_bytes_by_op[k] = \
+                            cost.coll_bytes_by_op.get(k, 0.) + v
+                    for k, v in sub.coll_counts.items():
+                        cost.coll_counts[k] = cost.coll_counts.get(k, 0.) + v
+                # boundary bytes, in-place-update aware
+                cost.add_bytes(self._fusion_boundary_bytes(op, syms),
+                               self.region_of(op))
+                continue
+            if opc == "dynamic-update-slice":
+                # in-place: traffic = read update + write slice
+                upd_b = _type_bytes_elems(
+                    syms.get(op.operands[1], "") if len(op.operands) > 1
+                    else "")[0]
+                cost.add_bytes(2 * upd_b, self.region_of(op))
+                continue
+            if opc in ("dynamic-slice", "gather"):
+                # traffic = touched slice + output (not the whole operand —
+                # embedding lookups would otherwise charge the full table)
+                out_b, out_e = _type_bytes_elems(op.result_type)
+                cost.add_bytes(2 * out_b, self.region_of(op))
+                continue
+            if opc == "scatter":
+                upd_b = _type_bytes_elems(
+                    syms.get(op.operands[-1], "") if op.operands else "")[0]
+                out_b, _ = _type_bytes_elems(op.result_type)
+                cost.add_bytes(2 * upd_b + min(out_b, 2 * upd_b),
+                               self.region_of(op))
+                continue
+            if opc == "dot":
+                cost.flops += self._dot_flops(op, syms)
+                out_b, _ = _type_bytes_elems(op.result_type)
+                in_b = sum(_type_bytes_elems(syms.get(o, ""))[0]
+                           for o in op.operands)
+                cost.add_bytes(out_b + in_b, self.region_of(op))
+                continue
+            if opc == "convolution":
+                # depthwise/pointwise convs: approximate 2*out*window
+                out_dims = _shape_dims(op.result_type)
+                out_n = math.prod(out_dims) if out_dims else 1
+                cost.flops += 2.0 * out_n
+                out_b, _ = _type_bytes_elems(op.result_type)
+                cost.add_bytes(2 * out_b, self.region_of(op))
+                continue
+            if opc in self._SKIP_BYTES:
+                continue
+            out_b, out_e = _type_bytes_elems(op.result_type)
+            in_b = sum(_type_bytes_elems(syms.get(o, ""))[0]
+                       for o in op.operands)
+            cost.add_bytes(out_b + in_b, self.region_of(op))
+            # elementwise transcendentals etc: 1 flop / element
+            cost.flops += out_e
+        self._memo[comp] = cost
+        return cost
+
+
+def analyze(hlo_text: str) -> Cost:
+    return HloCostModel(hlo_text).cost()

@@ -1,0 +1,2 @@
+from .engine import ContinuousBatcher, GenerationEngine, Request, generate
+__all__ = ["GenerationEngine", "ContinuousBatcher", "Request", "generate"]

@@ -1,0 +1,151 @@
+"""Serving engine: batched generation with continuous batching.
+
+``GenerationEngine`` owns jitted prefill/decode steps over a fixed slot
+budget; ``ContinuousBatcher`` packs a request queue into those slots,
+admitting new requests whenever a slot frees (per-slot lengths ride the
+decode step — the attention kernels mask by length, so ragged batches are
+exact).
+"""
+from __future__ import annotations
+
+import queue
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import decode_step, init_cache, prefill
+from ..models.config import ModelConfig
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                  # [S] int32
+    max_new_tokens: int = 16
+    tokens: List[int] = field(default_factory=list)
+    done: bool = False
+    submitted_at: float = field(default_factory=time.monotonic)
+    finished_at: float = 0.0
+
+
+class GenerationEngine:
+    """Slot-based engine: per-request prefill into a slot, joint decode of
+    all active slots. ``lengths[i]`` = #cache entries used by slot i."""
+
+    def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 4,
+                 max_len: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.cache = init_cache(cfg, slots, max_len, enc_len=max_len)
+        self.lengths = np.zeros((slots,), np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * slots
+        self._decode = jax.jit(
+            lambda p, t, c, l: decode_step(p, cfg, t, c, l))
+        self.steps = 0
+
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def admit(self, req: Request) -> bool:
+        free = self.free_slots()
+        if not free:
+            return False
+        slot = free[0]
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        row_cache = init_cache(self.cfg, 1, self.max_len, enc_len=self.max_len)
+        logits, row_cache, row_len = prefill(self.params, self.cfg, prompt,
+                                             row_cache)
+        self.cache = jax.tree.map(
+            lambda c, rc: c.at[:, slot:slot + 1].set(rc.astype(c.dtype)),
+            self.cache, row_cache)
+        self.lengths[slot] = int(row_len[0])
+        req.tokens.append(int(jnp.argmax(logits[0, -1, :self.cfg.vocab])))
+        self.slot_req[slot] = req
+        return True
+
+    def step(self) -> List[Request]:
+        """One decode step over all active slots; returns finished requests."""
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return []
+        last = np.zeros((self.slots, 1), np.int32)
+        for i in active:
+            last[i, 0] = self.slot_req[i].tokens[-1]
+        # the new token lands at position lengths[i]; decode expects pos+1
+        call_lengths = jnp.asarray(self.lengths + 1, jnp.int32)
+        logits, self.cache, _ = self._decode(
+            self.params, jnp.asarray(last), self.cache, call_lengths)
+        self.steps += 1
+        toks = np.asarray(jnp.argmax(logits[:, 0, :self.cfg.vocab], axis=-1))
+        finished = []
+        for i in active:
+            req = self.slot_req[i]
+            self.lengths[i] += 1
+            req.tokens.append(int(toks[i]))
+            if (len(req.tokens) >= req.max_new_tokens
+                    or self.lengths[i] >= self.max_len - 1):
+                req.done = True
+                req.finished_at = time.monotonic()
+                finished.append(req)
+                self.slot_req[i] = None
+                self.lengths[i] = 0
+        return finished
+
+
+class ContinuousBatcher:
+    """Request queue in front of a GenerationEngine."""
+
+    def __init__(self, engine: GenerationEngine):
+        self.engine = engine
+        self._queue: "queue.Queue[Request]" = queue.Queue()
+        self._uid = 0
+        self.completed: Dict[int, Request] = {}
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
+        self._uid += 1
+        self._queue.put(Request(self._uid, np.asarray(prompt, np.int32),
+                                max_new_tokens))
+        return self._uid
+
+    def run_until_drained(self, max_steps: int = 10_000) -> None:
+        pending: List[Request] = []
+        for _ in range(max_steps):
+            while not self._queue.empty() and self.engine.free_slots():
+                try:
+                    pending.append(self._queue.get_nowait())
+                except queue.Empty:
+                    break
+            for req in list(pending):
+                if self.engine.admit(req):
+                    pending.remove(req)
+            for req in self.engine.step():
+                self.completed[req.uid] = req
+            if (self._queue.empty() and not pending
+                    and not any(r is not None for r in self.engine.slot_req)):
+                return
+        raise TimeoutError("batcher did not drain")
+
+
+def generate(cfg: ModelConfig, params: Any, prompts: np.ndarray,
+             max_new_tokens: int = 16, max_len: int = 256) -> np.ndarray:
+    """Simple batched generation (prefill + greedy decode loop)."""
+    B, S = prompts.shape
+    cache = init_cache(cfg, B, max_len, enc_len=max_len)
+    logits, cache, lengths = prefill(params, cfg,
+                                     jnp.asarray(prompts, jnp.int32), cache)
+    step = jax.jit(lambda p, t, c, l: decode_step(p, cfg, t, c, l))
+    toks = jnp.argmax(logits[:, -1, :cfg.vocab], -1)[:, None].astype(jnp.int32)
+    out = [toks]
+    lengths = lengths + 1          # first new token position + 1
+    for _ in range(max_new_tokens - 1):
+        logits, cache, lengths = step(params, toks, cache, lengths)
+        toks = jnp.argmax(logits[:, 0, :cfg.vocab], -1)[:, None].astype(
+            jnp.int32)
+        out.append(toks)
+    return np.asarray(jnp.concatenate(out, axis=1))

@@ -1,0 +1,6 @@
+from .api import ShardingRules, active_rules, shard, use_rules
+
+__all__ = ["ShardingRules", "shard", "use_rules", "active_rules"]
+
+# NOTE: repro.sharding.planner is imported directly (not re-exported here) to
+# avoid a circular import: models -> sharding.api, planner -> models.

@@ -1,0 +1,87 @@
+"""Logical-axis sharding API (MaxText-style logical axis rules).
+
+Models annotate tensors with *logical* axis names ("batch", "seq", "embed",
+"heads", "mlp", "vocab", "expert", ...). A ``ShardingRules`` mapping binds
+logical names to mesh axis names; ``shard(x, *names)`` applies a
+``with_sharding_constraint`` when rules are active (inside ``use_rules``)
+and is the identity otherwise, so the same model code runs un-sharded on CPU
+smoke tests and fully sharded in the dry-run/launcher.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisBinding = Union[None, str, Tuple[str, ...]]
+
+_current_rules: contextvars.ContextVar[Optional["ShardingRules"]] = \
+    contextvars.ContextVar("sharding_rules", default=None)
+
+
+class ShardingRules:
+    """Binds logical axis names to mesh axis names for one (arch, mesh)."""
+
+    def __init__(self, mesh: Mesh, bindings: Dict[str, AxisBinding]):
+        self.mesh = mesh
+        self.bindings = dict(bindings)
+
+    def bind(self, **kw: AxisBinding) -> "ShardingRules":
+        out = dict(self.bindings)
+        out.update(kw)
+        return ShardingRules(self.mesh, out)
+
+    def spec(self, names: Sequence[Optional[str]]) -> P:
+        """Translate logical axis names to a PartitionSpec."""
+        parts = []
+        used: set = set()
+        for n in names:
+            b = self.bindings.get(n) if n is not None else None
+            if b is None:
+                parts.append(None)
+                continue
+            axes = (b,) if isinstance(b, str) else tuple(b)
+            # an axis may appear at most once in a spec
+            axes = tuple(a for a in axes if a not in used)
+            used.update(axes)
+            if not axes:
+                parts.append(None)
+            elif len(axes) == 1:
+                parts.append(axes[0])
+            else:
+                parts.append(axes)
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    def sharding(self, names: Sequence[Optional[str]]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(names))
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    token = _current_rules.set(rules)
+    try:
+        yield rules
+    finally:
+        _current_rules.reset(token)
+
+
+def active_rules() -> Optional[ShardingRules]:
+    return _current_rules.get()
+
+
+def shard(x, *names: Optional[str]):
+    """Constrain ``x``'s sharding by logical axis names (no-op w/o rules)."""
+    rules = _current_rules.get()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, rules.sharding(names))
+
+
+def logical(*names: Optional[str]) -> Tuple[Optional[str], ...]:
+    """Readable constructor for logical axis annotations."""
+    return tuple(names)

@@ -1,0 +1,178 @@
+"""Sharding planner: picks a legal, efficient layout per (arch, shape, mesh).
+
+Strategies (auto-selected, overridable):
+
+- **tp_heads** — Megatron-style tensor parallelism: attention heads sharded
+  over "model" (KV heads sharded too when divisible, else replicated à la
+  GQA-with-tp>kv), FFN/vocab/experts sharded over "model", residual stream
+  sequence-sharded over "model" between blocks (Megatron sequence
+  parallelism: the partitioner materializes the all-gather/reduce-scatter
+  pair at block entry/exit).
+
+- **context** — fallback when n_heads % model != 0 (qwen2-7b: 28 heads,
+  qwen2.5-14b: 40 heads): attention is context-parallel — q sequence-sharded
+  over "model", K/V all-gathered; everything else as tp_heads.
+
+- **decode** — serving steps: S=1 kills seq sharding, so the KV cache is
+  sharded along its *sequence* dim over "model" and decode attention runs a
+  flash-decode partial-softmax combine (shard_map psum of (acc, m, l)) —
+  works for every head count and turns the HBM-bound cache read into 1/16th
+  per chip.
+
+Training defaults to FSDP over the "data" axis for params/optimizer ("embed"
+param axis additionally sharded over data), since fp32 AdamW state for the
+30-52B configs cannot fit model-sharded-only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import cache_axes as model_cache_axes
+from ..models import param_axes as model_param_axes
+from ..models.config import ModelConfig, ShapeConfig
+from ..training.optimizer import opt_state_axes
+from .api import ShardingRules
+
+
+@dataclass
+class Plan:
+    rules: ShardingRules
+    strategy: str
+    notes: List[str] = field(default_factory=list)
+
+    # -- sharding trees ------------------------------------------------------
+
+    def tree_sharding(self, axes_tree: Any) -> Any:
+        return jax.tree.map(
+            lambda names: NamedSharding(self.rules.mesh,
+                                        self.rules.spec(names)),
+            axes_tree, is_leaf=lambda t: isinstance(t, tuple))
+
+    def named(self, *names: Optional[str]) -> NamedSharding:
+        return self.rules.sharding(names)
+
+
+def _divides(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def _batch_axes(mesh: Mesh, global_batch: int) -> Tuple[str, ...]:
+    """Greedy maximal prefix of (pod, data) whose product divides the batch."""
+    axes: Tuple[str, ...] = ()
+    prod = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names and _divides(global_batch, prod * mesh.shape[a]):
+            axes += (a,)
+            prod *= mesh.shape[a]
+    return axes
+
+
+def plan_for(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
+             fsdp: Optional[bool] = None,
+             strategy: Optional[str] = None,
+             seq_shard: bool = True) -> Plan:
+    model = mesh.shape.get("model", 1)
+    data_axes = _batch_axes(mesh, shape.global_batch)
+    heads_div = _divides(cfg.n_heads, model)
+    kv_div = _divides(cfg.n_kv_heads, model)
+    mode = shape.kind                    # train | prefill | decode
+    if fsdp is None:
+        fsdp = mode == "train"
+    notes: List[str] = []
+
+    if strategy is None:
+        if mode == "decode":
+            strategy = "decode"
+        elif heads_div:
+            strategy = "tp_heads"
+        else:
+            strategy = "context"
+            notes.append(
+                f"{cfg.name}: {cfg.n_heads} heads % model={model} != 0 -> "
+                f"context-parallel attention (KV all-gathered)")
+
+    seq_ok = seq_shard and _divides(shape.seq_len, model) and mode != "decode"
+
+    bindings: Dict[str, Any] = {
+        # params
+        "vocab": "model",
+        "mlp": "model",
+        "expert": "model" if _divides(cfg.n_experts, model) or not cfg.is_moe
+        else None,
+        "inner": "model" if _divides(cfg.mamba_d_inner, model) else None,
+        "heads_flat": "model" if heads_div and strategy != "decode" else None,
+        "kv_flat": "model" if heads_div and kv_div and strategy != "decode"
+        else None,
+        "embed": ("data" if fsdp and "data" in mesh.axis_names else
+                  ("model" if mode == "decode" else None)),
+        "layers": None,
+        # activations
+        "batch": data_axes if data_axes else None,
+        "seq": "model" if seq_ok else None,
+        "act_seq": None,
+        "kv_seq": None,
+        "attn_seq": "model" if strategy == "context" and seq_ok else None,
+        "heads": "model" if heads_div and strategy == "tp_heads" else None,
+        "kv_heads": "model" if heads_div and kv_div and strategy == "tp_heads"
+        else None,
+        "cache_seq": "model" if mode in ("prefill", "decode") else None,
+        # moe dispatch token sharding
+        "moe_tokens": (data_axes + ("model",)) if seq_ok else
+        (data_axes if data_axes else None),
+    }
+    if cfg.is_moe and not _divides(cfg.n_experts, model):
+        notes.append(f"{cfg.name}: {cfg.n_experts} experts % model={model} "
+                     f"!= 0 -> experts replicated")
+    if not data_axes:
+        notes.append(f"global_batch={shape.global_batch} not divisible by "
+                     f"data axes -> batch replicated")
+    if mode == "decode":
+        notes.append("decode: KV-cache sequence-sharded over model + "
+                     "flash-decode partial-softmax combine; weights "
+                     "row-parallel over model (embed dim), nothing "
+                     "replicated")
+
+    rules = ShardingRules(mesh, bindings)
+    return Plan(rules=rules, strategy=strategy, notes=notes)
+
+
+# ------------------------------------------------------------- step shardings
+
+def train_shardings(plan: Plan, cfg: ModelConfig) -> Dict[str, Any]:
+    axes = model_param_axes(cfg)
+    p_shard = plan.tree_sharding(axes)
+    o_axes = opt_state_axes(axes)
+    o_shard = plan.tree_sharding(
+        jax.tree.map(lambda t: t, o_axes, is_leaf=lambda t: isinstance(t, tuple)))
+    batch = {
+        "tokens": plan.named("batch", "seq"),
+        "mask": plan.named("batch", "seq"),
+    }
+    if cfg.frontend == "vit_stub":
+        batch["patches"] = plan.named("batch", None, None)
+    elif cfg.frontend == "speech_stub":
+        batch["frames"] = plan.named("batch", "seq", None)
+    return {"params": p_shard, "opt": o_shard, "batch": batch,
+            "replicated": NamedSharding(plan.rules.mesh, P())}
+
+
+def serve_shardings(plan: Plan, cfg: ModelConfig) -> Dict[str, Any]:
+    axes = model_param_axes(cfg)
+    p_shard = plan.tree_sharding(axes)
+    c_axes = model_cache_axes(cfg)
+    c_shard = jax.tree.map(
+        lambda names: plan.named(*names[:]),
+        c_axes, is_leaf=lambda t: isinstance(t, tuple))
+    # stacked cache: leading dim is "layers"
+    return {"params": p_shard, "cache": c_shard,
+            "tokens": plan.named("batch", None),
+            "lengths": plan.named("batch"),
+            "frames": plan.named("batch", "seq", None),
+            "patches": plan.named("batch", None, None),
+            "replicated": NamedSharding(plan.rules.mesh, P())}

@@ -1,0 +1,85 @@
+"""Pallas kernels (interpret mode) vs oracles: rwkv6 scan, mamba scan,
+grouped GEMM — shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.grouped_gemm.ops import grouped_gemm
+from repro.kernels.grouped_gemm.ref import grouped_gemm_ref
+from repro.kernels.mamba_scan.kernel import mamba_scan_pallas
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+from repro.kernels.rwkv6_scan.kernel import rwkv6_scan_pallas
+from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+
+KEY = jax.random.PRNGKey(11)
+
+
+@pytest.mark.parametrize("shape", [(2, 48, 2, 16), (1, 33, 4, 8),
+                                   (2, 16, 1, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv6_pallas_vs_ref(shape, dtype):
+    B, S, H, D = shape
+    ks = jax.random.split(KEY, 5)
+    r = (jax.random.normal(ks[0], (B, S, H, D)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (B, S, H, D)) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (B, S, H, D)) * 0.5).astype(dtype)
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, S, H, D)) * 0.5))
+    u = jax.random.normal(ks[4], (H, D)) * 0.1
+    o1, s1 = rwkv6_scan_pallas(r, k, v, w.astype(dtype), u, None, chunk=16,
+                               interpret=True)
+    o2, s2 = rwkv6_scan_ref(r, k, v, w.astype(dtype), u, None)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               atol=5e-2 if dtype == jnp.bfloat16 else 1e-2,
+                               rtol=1e-2)
+
+
+@pytest.mark.parametrize("shape", [(2, 48, 16, 4), (1, 17, 8, 2)])
+def test_mamba_pallas_vs_ref(shape):
+    Bt, S, DI, N = shape
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (Bt, S, DI)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bt, S, DI)))
+    A = -jnp.exp(jax.random.normal(ks[2], (DI, N)) * 0.3)
+    B = jax.random.normal(ks[3], (Bt, S, N)) * 0.5
+    C = jax.random.normal(ks[4], (Bt, S, N)) * 0.5
+    D = jnp.ones((DI,))
+    y1, h1 = mamba_scan_pallas(x, dt, A, B, C, D, None, chunk=16,
+                               block_d=min(8, DI), interpret=True)
+    y2, h2 = mamba_scan_ref(x, dt, A, B, C, D, None)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               atol=1e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("sizes", [[40, 0, 26, 30], [16, 16, 16, 16],
+                                   [1, 2, 3, 90]])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_gemm_vs_ref(sizes, dtype):
+    E = len(sizes)
+    T = sum(sizes)
+    D, F = 32, 48
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (T, D)).astype(dtype)
+    W = (jax.random.normal(ks[1], (E, D, F)) * 0.1).astype(dtype)
+    o1 = grouped_gemm(x, jnp.array(sizes), W, block_m=16)
+    o2 = grouped_gemm_ref(x, jnp.array(sizes), W)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), atol=tol, rtol=tol)
+
+
+def test_grouped_gemm_xla_ragged_dot():
+    sizes = jnp.array([8, 24, 0, 32])
+    T, D, F = 64, 16, 24
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (T, D))
+    W = jax.random.normal(ks[1], (4, D, F)) * 0.1
+    o1 = grouped_gemm(x, sizes, W, impl="xla")
+    o2 = grouped_gemm_ref(x, sizes, W)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               atol=1e-5, rtol=1e-5)

@@ -1,0 +1,150 @@
+"""Per-architecture smoke tests (reduced configs): one forward/train step on
+CPU asserting output shapes + no NaNs, plus decode-vs-forward consistency
+and MoE routing properties."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ASSIGNED, REGISTRY, reduced
+from repro.models import (decode_step, forward, init_cache, init_params,
+                          logits_head, loss_fn, param_axes, prefill)
+from repro.models.moe import init_moe, moe_apply, moe_ref
+from repro.training import (OptimizerConfig, make_opt_state, make_train_step)
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+def make_batch(cfg, key=KEY):
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab)}
+    if cfg.frontend == "vit_stub":
+        batch["patches"] = jax.random.normal(
+            key, (B, cfg.frontend_tokens, cfg.frontend_dim))
+    elif cfg.frontend == "speech_stub":
+        batch["frames"] = jax.random.normal(key, (B, S, cfg.frontend_dim)) * .1
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_arch_smoke_forward_and_train_step(arch):
+    cfg = reduced(REGISTRY[arch])
+    params = init_params(KEY, cfg)
+    batch = make_batch(cfg)
+    # forward shapes
+    h, _ = forward(params, cfg, tokens=batch["tokens"],
+                   frames=batch.get("frames"), patches=batch.get("patches"))
+    assert h.shape == (B, S, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(h.astype(jnp.float32))))
+    logits = logits_head(params, cfg, h)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    # one real train step: loss finite, params updated, grads finite
+    step = make_train_step(cfg, OptimizerConfig(warmup_steps=1,
+                                                total_steps=10))
+    opt = make_opt_state(params)
+    new_params, new_opt, metrics = jax.jit(step)(params, opt, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert int(new_opt["step"]) == 1
+    # at least one parameter changed
+    changed = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params)))
+    assert changed
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_arch_decode_matches_forward(arch):
+    cfg = reduced(REGISTRY[arch])
+    if cfg.is_moe:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)  # no token drops
+    params = init_params(KEY, cfg)
+    batch = make_batch(cfg)
+    tokens = batch["tokens"]
+    kw = {k: v for k, v in batch.items() if k in ("frames", "patches")}
+    h, _ = forward(params, cfg, tokens=tokens, **kw)
+    full_logits = logits_head(params, cfg, h)
+    cache = init_cache(cfg, B, max_len=S + 2, enc_len=S)
+    _, cache, lengths = prefill(params, cfg, tokens[:, :S - 1], cache, **kw)
+    lg, cache, _ = decode_step(params, cfg, tokens[:, S - 1:S], cache,
+                               lengths + 1)
+    np.testing.assert_allclose(
+        np.asarray(lg[:, 0], np.float32),
+        np.asarray(full_logits[:, S - 1], np.float32), atol=1e-3, rtol=1e-2)
+
+
+def test_param_axes_matches_param_tree():
+    for arch in ASSIGNED:
+        cfg = reduced(REGISTRY[arch])
+        params = init_params(KEY, cfg)
+        axes = param_axes(cfg)
+        ps = jax.tree.structure(params)
+        # axes tree (tuples as leaves) must unflatten onto the params structure
+        leaves = ps.flatten_up_to(axes)
+        params_leaves = jax.tree.leaves(params)
+        assert len(leaves) == len(params_leaves), arch
+        for names, leaf in zip(leaves, params_leaves):
+            assert isinstance(names, tuple), (arch, names)
+            assert len(names) == leaf.ndim, (arch, names, leaf.shape)
+
+
+def test_gemma2_softcap_bounds_logits():
+    cfg = reduced(REGISTRY["gemma2-9b"])
+    params = init_params(KEY, cfg)
+    h, _ = forward(params, cfg, tokens=make_batch(cfg)["tokens"])
+    logits = logits_head(params, cfg, h)
+    valid = logits[..., :cfg.vocab]
+    assert float(jnp.max(jnp.abs(valid))) <= cfg.final_softcap + 1e-3
+
+
+def test_vocab_padding_never_predicted():
+    cfg = reduced(REGISTRY["seamless-m4t-large-v2"], vocab=250)  # 250 -> 256
+    assert cfg.padded_vocab == 256
+    params = init_params(KEY, cfg)
+    batch = make_batch(cfg)
+    h, _ = forward(params, cfg, tokens=batch["tokens"],
+                   frames=batch.get("frames"))
+    logits = logits_head(params, cfg, h)
+    assert bool(jnp.all(logits[..., cfg.vocab:] <= -1e29))
+
+
+# ----------------------------------------------------------------- MoE
+
+def test_moe_matches_dense_oracle_high_capacity():
+    cfg = reduced(REGISTRY["olmoe-1b-7b"], capacity_factor=8.0)
+    p = init_moe(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model), jnp.float32) * 0.5
+    out = moe_apply(p, x, cfg, compute_dtype=jnp.float32)
+    ref = moe_ref(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-3)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 4))
+@settings(max_examples=15, deadline=None)
+def test_property_moe_capacity_drops_bounded(seed, top_k):
+    """With capacity factor 1.0, the combined output of each token is either
+    the full top-k mix or a subset (dropped slots contribute 0) — never more
+    than the oracle."""
+    cfg = dataclasses.replace(
+        reduced(REGISTRY["olmoe-1b-7b"]), top_k=top_k, capacity_factor=1.0)
+    key = jax.random.PRNGKey(seed)
+    p = init_moe(key, cfg)
+    x = jax.random.normal(key, (1, 24, cfg.d_model), jnp.float32)
+    out = moe_apply(p, x, cfg, compute_dtype=jnp.float32)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_moe_grads_finite():
+    cfg = reduced(REGISTRY["qwen3-moe-30b-a3b"])
+    p = init_moe(KEY, cfg)
+    x = jax.random.normal(KEY, (1, 16, cfg.d_model), jnp.float32)
+
+    def loss(p, x):
+        return (moe_apply(p, x, cfg, compute_dtype=jnp.float32) ** 2).sum()
+
+    g = jax.grad(loss)(p, x)
+    assert all(bool(jnp.all(jnp.isfinite(t))) for t in jax.tree.leaves(g))

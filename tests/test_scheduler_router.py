@@ -1,0 +1,157 @@
+"""SuperScheduler (capacity, anti-affinity, failure requeue) and MeshRouter
+(rule injection, init gate, collective-isolation validation)."""
+import time
+
+import pytest
+
+from repro.core import (APIServer, IsolationViolation, MeshRouter, Namespace,
+                        Node, NodeAgent, Service, SuperScheduler, WorkUnit)
+from repro.core.objects import NodeStatus
+
+
+def wait_for(cond, timeout=10.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if cond():
+            return True
+        time.sleep(0.01)
+    return False
+
+
+def mk_node(api, name, chips=8):
+    n = Node()
+    n.metadata.name = name
+    n.status = NodeStatus(capacity_chips=chips, allocatable_chips=chips)
+    api.create(n)
+
+
+def mk_unit(api, name, ns="default", chips=1, anti=None, group=""):
+    u = WorkUnit()
+    u.metadata.name = name
+    u.metadata.namespace = ns
+    u.spec.chips = chips
+    u.spec.anti_affinity = anti or []
+    if group:
+        u.metadata.labels["group"] = group
+    return api.create(u)
+
+
+@pytest.fixture
+def sched_rig():
+    api = APIServer("super")
+    mk_node(api, "n0", 8)
+    mk_node(api, "n1", 8)
+    sched = SuperScheduler(api)
+    sched.start()
+    yield api, sched
+    sched.stop()
+    api.close()
+
+
+def phase(api, name, ns="default"):
+    return api.get("WorkUnit", ns, name).status
+
+
+def test_binds_pending_units(sched_rig):
+    api, sched = sched_rig
+    mk_unit(api, "a", chips=2)
+    assert wait_for(lambda: phase(api, "a").phase == "Scheduled")
+    assert phase(api, "a").node in ("n0", "n1")
+
+
+def test_respects_capacity(sched_rig):
+    api, sched = sched_rig
+    for i in range(4):
+        mk_unit(api, f"big{i}", chips=4)   # 16 chips total: exactly fits
+    assert wait_for(lambda: all(
+        phase(api, f"big{i}").phase == "Scheduled" for i in range(4)))
+    nodes = [phase(api, f"big{i}").node for i in range(4)]
+    assert nodes.count("n0") == 2 and nodes.count("n1") == 2
+    # a fifth unit cannot fit and stays Pending
+    mk_unit(api, "big4", chips=4)
+    time.sleep(0.3)
+    assert phase(api, "big4").phase == "Pending"
+
+
+def test_anti_affinity_separates(sched_rig):
+    api, sched = sched_rig
+    mk_unit(api, "a", chips=1, group="web")
+    assert wait_for(lambda: phase(api, "a").phase == "Scheduled")
+    mk_unit(api, "b", chips=1, anti=["web"], group="web")
+    assert wait_for(lambda: phase(api, "b").phase == "Scheduled")
+    assert phase(api, "a").node != phase(api, "b").node
+
+
+def test_node_failure_requeues_and_reschedules(sched_rig):
+    api, sched = sched_rig
+    mk_unit(api, "a", chips=1)
+    assert wait_for(lambda: phase(api, "a").phase == "Scheduled")
+    dead = phase(api, "a").node
+    api.update_status("Node", "", dead,
+                      lambda n: setattr(n.status, "phase", "NotReady"))
+    sched.node_failed(dead)
+    assert wait_for(lambda: phase(api, "a").phase == "Scheduled"
+                    and phase(api, "a").node != dead)
+    assert phase(api, "a").restart_count >= 1
+
+
+# ------------------------------------------------------------------ router
+
+def test_router_injects_rules_and_gates():
+    api = APIServer("super")
+    router = MeshRouter(api, scan_interval=0.0)
+    router.start()
+    try:
+        svc = Service()
+        svc.metadata.name = "s"
+        svc.metadata.namespace = "ns1"
+        svc.virtual_ip = "10.0.0.1"
+        svc.endpoints = ["e1"]
+        api.create(svc)
+        u = WorkUnit()
+        u.metadata.name = "u"
+        u.metadata.namespace = "ns1"
+        u.spec.init_gate = True
+        created = api.create(u)
+        assert wait_for(lambda: router.table(created.metadata.uid) is not None
+                        and len(router.table(created.metadata.uid)) == 1)
+        assert router.wait_for_rules(created.metadata.uid, timeout=5.0)
+        assert router.table(created.metadata.uid).lookup("10.0.0.1") == ["e1"]
+        # endpoint update propagates on scan
+        api.update_status("Service", "ns1", "s",
+                          lambda s: setattr(s, "endpoints", ["e1", "e2"]))
+        time.sleep(0.1)
+        router.scan_once()
+        assert router.table(created.metadata.uid).lookup("10.0.0.1") == \
+            ["e1", "e2"]
+    finally:
+        router.stop()
+        api.close()
+
+
+HLO_OK = """
+  %all-reduce.1 = f32[128]{0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %all-gather.2 = f32[256]{0} all-gather(%y), replica_groups={{0,1},{2,3}}, dimensions={0}
+"""
+HLO_BAD = """
+  %all-reduce.1 = f32[128]{0} all-reduce(%x), replica_groups={{0,1,2,3,7}}, to_apply=%add
+"""
+HLO_IOTA = """
+  %all-reduce.9 = bf16[64]{0} all-reduce(%x), replica_groups=[2,4]<=[8], to_apply=%add
+"""
+
+
+def test_isolation_validation_passes_inside_slice():
+    n = MeshRouter.validate_isolation(HLO_OK, range(4))
+    assert n == 3  # 1 all-reduce group + 2 all-gather groups
+
+
+def test_isolation_validation_rejects_escape():
+    with pytest.raises(IsolationViolation):
+        MeshRouter.validate_isolation(HLO_BAD, range(4))
+
+
+def test_isolation_iota_groups_cover_all():
+    MeshRouter.validate_isolation(HLO_IOTA, range(8))
+    with pytest.raises(IsolationViolation):
+        MeshRouter.validate_isolation(HLO_IOTA, range(4))

@@ -1,0 +1,82 @@
+"""Sharding planner: strategy selection, divisibility fallbacks, spec
+generation (no devices needed — uses an abstract mesh)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import REGISTRY, get_shape
+from repro.sharding.api import ShardingRules
+from repro.sharding.planner import plan_for
+
+
+def abstract_mesh(shape, axes):
+    return jax.sharding.AbstractMesh(shape, axes)
+
+
+MESH1 = abstract_mesh((16, 16), ("data", "model"))
+MESH2 = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_heads_divisible_uses_tp_heads():
+    plan = plan_for(REGISTRY["yi-9b"], get_shape("train_4k"), MESH1)
+    assert plan.strategy == "tp_heads"
+    assert plan.rules.bindings["heads"] == "model"
+
+
+def test_heads_indivisible_falls_back_to_context():
+    for arch in ("qwen2-7b", "qwen2.5-14b"):
+        plan = plan_for(REGISTRY[arch], get_shape("train_4k"), MESH1)
+        assert plan.strategy == "context", arch
+        assert plan.rules.bindings["heads"] is None
+        assert plan.rules.bindings["attn_seq"] == "model"
+        assert any("context-parallel" in n for n in plan.notes)
+
+
+def test_decode_strategy_shards_cache_seq():
+    plan = plan_for(REGISTRY["qwen2-7b"], get_shape("decode_32k"), MESH1)
+    assert plan.strategy == "decode"
+    assert plan.rules.bindings["cache_seq"] == "model"
+    assert plan.rules.bindings["embed"] == "model"   # row-parallel weights
+    assert plan.rules.bindings["seq"] is None
+
+
+def test_train_uses_fsdp_embed_on_data():
+    plan = plan_for(REGISTRY["jamba-v0.1-52b"], get_shape("train_4k"), MESH1)
+    assert plan.rules.bindings["embed"] == "data"
+
+
+def test_batch_axes_multi_pod():
+    plan = plan_for(REGISTRY["qwen2-7b"], get_shape("train_4k"), MESH2)
+    assert plan.rules.bindings["batch"] == ("pod", "data")
+
+
+def test_batch_of_one_not_sharded():
+    plan = plan_for(REGISTRY["rwkv6-7b"], get_shape("long_500k"), MESH1)
+    assert plan.rules.bindings["batch"] is None
+    assert any("batch replicated" in n for n in plan.notes)
+
+
+def test_moe_expert_axis():
+    plan = plan_for(REGISTRY["qwen3-moe-30b-a3b"], get_shape("train_4k"),
+                    MESH1)
+    assert plan.rules.bindings["expert"] == "model"
+    assert plan.rules.bindings["moe_tokens"] == ("data", "model")
+
+
+def test_rules_spec_dedupes_repeated_axes():
+    rules = ShardingRules(MESH1, {"batch": "data", "seq": "model",
+                                  "mlp": "model"})
+    # "model" may appear once: second use is dropped
+    spec = rules.spec(("batch", "seq", "mlp"))
+    assert spec == P("data", "model")
+
+
+def test_rules_spec_trims_trailing_none():
+    rules = ShardingRules(MESH1, {"batch": "data"})
+    assert rules.spec(("batch", None, None)) == P("data")
+
+
+def test_spec_multi_axis_binding():
+    rules = ShardingRules(MESH2, {"batch": ("pod", "data")})
+    assert rules.spec(("batch", None)) == P(("pod", "data"))

@@ -1,0 +1,132 @@
+"""ObjectStore (etcd analogue): CRUD, optimistic concurrency, watches,
+and hypothesis properties (resourceVersion monotonicity under arbitrary op
+sequences)."""
+import threading
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ADDED, DELETED, MODIFIED, AlreadyExistsError,
+                        ConflictError, Namespace, NotFoundError, ObjectStore,
+                        WorkUnit)
+
+
+def mk_unit(name, ns="default"):
+    u = WorkUnit()
+    u.metadata.name = name
+    u.metadata.namespace = ns
+    return u
+
+
+def test_create_get_roundtrip():
+    s = ObjectStore()
+    created = s.create(mk_unit("a"))
+    assert created.metadata.uid
+    assert created.metadata.resource_version == 1
+    got = s.get("WorkUnit", "default", "a")
+    assert got.metadata.uid == created.metadata.uid
+    # returned objects are copies: mutations do not leak into the store
+    got.spec.arch = "mutated"
+    assert s.get("WorkUnit", "default", "a").spec.arch != "mutated"
+
+
+def test_create_duplicate_fails():
+    s = ObjectStore()
+    s.create(mk_unit("a"))
+    with pytest.raises(AlreadyExistsError):
+        s.create(mk_unit("a"))
+
+
+def test_update_conflict_on_stale_version():
+    s = ObjectStore()
+    s.create(mk_unit("a"))
+    fresh = s.get("WorkUnit", "default", "a")
+    s.update(fresh)  # bumps the version
+    with pytest.raises(ConflictError):
+        s.update(fresh)  # now stale
+    s.update(fresh, force=True)  # force path succeeds
+
+
+def test_update_status_is_atomic_rmw():
+    s = ObjectStore()
+    s.create(mk_unit("a"))
+    n = 50
+    threads = [threading.Thread(target=lambda: s.update_status(
+        "WorkUnit", "default", "a",
+        lambda u: setattr(u.status, "restart_count",
+                          u.status.restart_count + 1)))
+        for _ in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert s.get("WorkUnit", "default", "a").status.restart_count == n
+
+
+def test_delete_and_not_found():
+    s = ObjectStore()
+    s.create(mk_unit("a"))
+    s.delete("WorkUnit", "default", "a")
+    with pytest.raises(NotFoundError):
+        s.get("WorkUnit", "default", "a")
+    with pytest.raises(NotFoundError):
+        s.delete("WorkUnit", "default", "a")
+
+
+def test_list_namespace_filter():
+    s = ObjectStore()
+    s.create(mk_unit("a", "ns1"))
+    s.create(mk_unit("b", "ns1"))
+    s.create(mk_unit("c", "ns2"))
+    assert len(s.list("WorkUnit")) == 3
+    assert len(s.list("WorkUnit", "ns1")) == 2
+    assert len(s.list("WorkUnit", "ns2")) == 1
+
+
+def test_watch_sees_ordered_events():
+    s = ObjectStore()
+    w = s.watch("WorkUnit")
+    s.create(mk_unit("a"))
+    s.update_status("WorkUnit", "default", "a",
+                    lambda u: setattr(u.status, "phase", "Ready"))
+    s.delete("WorkUnit", "default", "a")
+    evs = [w.next(timeout=1.0) for _ in range(3)]
+    assert [e.type for e in evs] == [ADDED, MODIFIED, DELETED]
+    versions = [e.resource_version for e in evs]
+    assert versions == sorted(versions)
+
+
+def test_list_and_watch_atomicity():
+    s = ObjectStore()
+    s.create(mk_unit("a"))
+    snapshot, w = s.list_and_watch("WorkUnit")
+    assert len(snapshot) == 1
+    s.create(mk_unit("b"))
+    ev = w.next(timeout=1.0)
+    assert ev.type == ADDED and ev.object.metadata.name == "b"
+
+
+@given(st.lists(st.tuples(st.sampled_from(["create", "update", "delete"]),
+                          st.sampled_from(["x", "y", "z"])), max_size=40))
+@settings(max_examples=50, deadline=None)
+def test_property_resource_version_monotonic(ops):
+    s = ObjectStore()
+    seen_rv = 0
+    w = s.watch("WorkUnit")
+    for op, name in ops:
+        try:
+            if op == "create":
+                s.create(mk_unit(name))
+            elif op == "update":
+                s.update_status("WorkUnit", "default", name,
+                                lambda u: setattr(u.status, "phase", "X"))
+            else:
+                s.delete("WorkUnit", "default", name)
+        except (AlreadyExistsError, NotFoundError):
+            continue
+    while True:
+        ev = w.next(timeout=0.01)
+        if ev is None:
+            break
+        assert ev.resource_version > seen_rv
+        seen_rv = ev.resource_version

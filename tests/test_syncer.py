@@ -1,0 +1,131 @@
+"""Syncer: downward/upward synchronization, namespace translation, race
+remediation via the periodic scan, vNode lifecycle."""
+import time
+
+import pytest
+
+from repro.core import (APIServer, Namespace, NotFoundError, Secret, Service,
+                        Syncer, TenantControlPlane, WorkUnit, ns_prefix)
+
+
+@pytest.fixture
+def rig():
+    super_api = APIServer("super")
+    syncer = Syncer(super_api, downward_workers=4, upward_workers=4,
+                    scan_interval=0.0)
+    plane = TenantControlPlane("acme")
+    prefix = syncer.register_tenant(plane, "uid-1")
+    syncer.start()
+    yield super_api, syncer, plane, prefix
+    syncer.stop()
+    super_api.close()
+
+
+def wait_for(cond, timeout=10.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if cond():
+            return True
+        time.sleep(0.01)
+    return False
+
+
+def mk_unit(name, ns="default"):
+    u = WorkUnit()
+    u.metadata.name = name
+    u.metadata.namespace = ns
+    return u
+
+
+def test_ns_prefix_deterministic():
+    assert ns_prefix("a", "uid") == ns_prefix("a", "uid")
+    assert ns_prefix("a", "uid1") != ns_prefix("a", "uid2")
+
+
+def test_downward_sync_creates_prefixed_objects(rig):
+    super_api, syncer, plane, prefix = rig
+    ns = Namespace()
+    ns.metadata.name = "default"
+    plane.api.create(ns)
+    plane.api.create(mk_unit("job"))
+    assert wait_for(lambda: super_api.store.count("WorkUnit") == 1)
+    sobj = super_api.list("WorkUnit")[0]
+    assert sobj.metadata.namespace == f"{prefix}-default"
+    assert sobj.metadata.annotations["vc/tenant"] == "acme"
+    # the super namespace object was auto-created
+    super_api.get("Namespace", "", f"{prefix}-default")
+
+
+def test_secrets_and_services_sync_down(rig):
+    super_api, syncer, plane, prefix = rig
+    sec = Secret()
+    sec.metadata.name = "tok"
+    sec.metadata.namespace = "default"
+    sec.data["k"] = "v"
+    plane.api.create(sec)
+    svc = Service()
+    svc.metadata.name = "svc"
+    svc.metadata.namespace = "default"
+    svc.virtual_ip = "10.0.0.1"
+    plane.api.create(svc)
+    assert wait_for(lambda: super_api.store.count("Secret") == 1)
+    assert wait_for(lambda: super_api.store.count("Service") == 1)
+
+
+def test_upward_status_sync(rig):
+    super_api, syncer, plane, prefix = rig
+    plane.api.create(mk_unit("job"))
+    assert wait_for(lambda: super_api.store.count("WorkUnit") == 1)
+    super_api.update_status("WorkUnit", f"{prefix}-default", "job",
+                            lambda u: setattr(u.status, "phase", "Ready"))
+    assert wait_for(lambda: plane.api.get(
+        "WorkUnit", "default", "job").status.phase == "Ready")
+
+
+def test_tenant_delete_propagates_down(rig):
+    super_api, syncer, plane, prefix = rig
+    plane.api.create(mk_unit("job"))
+    assert wait_for(lambda: super_api.store.count("WorkUnit") == 1)
+    plane.api.delete("WorkUnit", "default", "job")
+    assert wait_for(lambda: super_api.store.count("WorkUnit") == 0)
+
+
+def test_spec_update_propagates_down(rig):
+    super_api, syncer, plane, prefix = rig
+    plane.api.create(mk_unit("job"))
+    assert wait_for(lambda: super_api.store.count("WorkUnit") == 1)
+    u = plane.api.get("WorkUnit", "default", "job")
+    u.spec.chips = 7
+    plane.api.update(u)
+    assert wait_for(lambda: super_api.list("WorkUnit")[0].spec.chips == 7)
+
+
+def test_scan_remediates_out_of_band_super_deletion(rig):
+    """Paper §III-C: rare permanent inconsistencies are remediated by the
+    periodic scan re-sending objects to the worker queues."""
+    super_api, syncer, plane, prefix = rig
+    plane.api.create(mk_unit("job"))
+    assert wait_for(lambda: super_api.store.count("WorkUnit") == 1)
+    # someone deletes the super copy behind the syncer's back
+    super_api.delete("WorkUnit", f"{prefix}-default", "job")
+    assert super_api.store.count("WorkUnit") == 0
+    fixes = syncer.scan_once()
+    assert fixes >= 1
+    assert wait_for(lambda: super_api.store.count("WorkUnit") == 1)
+
+
+def test_scan_remediates_orphaned_super_object(rig):
+    super_api, syncer, plane, prefix = rig
+    # an orphan appears in the super cluster in the tenant's namespace
+    orphan = mk_unit("ghost", f"{prefix}-default")
+    super_api.create(orphan)
+    syncer.scan_once()
+    assert wait_for(lambda: super_api.store.count("WorkUnit") == 0)
+
+
+def test_unregister_tenant_cleans_super(rig):
+    super_api, syncer, plane, prefix = rig
+    plane.api.create(mk_unit("job"))
+    assert wait_for(lambda: super_api.store.count("WorkUnit") == 1)
+    syncer.unregister_tenant("acme")
+    assert super_api.store.count("WorkUnit") == 0

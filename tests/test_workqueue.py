@@ -1,0 +1,160 @@
+"""Work queues: client-go dedup semantics + WRR fair queue properties."""
+import threading
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import FairWorkQueue, WorkQueue
+from repro.core.workqueue import DelayingQueue, RateLimiter
+
+
+def test_dedup_while_queued():
+    q = WorkQueue()
+    q.add("a")
+    q.add("a")
+    q.add("b")
+    assert len(q) == 2
+    assert q.deduped == 1
+
+
+def test_requeue_if_added_during_processing():
+    q = WorkQueue()
+    q.add("a")
+    key = q.get()
+    assert key == "a"
+    q.add("a")               # while processing
+    assert len(q) == 0       # not queued yet
+    q.done("a")
+    assert len(q) == 1       # re-queued on done
+    assert q.get() == "a"
+    q.done("a")
+    assert len(q) == 0
+
+
+def test_fifo_order():
+    q = WorkQueue()
+    for i in range(10):
+        q.add(i)
+    assert [q.get() for _ in range(10)] == list(range(10))
+
+
+def test_shutdown_unblocks_getters():
+    q = WorkQueue()
+    out = []
+
+    def getter():
+        out.append(q.get())
+
+    t = threading.Thread(target=getter)
+    t.start()
+    q.shutdown()
+    t.join(timeout=2.0)
+    assert out == [None]
+
+
+def test_rate_limiter_backoff_and_forget():
+    rl = RateLimiter(base=0.01, cap=0.1)
+    assert rl.when("k") == 0.01
+    assert rl.when("k") == 0.02
+    assert rl.when("k") == 0.04
+    rl.forget("k")
+    assert rl.when("k") == 0.01
+
+
+def test_delaying_queue():
+    import time
+    q = DelayingQueue()
+    q.add_after("x", 0.05)
+    assert q.get(timeout=0.01) is None
+    assert q.get(timeout=1.0) == "x"
+
+
+# ---------------------------------------------------------------- fair queue
+
+def test_fair_round_robin_interleaves_tenants():
+    q = FairWorkQueue()
+    for t in ("a", "b"):
+        q.register_tenant(t, weight=1)
+    for i in range(3):
+        q.add("a", f"a{i}")
+    for i in range(3):
+        q.add("b", f"b{i}")
+    order = [q.get()[0] for _ in range(6)]
+    # greedy tenant cannot occupy two consecutive slots while b has items
+    assert order.count("a") == 3 and order.count("b") == 3
+    assert order[:4].count("a") == 2  # interleaved, not a,a,a,b,b,b
+
+
+def test_weighted_round_robin_proportional():
+    q = FairWorkQueue()
+    q.register_tenant("heavy", weight=3)
+    q.register_tenant("light", weight=1)
+    for i in range(30):
+        q.add("heavy", f"h{i}")
+    for i in range(10):
+        q.add("light", f"l{i}")
+    first12 = [q.get()[0] for _ in range(12)]
+    # heavy should get ~3x the service of light in any window
+    assert 7 <= first12.count("heavy") <= 10
+
+
+def test_fair_dedup_and_done_requeue():
+    q = FairWorkQueue()
+    q.register_tenant("a")
+    q.add("a", "k")
+    q.add("a", "k")
+    assert len(q) == 1
+    item = q.get()
+    q.add("a", "k")          # during processing
+    assert len(q) == 0
+    q.done(item)
+    assert len(q) == 1
+
+
+def test_unfair_mode_is_fifo():
+    q = FairWorkQueue(fair=False)
+    q.add("a", 1)
+    q.add("b", 2)
+    q.add("a", 3)
+    assert [q.get()[1] for _ in range(3)] == [1, 2, 3]
+
+
+@given(st.lists(st.tuples(st.sampled_from(["t0", "t1", "t2"]),
+                          st.integers(0, 99)), min_size=1, max_size=60))
+@settings(max_examples=50, deadline=None)
+def test_property_fair_queue_drains_everything_once(items):
+    """No loss, no duplication, and starvation-freedom: every enqueued key is
+    served exactly once regardless of tenant mix."""
+    q = FairWorkQueue()
+    for t in ("t0", "t1", "t2"):
+        q.register_tenant(t)
+    expect = set()
+    for tenant, key in items:
+        q.add(tenant, key)
+        expect.add((tenant, key))
+    got = set()
+    for _ in range(len(expect)):
+        item = q.get(timeout=0.1)
+        assert item is not None
+        assert item not in got, "duplicate service"
+        got.add(item)
+        q.done(item)
+    assert got == expect
+    assert q.get(timeout=0.01) is None
+
+
+@given(st.integers(1, 5), st.integers(1, 5))
+@settings(max_examples=20, deadline=None)
+def test_property_wrr_service_ratio(w_a, w_b):
+    """Served counts track weights within one WRR round."""
+    q = FairWorkQueue()
+    q.register_tenant("a", weight=w_a)
+    q.register_tenant("b", weight=w_b)
+    n = 20 * (w_a + w_b)
+    for i in range(n):
+        q.add("a", i)
+        q.add("b", i)
+    window = [q.get()[0] for _ in range(2 * (w_a + w_b))]
+    ca, cb = window.count("a"), window.count("b")
+    # both tenants served; ratio within one round of the weight ratio
+    assert ca >= 1 and cb >= 1
+    assert abs(ca - 2 * w_a) <= w_a + w_b
