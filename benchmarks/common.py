@@ -49,13 +49,42 @@ class LatencyStats:
 def make_framework(num_nodes: int = 100, *, downward_workers: int = 20,
                    upward_workers: int = 100, fair_queuing: bool = True,
                    scan_interval: float = 0.0,
-                   parallel_scorers: int = 0) -> VirtualClusterFramework:
+                   parallel_scorers: int = 0,
+                   syncer_shards: int = 1,
+                   downward_batch: int = 1) -> VirtualClusterFramework:
     return VirtualClusterFramework(
         num_nodes=num_nodes, downward_workers=downward_workers,
         upward_workers=upward_workers, fair_queuing=fair_queuing,
         scan_interval=scan_interval, router_scan_interval=0.0,
         heartbeat_interval=3600.0,   # heartbeats off the hot path
-        parallel_scorers=parallel_scorers)
+        parallel_scorers=parallel_scorers,
+        syncer_shards=syncer_shards, downward_batch=downward_batch)
+
+
+def syncer_metrics_summary(fw: VirtualClusterFramework) -> Dict[str, float]:
+    """Headline controller-runtime metrics for benchmark records."""
+    snap = fw.metrics.snapshot()
+    out: Dict[str, float] = {}
+    down_total = down_retries = 0.0
+    lat_sum = lat_count = 0.0
+    for key, val in snap["counters"].items():
+        if key.startswith("reconcile_total{controller=syncer-dws"):
+            down_total += val
+        if key.startswith("reconcile_retries{controller=syncer-dws"):
+            down_retries += val
+    for key, s in snap["summaries"].items():
+        if key.startswith("reconcile_seconds{controller=syncer-dws"):
+            lat_sum += s["sum"]
+            lat_count += s["count"]
+    out["downward_reconciles"] = down_total
+    out["downward_retries"] = down_retries
+    out["downward_reconcile_mean_ms"] = (
+        lat_sum / lat_count * 1e3 if lat_count else 0.0)
+    out["upward_reconciles"] = snap["counters"].get(
+        "reconcile_total{controller=syncer-uws}", 0.0)
+    out["scheduler_reconciles"] = snap["counters"].get(
+        "reconcile_total{controller=scheduler}", 0.0)
+    return out
 
 
 def submit_burst(fw: VirtualClusterFramework, planes, units_per_tenant: int,
@@ -142,12 +171,15 @@ def baseline_burst(num_nodes: int, tenants: int, units_per_tenant: int,
 
 def vc_burst(tenants: int, units_per_tenant: int, *, num_nodes: int = 100,
              downward_workers: int = 20, upward_workers: int = 100,
-             fair_queuing: bool = True, timeout: float = 600.0
+             fair_queuing: bool = True, timeout: float = 600.0,
+             syncer_shards: int = 1, downward_batch: int = 1
              ) -> Tuple[LatencyStats, float, VirtualClusterFramework]:
     """Full VirtualCluster path; caller must iterate results before stop()."""
     fw = make_framework(num_nodes, downward_workers=downward_workers,
                         upward_workers=upward_workers,
-                        fair_queuing=fair_queuing)
+                        fair_queuing=fair_queuing,
+                        syncer_shards=syncer_shards,
+                        downward_batch=downward_batch)
     fw.start()
     try:
         planes = [fw.add_tenant(f"t{i:03d}") for i in range(tenants)]

@@ -4,6 +4,10 @@ Paper §IV-D: 10 greedy tenants issue 900 creations concurrently each; 40
 regular tenants issue 10 sequentially each; all weights equal. With WRR fair
 queuing the regular tenants' average creation time stays small; with the
 shared FIFO they are starved behind the greedy burst.
+
+Beyond the paper, the sweep re-runs the fair configuration with the syncer
+sharded 4-ways (tenants hash-partitioned, per-shard WRR) to show the
+fairness guarantee survives horizontal scaling.
 """
 from __future__ import annotations
 
@@ -13,12 +17,12 @@ import time
 from typing import Dict, List
 
 from repro.core import Namespace
-from .common import make_framework
+from .common import make_framework, syncer_metrics_summary
 
 
 def _run_one(fair: bool, greedy: int, greedy_units: int, regular: int,
-             regular_units: int) -> Dict:
-    fw = make_framework(100, fair_queuing=fair)
+             regular_units: int, shards: int = 1) -> Dict:
+    fw = make_framework(100, fair_queuing=fair, syncer_shards=shards)
     fw.start()
     try:
         gplanes = [fw.add_tenant(f"greedy{i:02d}") for i in range(greedy)]
@@ -62,7 +66,8 @@ def _run_one(fair: bool, greedy: int, greedy_units: int, regular: int,
             return outs
 
         return {"greedy_avg_s": avg_latency(gplanes),
-                "regular_avg_s": avg_latency(rplanes)}
+                "regular_avg_s": avg_latency(rplanes),
+                "runtime_metrics": syncer_metrics_summary(fw)}
     finally:
         fw.stop()
 
@@ -70,20 +75,25 @@ def _run_one(fair: bool, greedy: int, greedy_units: int, regular: int,
 def run(full: bool = False) -> List[Dict]:
     greedy, gu, regular, ru = (10, 900, 40, 10) if full else (4, 150, 12, 5)
     out = []
-    for fair in (True, False):
-        r = _run_one(fair, greedy, gu, regular, ru)
+    # (fair_queuing, syncer_shards): paper's fair-vs-FIFO pair, plus the
+    # fair configuration at 4 shards (fairness preserved under sharding)
+    for fair, shards in ((True, 1), (False, 1), (True, 4)):
+        r = _run_one(fair, greedy, gu, regular, ru, shards=shards)
         reg_worst = max(r["regular_avg_s"]) if r["regular_avg_s"] else 0.0
         reg_mean = statistics.mean(r["regular_avg_s"]) if r["regular_avg_s"] else 0.0
         gr_mean = statistics.mean(r["greedy_avg_s"]) if r["greedy_avg_s"] else 0.0
+        suffix = "" if shards == 1 else f"_shards{shards}"
         rec = {
-            "name": f"fig11/{'fair' if fair else 'fifo'}",
-            "fair_queuing": fair,
+            "name": f"fig11/{'fair' if fair else 'fifo'}{suffix}",
+            "fair_queuing": fair, "syncer_shards": shards,
             "greedy_tenants": greedy, "greedy_units_each": gu,
             "regular_tenants": regular, "regular_units_each": ru,
             "regular_mean_s": reg_mean, "regular_worst_s": reg_worst,
             "greedy_mean_s": gr_mean,
+            "runtime_metrics": r["runtime_metrics"],
         }
         out.append(rec)
-        print(f"  fig11 fair={fair}: regular mean {reg_mean:.2f}s worst "
-              f"{reg_worst:.2f}s | greedy mean {gr_mean:.2f}s", flush=True)
+        print(f"  fig11 fair={fair} shards={shards}: regular mean "
+              f"{reg_mean:.2f}s worst {reg_worst:.2f}s | greedy mean "
+              f"{gr_mean:.2f}s", flush=True)
     return out

@@ -4,7 +4,7 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-from .common import baseline_burst, vc_burst
+from .common import baseline_burst, syncer_metrics_summary, vc_burst
 
 
 def run(full: bool = False) -> List[Dict]:
@@ -20,7 +20,8 @@ def run(full: bool = False) -> List[Dict]:
                          ("b_fixed_tenants", fixed_tenants)):
         for tenants, total_units in cases:
             per_tenant = total_units // tenants
-            stats, total, _ = vc_burst(tenants, per_tenant)
+            stats, total, fw = vc_burst(tenants, per_tenant)
+            runtime_metrics = syncer_metrics_summary(fw)
             bstats, btotal = baseline_burst(100, tenants, per_tenant)
             vc_tput = stats.n / total if total else 0.0
             base_tput = bstats.n / btotal if btotal else 0.0
@@ -30,6 +31,7 @@ def run(full: bool = False) -> List[Dict]:
                 "vc_throughput_per_s": vc_tput,
                 "base_throughput_per_s": base_tput,
                 "degradation": (1 - vc_tput / base_tput) if base_tput else 0.0,
+                "runtime_metrics": runtime_metrics,
             }
             out.append(rec)
             print(f"  fig9{label} t={tenants} u={total_units}: "

@@ -15,7 +15,7 @@ import sys
 import time
 
 from . import (fig7_latency, fig8_breakdown, fig9_throughput, fig10_overhead,
-               fig11_fairness, kubeproxy_rules, roofline_table)
+               fig11_fairness, kubeproxy_rules, roofline_table, syncer_shards)
 
 SUITES = [
     ("fig7", fig7_latency.run),
@@ -23,6 +23,7 @@ SUITES = [
     ("fig9", fig9_throughput.run),
     ("fig10", fig10_overhead.run),
     ("fig11", fig11_fairness.run),
+    ("shards", syncer_shards.run),
     ("kubeproxy", kubeproxy_rules.run),
     ("roofline", roofline_table.run),
 ]
@@ -37,6 +38,7 @@ def _csv_row(rec) -> str:
             break
     derived = []
     for key in ("vc_p99_s", "base_p99_s", "vc_throughput_per_s",
+                "downward_throughput_per_s", "queue_wait_mean_ms",
                 "base_throughput_per_s", "degradation", "avg_cpus",
                 "cache_bytes_per_unit", "scan_s", "restart_rebuild_s",
                 "regular_worst_s", "greedy_mean_s", "gated_total_s",

@@ -1,0 +1,129 @@
+"""Sharded-syncer scale sweep -> BENCH_syncer_shards.json.
+
+Measures pure downward-sync throughput (tenant create -> super-cluster copy)
+of a standalone Syncer at shard counts {1, 2, 4, 8}: T tenants burst N
+WorkUnit creations each into their control planes, and the clock stops when
+every projected object exists in the super cluster. The total downward
+worker count is held constant across configurations, so the sweep isolates
+the effect of per-shard queues + same-tenant batch coalescing over one
+global fair queue.
+
+Config ``shards=1, batch=1`` is the pre-sharding baseline (the paper's
+single syncer).
+"""
+from __future__ import annotations
+
+import json
+import statistics
+import threading
+import time
+from typing import Dict, List
+
+from repro.core import APIServer, Namespace, Syncer, TenantControlPlane
+
+OUT_PATH = "BENCH_syncer_shards.json"
+
+
+def _run_config(shards: int, batch: int, tenants: int, per_tenant: int,
+                downward_workers: int = 20) -> Dict:
+    super_api = APIServer("super")
+    syncer = Syncer(super_api, downward_workers=downward_workers,
+                    upward_workers=4, scan_interval=0.0,
+                    shards=shards, downward_batch=batch)
+    planes = [TenantControlPlane(f"t{i:03d}") for i in range(tenants)]
+    for i, p in enumerate(planes):
+        syncer.register_tenant(p, f"uid-{i:03d}")
+    syncer.start()
+    try:
+        for p in planes:
+            ns = Namespace()
+            ns.metadata.name = "bench"
+            p.api.create(ns)
+        total = tenants * per_tenant
+        t0 = time.monotonic()
+
+        def submit(plane):
+            for j in range(per_tenant):
+                from repro.core import WorkUnit
+                u = WorkUnit()
+                u.metadata.name = f"u{j:05d}"
+                u.metadata.namespace = "bench"
+                plane.api.create(u)
+
+        threads = [threading.Thread(target=submit, args=(p,)) for p in planes]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        submit_s = time.monotonic() - t0
+        deadline = time.monotonic() + 600
+        while time.monotonic() < deadline:
+            if super_api.store.count("WorkUnit") >= total:
+                break
+            time.sleep(0.01)
+        elapsed = time.monotonic() - t0
+        synced = super_api.store.count("WorkUnit")
+
+        # per-tenant queue-wait means across all shard queues
+        waits: List[float] = []
+        for c in syncer.shard_controllers:
+            for per in c.queue.per_tenant_wait.values():
+                waits.extend(per)
+        snap = syncer.up_controller.metrics.snapshot()
+        down_batches = [s for k, s in snap["summaries"].items()
+                        if k.startswith("batch_size{controller=syncer-dws")]
+        mean_batch = (sum(s["sum"] for s in down_batches)
+                      / max(1.0, sum(s["count"] for s in down_batches)))
+        return {
+            "shards": shards, "batch": batch,
+            "tenants": tenants, "units": total,
+            "downward_workers": downward_workers,
+            "synced": synced,
+            "submit_s": submit_s,
+            "elapsed_s": elapsed,
+            "downward_throughput_per_s": synced / elapsed if elapsed else 0.0,
+            "queue_wait_mean_ms": (statistics.mean(waits) * 1e3
+                                   if waits else 0.0),
+            "mean_dequeue_batch": mean_batch,
+        }
+    finally:
+        syncer.stop()
+        super_api.close()
+
+
+def run(full: bool = False, out_path: str = OUT_PATH) -> List[Dict]:
+    tenants, per_tenant = (32, 300) if full else (16, 120)
+    configs = [(1, 1), (1, 8), (2, 8), (4, 8), (8, 8)]
+    out: List[Dict] = []
+    for shards, batch in configs:
+        rec = _run_config(shards, batch, tenants, per_tenant)
+        rec["name"] = f"syncer_shards/s{shards}_b{batch}"
+        out.append(rec)
+        print(f"  shards={shards} batch={batch}: "
+              f"{rec['downward_throughput_per_s']:.0f} units/s "
+              f"(elapsed {rec['elapsed_s']:.2f}s, queue wait "
+              f"{rec['queue_wait_mean_ms']:.1f}ms, mean batch "
+              f"{rec['mean_dequeue_batch']:.1f})", flush=True)
+    baseline = out[0]["downward_throughput_per_s"]
+    best = max(out, key=lambda r: r["downward_throughput_per_s"])
+    result = {
+        "workload": {"tenants": tenants, "units_per_tenant": per_tenant},
+        "baseline_shards1_throughput_per_s": baseline,
+        "best": {"name": best["name"],
+                 "throughput_per_s": best["downward_throughput_per_s"],
+                 "speedup_vs_single_shard": (
+                     best["downward_throughput_per_s"] / baseline
+                     if baseline else 0.0)},
+        "sweep": out,
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"  wrote {out_path}: best {best['name']} "
+          f"{result['best']['speedup_vs_single_shard']:.2f}x vs single shard",
+          flush=True)
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    run(full="--full" in sys.argv)

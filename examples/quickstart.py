@@ -50,6 +50,14 @@ def main():
         time.sleep(0.5)
         print("super WorkUnits after acme delete:",
               len(fw.super_api.list("WorkUnit")))
+
+        # every controller runs on the shared runtime: one health map and
+        # one metrics registry for the whole control plane
+        print("controller health:", fw.healthy())
+        snap = fw.metrics.snapshot()
+        reconciles = {k: int(v) for k, v in snap["counters"].items()
+                      if k.startswith("reconcile_total")}
+        print("reconciles by controller:", reconciles)
     print("done")
 
 

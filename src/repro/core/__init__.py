@@ -7,18 +7,21 @@ from .informer import Informer, InformerCache
 from .objects import (KINDS, ConfigMap, Namespace, Node, Secret, Service,
                       VirtualClusterCR, VirtualNode, WorkUnit, WorkUnitSpec)
 from .router import IsolationViolation, MeshRouter
+from .runtime import Controller, ControllerManager, MetricsRegistry
 from .scheduler import SuperScheduler
 from .store import (ADDED, DELETED, MODIFIED, AlreadyExistsError,
                     ConflictError, NotFoundError, ObjectStore)
-from .syncer import Syncer, ns_prefix
+from .syncer import Syncer, ns_prefix, shard_for
 from .tenant_operator import TenantOperator
 from .vnode import VNodeManager
 from .workqueue import DelayingQueue, RateLimiter, WorkQueue
 
 __all__ = [
     "APIServer", "TenantControlPlane", "VirtualClusterFramework",
+    "Controller", "ControllerManager", "MetricsRegistry",
     "FairWorkQueue", "WorkQueue", "DelayingQueue", "RateLimiter",
     "Informer", "InformerCache", "ObjectStore", "Syncer", "ns_prefix",
+    "shard_for",
     "SuperScheduler", "TenantOperator", "VNodeManager", "MeshRouter",
     "IsolationViolation", "NodeAgent", "VnAgent", "Provider", "MockProvider",
     "CallableProvider", "WorkUnit", "WorkUnitSpec", "Service", "Secret",

@@ -6,6 +6,10 @@ all Pods scheduled to the virtual kubelet ready and running instantaneously")
 used in the large-scale experiments; ``CallableProvider`` executes real work
 (a JAX step function) for the end-to-end examples.
 
+NodeAgent runs on the shared controller runtime: the WorkUnit informer
+enqueues units bound to this node, a single worker drives them through the
+Provider, and the periodic scan doubles as the kubelet heartbeat.
+
 VnAgent (paper Fig.4 (3)): tenants cannot reach the kubelet, so log/exec
 requests go to a per-node proxy that identifies the tenant by comparing the
 hash of its TLS credential with the ones saved in VC objects, then translates
@@ -20,7 +24,9 @@ from typing import Any, Callable, Dict, List, Optional
 
 from .apiserver import APIServer
 from .objects import Node, NodeStatus, WorkUnit
+from .runtime import Controller
 from .store import ADDED, MODIFIED, NotFoundError
+from .workqueue import WorkQueue
 
 
 class Provider:
@@ -88,7 +94,7 @@ class CallableProvider(Provider):
         return f"$ {cmd}\n{self.results.get(unit_key)}\n"
 
 
-class NodeAgent:
+class NodeAgent(Controller):
     """kubelet analogue: one per physical node, registered to the super only."""
 
     def __init__(self, api: APIServer, node_name: str, chips: int = 8,
@@ -96,6 +102,9 @@ class NodeAgent:
                  provider: Optional[Provider] = None,
                  router: Optional[Any] = None,
                  heartbeat_interval: float = 5.0):
+        super().__init__(f"agent-{node_name}",
+                         queue=WorkQueue(f"agent-{node_name}"), workers=1,
+                         scan_interval=heartbeat_interval, retry_on=())
         self.api = api
         self.node_name = node_name
         self.chips = chips
@@ -103,10 +112,10 @@ class NodeAgent:
         self.provider = provider or MockProvider()
         self.router = router
         self.heartbeat_interval = heartbeat_interval
-        self._stop = threading.Event()
-        self._watch_thread: Optional[threading.Thread] = None
-        self._hb_thread: Optional[threading.Thread] = None
-        self._running: Dict[str, WorkUnit] = {}
+        self.unit_informer = self.add_informer(api, "WorkUnit",
+                                               handler=self._on_unit,
+                                               name=f"kubelet:{node_name}")
+        self._running_units: Dict[str, WorkUnit] = {}
         self.ran_count = 0
 
     def register(self) -> None:
@@ -122,34 +131,22 @@ class NodeAgent:
         except Exception:
             pass  # re-registration after restart
 
-    def start(self) -> None:
+    def on_start(self) -> None:
         self.register()
-        self._watch_thread = threading.Thread(
-            target=self._watch_units, name=f"kubelet:{self.node_name}", daemon=True)
-        self._watch_thread.start()
-        self._hb_thread = threading.Thread(
-            target=self._heartbeat, name=f"hb:{self.node_name}", daemon=True)
-        self._hb_thread.start()
-
-    def stop(self) -> None:
-        self._stop.set()
 
     # -- unit lifecycle ----------------------------------------------------------
 
-    def _watch_units(self) -> None:
-        snapshot, watch = self.api.list_and_watch("WorkUnit")
-        for u in snapshot:
-            self._maybe_run(u)
-        while not self._stop.is_set():
-            ev = watch.next(timeout=0.2)
-            if ev is None:
-                if watch.closed:
-                    snapshot, watch = self.api.list_and_watch("WorkUnit")
-                    for u in snapshot:
-                        self._maybe_run(u)
-                continue
-            if ev.type in (ADDED, MODIFIED):
-                self._maybe_run(ev.object)
+    def _on_unit(self, ev_type: str, unit: WorkUnit) -> None:
+        if (ev_type in (ADDED, MODIFIED)
+                and unit.status.node == self.node_name
+                and unit.status.phase == "Scheduled"):
+            self.queue.add((unit.metadata.namespace, unit.metadata.name))
+
+    def reconcile(self, item: Any) -> None:
+        ns, name = item
+        unit = self.unit_informer.cache.get(ns, name)
+        if unit is not None:
+            self._maybe_run(unit)
 
     def _maybe_run(self, unit: WorkUnit) -> None:
         if unit.status.node != self.node_name:
@@ -157,9 +154,9 @@ class NodeAgent:
         if unit.status.phase != "Scheduled":
             return
         key = unit.metadata.key
-        if key in self._running:
+        if key in self._running_units:
             return
-        self._running[key] = unit
+        self._running_units[key] = unit
         # init-gate (paper §III-B (4)): routing rules must be injected before
         # the workload starts — the init-container handshake.
         if unit.spec.init_gate and self.router is not None:
@@ -185,16 +182,15 @@ class NodeAgent:
         except NotFoundError:
             pass
 
-    # -- heartbeats ------------------------------------------------------------------
+    # -- heartbeat (rides the runtime's periodic scan) ---------------------------
 
-    def _heartbeat(self) -> None:
-        while not self._stop.is_set():
-            try:
-                t0 = time.monotonic()
-                self.api.update_status("Node", "", self.node_name, _beat(t0))
-            except NotFoundError:
-                pass
-            self._stop.wait(self.heartbeat_interval)
+    def scan(self) -> int:
+        t0 = time.monotonic()
+        try:
+            self.api.update_status("Node", "", self.node_name, _beat(t0))
+        except NotFoundError:
+            pass
+        return 0
 
 
 def _beat(t0: float):

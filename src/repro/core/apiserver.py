@@ -32,16 +32,17 @@ class TokenBucket:
         self._last = time.monotonic()
         self._lock = threading.Lock()
 
-    def take(self, block: bool = True) -> None:
+    def take(self, block: bool = True, n: int = 1) -> None:
+        n = min(n, self.burst)   # a batch above burst capacity must not hang
         while True:
             with self._lock:
                 now = time.monotonic()
                 self._tokens = min(self.burst, self._tokens + (now - self._last) * self.qps)
                 self._last = now
-                if self._tokens >= 1.0:
-                    self._tokens -= 1.0
+                if self._tokens >= n:
+                    self._tokens -= n
                     return
-                need = (1.0 - self._tokens) / self.qps
+                need = (n - self._tokens) / self.qps
             if not block:
                 raise RateLimited()
             time.sleep(need)
@@ -76,6 +77,17 @@ class APIServer:
 
     def create(self, obj: Any) -> Any:
         return self._req(lambda: self.store.create(obj))
+
+    def create_batch(self, objs: List[Any]) -> Any:
+        """Batched create: one request, ``len(objs)`` rate-limit tokens.
+        Returns ``(created, conflicted)`` (see ``ObjectStore.create_many``)."""
+        t0 = time.monotonic()
+        self._bucket.take(n=max(1, len(objs)))
+        out = self.store.create_many(objs)
+        with self._lock:
+            self.request_count += 1
+            self.request_latency_sum += time.monotonic() - t0
+        return out
 
     def get(self, kind: str, namespace: str, name: str) -> Any:
         return self._req(lambda: self.store.get(kind, namespace, name))

@@ -1,8 +1,11 @@
 """Top-level wiring: a complete VirtualCluster deployment in one object.
 
 Composes the super cluster (apiserver + scheduler + node agents + router +
-vn-agent), the syncer, and the tenant operator. This is the public entry
-point used by examples, tests, and the paper-replication benchmarks.
+vn-agent), the (optionally sharded) syncer, and the tenant operator — all
+registered, in dependency order, with one :class:`ControllerManager` that
+owns lifecycle, health, and the process-wide metrics registry. This is the
+public entry point used by examples, tests, and the paper-replication
+benchmarks.
 """
 from __future__ import annotations
 
@@ -13,6 +16,7 @@ from .agent import MockProvider, NodeAgent, Provider, VnAgent
 from .apiserver import APIServer, TenantControlPlane
 from .objects import VirtualClusterCR, WorkUnit, WorkUnitSpec
 from .router import MeshRouter
+from .runtime import ControllerManager, MetricsRegistry
 from .scheduler import SuperScheduler
 from .store import NotFoundError
 from .syncer import Syncer
@@ -27,7 +31,10 @@ class VirtualClusterFramework:
                  provider_factory: Optional[Callable[[str], Provider]] = None,
                  parallel_scorers: int = 0,
                  heartbeat_interval: float = 5.0,
-                 grpc_latency_ms: float = 0.0):
+                 grpc_latency_ms: float = 0.0,
+                 syncer_shards: int = 1,
+                 downward_batch: int = 1):
+        self.manager = ControllerManager()
         self.super_api = APIServer("super")
         self.router = MeshRouter(self.super_api,
                                  grpc_latency_ms=grpc_latency_ms,
@@ -49,29 +56,36 @@ class VirtualClusterFramework:
                              downward_workers=downward_workers,
                              upward_workers=upward_workers,
                              fair_queuing=fair_queuing,
-                             scan_interval=scan_interval)
+                             scan_interval=scan_interval,
+                             shards=syncer_shards,
+                             downward_batch=downward_batch)
         self.operator = TenantOperator(self.super_api, self.syncer,
                                        vn_agents=[self.vn_agent])
+        # registration order == start order; stop runs in reverse
+        self.manager.add(*self.agents.values())
+        self.manager.add(self.router)
+        self.manager.add(self.scheduler)
+        self.manager.add(*self.syncer.controllers)
+        self.manager.add(self.operator)
         self._started = False
 
     # -- lifecycle --------------------------------------------------------------
 
+    @property
+    def metrics(self) -> MetricsRegistry:
+        """Process-wide controller metrics (queue depth, reconcile latency,
+        retries, scan cost) for every controller in the framework."""
+        return self.manager.metrics
+
+    def healthy(self) -> Dict[str, bool]:
+        return self.manager.healthy()
+
     def start(self) -> None:
-        for agent in self.agents.values():
-            agent.start()
-        self.router.start()
-        self.scheduler.start()
-        self.syncer.start()
-        self.operator.start()
+        self.manager.start()
         self._started = True
 
     def stop(self) -> None:
-        self.operator.stop()
-        self.syncer.stop()
-        self.scheduler.stop()
-        self.router.stop()
-        for agent in self.agents.values():
-            agent.stop()
+        self.manager.stop()
         self.super_api.close()
 
     def __enter__(self) -> "VirtualClusterFramework":

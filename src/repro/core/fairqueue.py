@@ -99,22 +99,68 @@ class FairWorkQueue:
 
     def get(self, timeout: Optional[float] = None) -> Optional[Item]:
         with self._cv:
-            deadline = None if timeout is None else time.monotonic() + timeout
-            while not self._has_items() and not self._shutdown:
-                remaining = None if deadline is None else deadline - time.monotonic()
-                if remaining is not None and remaining <= 0:
-                    return None
-                self._cv.wait(remaining)
-            if not self._has_items():
+            if not self._wait_for_items(timeout):
                 return None
             item = self._fifo.pop(0) if not self.fair else self._wrr_pop()
-            self._dirty.discard(item)
-            self._processing.add(item)
-            t0 = self._enqueue_time.pop(item, None)
-            if t0 is not None:
-                wait = time.monotonic() - t0
-                self.per_tenant_wait.setdefault(item[0], []).append(wait)
+            self._mark_dequeued(item)
             return item
+
+    def get_batch(self, max_items: int, timeout: Optional[float] = None
+                  ) -> List[Item]:
+        """Dequeue up to ``max_items`` items of ONE tenant (burst coalescing).
+
+        The first item follows normal WRR dispatch; the rest drain the same
+        tenant's sub-queue. Fairness granularity coarsens from one item to
+        one batch (a WRR quantum of ``max_items``) — cross-tenant rotation is
+        otherwise preserved. In FIFO mode this is a plain multi-get.
+        """
+        with self._cv:
+            if not self._wait_for_items(timeout):
+                return []
+            if not self.fair:
+                out = [self._fifo.pop(0)]
+                self._mark_dequeued(out[0])
+                # batches stay single-tenant in FIFO mode too (consumers
+                # coalesce per tenant): stop at the first tenant change
+                while (self._fifo and len(out) < max_items
+                       and self._fifo[0][0] == out[0][0]):
+                    item = self._fifo.pop(0)
+                    self._mark_dequeued(item)
+                    out.append(item)
+                return out
+            first = self._wrr_pop()
+            self._mark_dequeued(first)
+            out = [first]
+            tenant = first[0]
+            sub = self._subs.get(tenant)
+            while sub is not None and sub.items and len(out) < max_items:
+                item: Item = (tenant, sub.items.pop(0))
+                self._mark_dequeued(item)
+                out.append(item)
+            if sub is not None and not sub.items and tenant in self._active:
+                i = self._active.index(tenant)
+                self._active.pop(i)
+                if i < self._cursor:
+                    self._cursor -= 1
+            return out
+
+    def _wait_for_items(self, timeout: Optional[float]) -> bool:
+        """Block (under ``_cv``) until items exist or shutdown; True if items."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while not self._has_items() and not self._shutdown:
+            remaining = None if deadline is None else deadline - time.monotonic()
+            if remaining is not None and remaining <= 0:
+                return False
+            self._cv.wait(remaining)
+        return self._has_items()
+
+    def _mark_dequeued(self, item: Item) -> None:
+        self._dirty.discard(item)
+        self._processing.add(item)
+        t0 = self._enqueue_time.pop(item, None)
+        if t0 is not None:
+            wait = time.monotonic() - t0
+            self.per_tenant_wait.setdefault(item[0], []).append(wait)
 
     def done(self, item: Item) -> None:
         with self._cv:
@@ -178,3 +224,8 @@ class FairWorkQueue:
         with self._cv:
             self._shutdown = True
             self._cv.notify_all()
+
+    def reopen(self) -> None:
+        """Accept work again after shutdown() (controller restart)."""
+        with self._cv:
+            self._shutdown = False

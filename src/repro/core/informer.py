@@ -77,6 +77,9 @@ class Informer:
         self._handlers.append(handler)
 
     def start(self) -> None:
+        # fresh events so a stopped informer can be restarted (cache rebuild)
+        self._stop = threading.Event()
+        self._synced.clear()
         self._thread = threading.Thread(
             target=self._run, name=f"informer:{self.name}", daemon=True)
         self._thread.start()

@@ -7,16 +7,16 @@ gates workload start on rule injection.
 
 TPU adaptation: a tenant's "VPC" is its mesh slice. Each WorkUnit gets a
 guest routing table mapping service virtual addresses -> endpoint WorkUnits
-(e.g. prefill->decode disaggregation, parameter servers). The router:
+(e.g. prefill->decode disaggregation, parameter servers). The router runs on
+the shared controller runtime — Service/WorkUnit informers enqueue
+``(unit_uid, namespace)`` keys, workers inject rules into per-WorkUnit guest
+tables *before* the workload starts (``wait_for_rules`` is the
+init-container handshake), and a periodic reconcile scan covers all guest
+tables (paper §IV-E measures its cost).
 
-- watches Services + WorkUnits (per tenant namespace in the super cluster);
-- injects rules into per-WorkUnit guest tables *before* the workload starts
-  (``wait_for_rules`` is the init-container handshake);
-- runs a periodic reconcile scan over all guest tables (paper §IV-E measures
-  its cost);
-- **validates collective isolation**: parses compiled HLO and asserts that
-  every collective's replica groups stay inside the tenant's slice — the
-  TPU-native expression of "traffic must not leave the VPC".
+It also **validates collective isolation**: parses compiled HLO and asserts
+that every collective's replica groups stay inside the tenant's slice — the
+TPU-native expression of "traffic must not leave the VPC".
 """
 from __future__ import annotations
 
@@ -26,8 +26,9 @@ import time
 from typing import Any, Dict, List, Optional, Sequence, Set
 
 from .apiserver import APIServer
-from .informer import Informer
-from .store import ADDED, DELETED, MODIFIED
+from .runtime import Controller
+from .store import DELETED
+from .workqueue import WorkQueue
 
 
 class IsolationViolation(Exception):
@@ -65,44 +66,26 @@ class GuestTable:
             return len(self.rules)
 
 
-class MeshRouter:
+class MeshRouter(Controller):
     def __init__(self, super_api: APIServer, *, grpc_latency_ms: float = 0.0,
-                 scan_interval: float = 60.0):
+                 scan_interval: float = 60.0, workers: int = 2):
+        super().__init__("router", queue=WorkQueue("router"), workers=workers,
+                         scan_interval=scan_interval, retry_on=())
         self.super_api = super_api
         self.grpc_latency_ms = grpc_latency_ms   # modelled secure-channel cost
-        self.scan_interval = scan_interval
-        self.svc_informer = Informer(super_api, "Service", name="router/svc")
-        self.unit_informer = Informer(super_api, "WorkUnit", name="router/unit")
-        self.svc_informer.add_handler(self._on_service)
-        self.unit_informer.add_handler(self._on_unit)
+        self.svc_informer = self.add_informer(super_api, "Service",
+                                              handler=self._on_service,
+                                              name="router/svc")
+        self.unit_informer = self.add_informer(super_api, "WorkUnit",
+                                               handler=self._on_unit,
+                                               name="router/unit")
         self._tables: Dict[str, GuestTable] = {}     # unit uid -> table
         self._unit_ns: Dict[str, str] = {}           # unit uid -> namespace
         self._gates: Dict[str, threading.Event] = {}
         self._lock = threading.Lock()
-        self._stop = threading.Event()
-        self._scan_thread: Optional[threading.Thread] = None
         self.rules_injected = 0
         self.scan_duration_sum = 0.0
         self.scan_runs = 0
-
-    # -- lifecycle ---------------------------------------------------------------
-
-    def start(self) -> None:
-        self.svc_informer.start()
-        self.unit_informer.start()
-        self.svc_informer.wait_for_cache_sync()
-        self.unit_informer.wait_for_cache_sync()
-        if self.scan_interval > 0:
-            self._scan_thread = threading.Thread(
-                target=self._scan_loop, name="router-scan", daemon=True)
-            self._scan_thread.start()
-
-    def stop(self) -> None:
-        self._stop.set()
-        self.svc_informer.stop()
-        self.unit_informer.stop()
-        if self._scan_thread:
-            self._scan_thread.join(timeout=2.0)
 
     # -- event plumbing -------------------------------------------------------------
 
@@ -121,7 +104,7 @@ class MeshRouter:
                 self._tables[uid] = GuestTable(uid)
                 self._unit_ns[uid] = unit.metadata.namespace
                 self._gates.setdefault(uid, threading.Event())
-        self._sync_unit_rules(uid, unit.metadata.namespace)
+        self.queue.add((uid, unit.metadata.namespace))
 
     def _on_service(self, ev_type: str, svc: Any) -> None:
         ns = svc.metadata.namespace
@@ -134,7 +117,13 @@ class MeshRouter:
                 if table is not None:
                     table.remove(svc.virtual_ip)
             else:
-                self._sync_unit_rules(uid, ns)
+                self.queue.add((uid, ns))
+
+    # -- reconcile ------------------------------------------------------------------
+
+    def reconcile(self, item: Any) -> None:
+        uid, ns = item
+        self._sync_unit_rules(uid, ns)
 
     def _sync_unit_rules(self, uid: str, ns: str) -> None:
         """Inject all of the namespace's service rules into one guest table."""
@@ -167,11 +156,7 @@ class MeshRouter:
 
     # -- periodic reconcile scan (paper §IV-E) -------------------------------------------
 
-    def _scan_loop(self) -> None:
-        while not self._stop.wait(self.scan_interval):
-            self.scan_once()
-
-    def scan_once(self) -> int:
+    def scan(self) -> int:
         t0 = time.monotonic()
         checked = 0
         with self._lock:

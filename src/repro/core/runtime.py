@@ -1,0 +1,386 @@
+"""Unified controller runtime: one reconciler engine for the whole control
+plane (paper §III-C, Fig.3/5).
+
+Every VirtualCluster controller shares one architecture — informers feed a
+keyed work queue, rate-limited workers call ``reconcile(key)``, and an
+optional periodic scan remediates rare inconsistencies. This module extracts
+that machinery once so the syncer, scheduler, router, tenant operator, and
+node agents declare only *what* they reconcile, not threads or lifecycle:
+
+- ``Controller``   — declared informers + a work queue (plain, delaying, or
+  per-tenant fair) + a ``reconcile(key)`` callback with per-key
+  exponential-backoff retries + an optional periodic ``scan()``;
+- ``ControllerManager`` — start/stop lifecycle in dependency order, health
+  checks, and a process-wide ``MetricsRegistry``;
+- ``MetricsRegistry``   — counters, latency summaries, and live gauges
+  (queue depth, reconcile latency, retries, scan cost) shared by every
+  controller in the process.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import (Any, Callable, Dict, Hashable, List, Optional, Tuple,
+                    Type)
+
+from .apiserver import APIServer
+from .fairqueue import FairWorkQueue
+from .informer import Informer
+from .workqueue import DelayingQueue, RateLimiter, WorkQueue
+
+
+# --------------------------------------------------------------------- metrics
+
+class MetricsRegistry:
+    """Process-wide controller metrics: counters, summaries, gauges.
+
+    Keys are ``name`` plus sorted ``{label=value}`` pairs, Prometheus-style
+    (``reconcile_total{controller=scheduler}``). Gauges are callables
+    evaluated at snapshot time (e.g. live queue depth).
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._counters: Dict[str, float] = {}
+        self._summaries: Dict[str, List[float]] = {}   # [sum, count, max]
+        self._gauges: Dict[str, Callable[[], float]] = {}
+
+    @staticmethod
+    def _key(name: str, labels: Dict[str, Any]) -> str:
+        if not labels:
+            return name
+        inner = ",".join(f"{k}={v}" for k, v in sorted(labels.items()))
+        return f"{name}{{{inner}}}"
+
+    def inc(self, name: str, value: float = 1.0, **labels: Any) -> None:
+        key = self._key(name, labels)
+        with self._lock:
+            self._counters[key] = self._counters.get(key, 0.0) + value
+
+    def observe(self, name: str, value: float, **labels: Any) -> None:
+        key = self._key(name, labels)
+        with self._lock:
+            s = self._summaries.setdefault(key, [0.0, 0.0, 0.0])
+            s[0] += value
+            s[1] += 1
+            s[2] = max(s[2], value)
+
+    def register_gauge(self, name: str, fn: Callable[[], float],
+                       **labels: Any) -> None:
+        key = self._key(name, labels)
+        with self._lock:
+            self._gauges[key] = fn
+
+    def counter(self, name: str, **labels: Any) -> float:
+        with self._lock:
+            return self._counters.get(self._key(name, labels), 0.0)
+
+    def summary(self, name: str, **labels: Any) -> Dict[str, float]:
+        with self._lock:
+            s = self._summaries.get(self._key(name, labels))
+        if s is None:
+            return {"sum": 0.0, "count": 0.0, "mean": 0.0, "max": 0.0}
+        return {"sum": s[0], "count": s[1],
+                "mean": s[0] / s[1] if s[1] else 0.0, "max": s[2]}
+
+    def snapshot(self) -> Dict[str, Any]:
+        with self._lock:
+            counters = dict(self._counters)
+            summaries = {k: {"sum": s[0], "count": s[1],
+                             "mean": s[0] / s[1] if s[1] else 0.0,
+                             "max": s[2]}
+                         for k, s in self._summaries.items()}
+            gauges = list(self._gauges.items())
+        out_gauges: Dict[str, float] = {}
+        for key, fn in gauges:
+            try:
+                out_gauges[key] = float(fn())
+            except Exception:
+                out_gauges[key] = float("nan")
+        return {"counters": counters, "summaries": summaries,
+                "gauges": out_gauges}
+
+
+# ------------------------------------------------------------------ controller
+
+AnyQueue = Any   # WorkQueue | DelayingQueue | FairWorkQueue | None
+
+
+class Controller:
+    """One reconciler: informers -> keyed work queue -> workers -> reconcile.
+
+    Subclasses declare informers via :meth:`add_informer` (usually in
+    ``__init__``; also valid at runtime — e.g. tenant registration), override
+    :meth:`reconcile` (and optionally :meth:`scan`, :meth:`on_start`,
+    :meth:`on_stop`), and pick a queue flavour:
+
+    - ``WorkQueue``      — dedup FIFO;
+    - ``DelayingQueue``  — dedup FIFO + delayed (rate-limited) retries;
+    - ``FairWorkQueue``  — per-tenant sub-queues + WRR dispatch; items are
+      ``(tenant, key)`` tuples and retries re-enter the tenant sub-queue.
+
+    Error policy: exceptions from ``reconcile`` matching ``drop_on`` are
+    forgotten; those matching ``retry_on`` are requeued with per-key
+    exponential backoff (until ``max_retries``); anything else is counted as
+    ``reconcile_errors`` and dropped. Workers never die on reconcile errors.
+    """
+
+    def __init__(self, name: str, *, queue: AnyQueue = None, workers: int = 1,
+                 scan_interval: float = 0.0, batch_size: int = 1,
+                 retry_on: Tuple[Type[BaseException], ...] = (Exception,),
+                 drop_on: Tuple[Type[BaseException], ...] = (),
+                 max_retries: Optional[int] = None,
+                 metrics: Optional[MetricsRegistry] = None):
+        self.name = name
+        self.queue = queue
+        self.workers = workers
+        self.scan_interval = scan_interval
+        self.batch_size = max(1, batch_size)
+        self.retry_on = retry_on
+        self.drop_on = drop_on
+        self.max_retries = max_retries
+        self.metrics = metrics or MetricsRegistry()
+        self.limiter = RateLimiter()
+        self._informers: List[Informer] = []
+        self._threads: List[threading.Thread] = []
+        self._stop = threading.Event()
+        self._running = False
+        self._lifecycle_lock = threading.Lock()
+
+    # -- declaration -------------------------------------------------------
+
+    def add_informer(self, api: APIServer, kind: str,
+                     handler: Optional[Callable[[str, Any], None]] = None,
+                     name: str = "", namespace: Optional[str] = None
+                     ) -> Informer:
+        """Declare (and, if already running, start + sync) an informer."""
+        inf = Informer(api, kind, namespace=namespace,
+                       name=name or f"{self.name}/{kind}")
+        if handler is not None:
+            inf.add_handler(handler)
+        with self._lifecycle_lock:
+            self._informers.append(inf)
+            running = self._running
+        if running:
+            inf.start()
+            inf.wait_for_cache_sync()
+        return inf
+
+    def remove_informer(self, inf: Informer) -> None:
+        with self._lifecycle_lock:
+            if inf in self._informers:
+                self._informers.remove(inf)
+        inf.stop()
+
+    # -- overridables ------------------------------------------------------
+
+    def reconcile(self, key: Hashable) -> None:
+        raise NotImplementedError
+
+    def reconcile_batch(self, keys: List[Hashable]) -> None:
+        """Process a same-tenant batch (fair-queue coalescing); default is
+        item-at-a-time with independent retry accounting."""
+        for key in keys:
+            self._reconcile_one(key)
+
+    def scan(self) -> int:
+        """Periodic remediation pass; returns the number of items touched."""
+        return 0
+
+    def on_start(self) -> None:
+        """Hook run after informer cache sync, before workers start."""
+
+    def on_stop(self) -> None:
+        """Hook run during stop, before worker threads are joined."""
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> None:
+        with self._lifecycle_lock:
+            if self._running:
+                return
+            self._running = True
+            self._stop = threading.Event()   # fresh event: restart works
+            informers = list(self._informers)
+        for inf in informers:
+            inf.start()
+        for inf in informers:
+            inf.wait_for_cache_sync()
+        self.on_start()
+        if self.queue is not None:
+            reopen = getattr(self.queue, "reopen", None)
+            if reopen is not None:
+                reopen()
+            self.metrics.register_gauge(
+                "queue_depth", lambda: len(self.queue), controller=self.name)
+            for i in range(self.workers):
+                t = threading.Thread(target=self._worker,
+                                     name=f"{self.name}-worker-{i}",
+                                     daemon=True)
+                t.start()
+                self._threads.append(t)
+        if self.scan_interval > 0:
+            t = threading.Thread(target=self._scan_loop,
+                                 name=f"{self.name}-scan", daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def stop(self) -> None:
+        with self._lifecycle_lock:
+            if not self._running:
+                return
+            self._running = False
+            informers = list(self._informers)
+            self._stop.set()   # under the lock: a racing start() swaps the
+            #                    event first or sees _running and bails
+        if self.queue is not None:
+            self.queue.shutdown()
+        for inf in informers:
+            inf.stop()
+        self.on_stop()
+        for t in self._threads:
+            t.join(timeout=5.0)
+        self._threads.clear()
+
+    @property
+    def running(self) -> bool:
+        with self._lifecycle_lock:
+            return self._running
+
+    def healthy(self) -> bool:
+        """Running and no worker/scan thread has died."""
+        with self._lifecycle_lock:
+            if not self._running:
+                return False
+            return all(t.is_alive() for t in self._threads)
+
+    # -- worker machinery --------------------------------------------------
+
+    def _worker(self) -> None:
+        q = self.queue
+        fair = isinstance(q, FairWorkQueue)
+        while not self._stop.is_set():
+            if fair and self.batch_size > 1:
+                items = q.get_batch(self.batch_size, timeout=0.2)
+                if not items:
+                    continue
+                self.metrics.observe("batch_size", len(items),
+                                     controller=self.name)
+                self.reconcile_batch(items)
+            else:
+                item = q.get(timeout=0.2)
+                if item is None:
+                    continue
+                self._reconcile_one(item)
+
+    def _reconcile_one(self, item: Hashable) -> None:
+        t0 = time.monotonic()
+        m = self.metrics
+        try:
+            self.reconcile(item)
+            self.limiter.forget(item)
+            m.inc("reconcile_total", controller=self.name)
+        except BaseException as e:
+            if isinstance(e, self.drop_on):
+                self.limiter.forget(item)
+                m.inc("reconcile_dropped", controller=self.name)
+            elif isinstance(e, self.retry_on):
+                self._requeue(item)
+            else:
+                m.inc("reconcile_errors", controller=self.name)
+        finally:
+            m.observe("reconcile_seconds", time.monotonic() - t0,
+                      controller=self.name)
+            self.queue.done(item)
+
+    def _requeue(self, item: Hashable) -> None:
+        delay = self.limiter.when(item)
+        if self.max_retries is not None and \
+                self.limiter.retries(item) > self.max_retries:
+            self.limiter.forget(item)
+            self.metrics.inc("reconcile_exhausted", controller=self.name)
+            return
+        self.metrics.inc("reconcile_retries", controller=self.name)
+        q = self.queue
+        if isinstance(q, FairWorkQueue):
+            q.add(*item)                # re-enters the tenant sub-queue
+        elif isinstance(q, DelayingQueue):
+            q.add_after(item, delay)
+        else:
+            q.add(item)
+
+    # -- periodic scan -----------------------------------------------------
+
+    def _scan_loop(self) -> None:
+        while not self._stop.wait(self.scan_interval):
+            self.scan_once()
+
+    def scan_once(self) -> int:
+        t0 = time.monotonic()
+        n = self.scan()
+        dur = time.monotonic() - t0
+        m = self.metrics
+        m.inc("scan_runs", controller=self.name)
+        m.inc("scan_items", float(n), controller=self.name)
+        m.observe("scan_seconds", dur, controller=self.name)
+        return n
+
+
+# --------------------------------------------------------------------- manager
+
+class ControllerManager:
+    """Owns controller lifecycle and the shared metrics registry.
+
+    Controllers start in registration order and stop in reverse, so wiring
+    the cluster is just ``add()`` calls in dependency order. Adding to a
+    started manager starts the controller immediately.
+    """
+
+    def __init__(self, metrics: Optional[MetricsRegistry] = None):
+        self.metrics = metrics or MetricsRegistry()
+        self._controllers: List[Controller] = []
+        self._lock = threading.Lock()
+        self._started = False
+
+    def add(self, *controllers: Controller) -> None:
+        with self._lock:
+            started = self._started
+            for c in controllers:
+                c.metrics = self.metrics
+                self._controllers.append(c)
+        if started:
+            for c in controllers:
+                c.start()
+
+    def controller(self, name: str) -> Optional[Controller]:
+        with self._lock:
+            for c in self._controllers:
+                if c.name == name:
+                    return c
+        return None
+
+    def start(self) -> None:
+        with self._lock:
+            self._started = True
+            controllers = list(self._controllers)
+        for c in controllers:
+            c.start()
+
+    def stop(self) -> None:
+        with self._lock:
+            self._started = False
+            controllers = list(self._controllers)
+        for c in reversed(controllers):
+            c.stop()
+
+    def healthy(self) -> Dict[str, bool]:
+        with self._lock:
+            controllers = list(self._controllers)
+        return {c.name: c.healthy() for c in controllers}
+
+    def __enter__(self) -> "ControllerManager":
+        self.start()
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.stop()

@@ -7,6 +7,10 @@ per second". This sequential scheduler is deliberately the reproduction
 baseline; ``parallel_scorers`` enables the beyond-paper improvement measured
 in EXPERIMENTS.md §Perf (control-plane track).
 
+Runs on the shared controller runtime: a single worker drains a delaying
+queue fed by the WorkUnit informer; failed placements retry with per-key
+exponential backoff; vanished units are dropped.
+
 Scheduling honours:
 - chip capacity (bin packing, least-allocated scoring);
 - node selectors;
@@ -18,55 +22,40 @@ from __future__ import annotations
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Dict, List, Optional
+from typing import Any, Dict, List
 
 from .apiserver import APIServer
-from .informer import Informer
 from .objects import Node, WorkUnit
-from .store import ADDED, MODIFIED, ConflictError, NotFoundError
-from .workqueue import DelayingQueue, RateLimiter
+from .runtime import Controller
+from .store import ADDED, MODIFIED, NotFoundError
+from .workqueue import DelayingQueue
 
 
-class SuperScheduler:
+class SuperScheduler(Controller):
     def __init__(self, api: APIServer, *, parallel_scorers: int = 0,
                  straggler_penalty_ms: float = 50.0):
+        super().__init__("scheduler", queue=DelayingQueue("sched"), workers=1,
+                         retry_on=(Exception,), drop_on=(NotFoundError,))
         self.api = api
         self.parallel_scorers = parallel_scorers
         self.straggler_penalty_ms = straggler_penalty_ms
-        self.queue = DelayingQueue("sched")
-        self.limiter = RateLimiter()
-        self.node_informer = Informer(api, "Node", name="sched/nodes")
-        self.unit_informer = Informer(api, "WorkUnit", name="sched/units")
-        self.unit_informer.add_handler(self._on_unit)
+        self.node_informer = self.add_informer(api, "Node", name="sched/nodes")
+        self.unit_informer = self.add_informer(api, "WorkUnit",
+                                               handler=self._on_unit,
+                                               name="sched/units")
         self._alloc_lock = threading.Lock()
         # scheduler-local view of allocatable chips (authoritative between binds)
         self._alloc: Dict[str, int] = {}
-        self._thread: Optional[threading.Thread] = None
-        self._stop = threading.Event()
         self.scheduled_count = 0
         self.failed_count = 0
         self.bind_latency_sum = 0.0
 
-    # -- lifecycle -------------------------------------------------------------
+    # -- lifecycle hooks ---------------------------------------------------------
 
-    def start(self) -> None:
-        self.node_informer.start()
-        self.unit_informer.start()
-        self.node_informer.wait_for_cache_sync()
-        self.unit_informer.wait_for_cache_sync()
+    def on_start(self) -> None:
         with self._alloc_lock:
             for n in self.node_informer.cache.list():
                 self._alloc[n.metadata.name] = n.status.allocatable_chips
-        self._thread = threading.Thread(target=self._loop, name="scheduler", daemon=True)
-        self._thread.start()
-
-    def stop(self) -> None:
-        self._stop.set()
-        self.queue.shutdown()
-        self.node_informer.stop()
-        self.unit_informer.stop()
-        if self._thread:
-            self._thread.join(timeout=5.0)
 
     # -- event handlers ----------------------------------------------------------
 
@@ -91,25 +80,11 @@ class SuperScheduler:
         with self._alloc_lock:
             self._alloc[node_name] = chips
 
-    # -- the single-queue loop (paper's bottleneck) --------------------------------
+    # -- reconcile (the paper's sequential bottleneck: workers == 1) -------------
 
-    def _loop(self) -> None:
-        while not self._stop.is_set():
-            item = self.queue.get(timeout=0.2)
-            if item is None:
-                continue
-            ns, name = item
-            try:
-                self._schedule_one(ns, name)
-                self.limiter.forget(item)
-            except ConflictError:
-                self.queue.add_after(item, self.limiter.when(item))
-            except NotFoundError:
-                pass
-            except Exception:
-                self.queue.add_after(item, self.limiter.when(item))
-            finally:
-                self.queue.done(item)
+    def reconcile(self, item: Any) -> None:
+        ns, name = item
+        self._schedule_one(ns, name)
 
     def _schedule_one(self, ns: str, name: str) -> None:
         unit = self.unit_informer.cache.get(ns, name)

@@ -107,6 +107,32 @@ class ObjectStore:
             self._notify(WatchEvent(ADDED, deepcopy_obj(stored), self._rv))
             return deepcopy_obj(stored)
 
+    def create_many(self, objs: List[Any]) -> Tuple[List[Any], List[Any]]:
+        """Batched create under ONE lock round (etcd-txn analogue).
+
+        Returns ``(created, conflicted)`` — objects whose key already existed
+        are returned in ``conflicted`` instead of raising, so callers can
+        coalesce a burst and fall back per-item only for the losers.
+        """
+        created: List[Any] = []
+        conflicted: List[Any] = []
+        with self._lock:
+            for obj in objs:
+                key = obj_key(obj)
+                if key in self._objects:
+                    conflicted.append(obj)
+                    continue
+                stored = deepcopy_obj(obj)
+                self._rv += 1
+                stored.metadata.uid = stored.metadata.uid or new_uid()
+                stored.metadata.resource_version = self._rv
+                stored.metadata.creation_timestamp = (
+                    stored.metadata.creation_timestamp or time.time())
+                self._objects[key] = stored
+                self._notify(WatchEvent(ADDED, deepcopy_obj(stored), self._rv))
+                created.append(deepcopy_obj(stored))
+        return created, conflicted
+
     def get(self, kind: str, namespace: str, name: str) -> Any:
         with self._lock:
             obj = self._objects.get((kind, namespace, name))

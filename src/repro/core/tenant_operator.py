@@ -5,72 +5,53 @@ tenant-control-plane lifecycle: provision a dedicated apiserver+store per
 tenant ("local mode"), store its kubeconfig as a Secret in the super cluster
 so the syncer can reach every tenant plane, register the tenant with the
 syncer and the vn-agents, and tear everything down on delete.
+
+Runs on the shared controller runtime: one informer, a delaying queue, one
+worker, rate-limited retries on provisioning errors.
 """
 from __future__ import annotations
 
 import threading
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 from .agent import VnAgent
 from .apiserver import APIServer, TenantControlPlane
 from .objects import Secret, VirtualClusterCR
-from .store import ADDED, DELETED, MODIFIED, AlreadyExistsError, NotFoundError
+from .runtime import Controller
+from .store import DELETED, AlreadyExistsError, NotFoundError
 from .syncer import Syncer
-from .informer import Informer
 from .workqueue import DelayingQueue
 
 
 OPERATOR_NS = "vc-system"
 
 
-class TenantOperator:
+class TenantOperator(Controller):
     def __init__(self, super_api: APIServer, syncer: Syncer,
                  vn_agents: Optional[List[VnAgent]] = None):
+        super().__init__("tenant-operator",
+                         queue=DelayingQueue("tenant-operator"), workers=1,
+                         retry_on=(Exception,))
         self.super_api = super_api
         self.syncer = syncer
         self.vn_agents = vn_agents or []
-        self.queue = DelayingQueue("tenant-operator")
-        self.informer = Informer(super_api, "VirtualClusterCR", name="operator/vc")
-        self.informer.add_handler(self._on_vc)
+        self.informer = self.add_informer(super_api, "VirtualClusterCR",
+                                          handler=self._on_vc,
+                                          name="operator/vc")
         self.planes: Dict[str, TenantControlPlane] = {}
         self._lock = threading.Lock()
-        self._stop = threading.Event()
-        self._thread: Optional[threading.Thread] = None
-
-    def start(self) -> None:
-        self.informer.start()
-        self.informer.wait_for_cache_sync()
-        self._thread = threading.Thread(target=self._loop, name="tenant-operator",
-                                        daemon=True)
-        self._thread.start()
-
-    def stop(self) -> None:
-        self._stop.set()
-        self.queue.shutdown()
-        self.informer.stop()
-        if self._thread:
-            self._thread.join(timeout=5.0)
 
     def _on_vc(self, ev_type: str, vc: VirtualClusterCR) -> None:
         self.queue.add((ev_type == DELETED, vc.metadata.name))
 
-    def _loop(self) -> None:
-        while not self._stop.is_set():
-            item = self.queue.get(timeout=0.2)
-            if item is None:
-                continue
-            deleted, name = item
-            try:
-                if deleted:
-                    self._teardown(name)
-                else:
-                    self._reconcile(name)
-            except Exception:
-                self.queue.add_after(item, 0.05)
-            finally:
-                self.queue.done(item)
+    def reconcile(self, item: Any) -> None:
+        deleted, name = item
+        if deleted:
+            self._teardown(name)
+        else:
+            self._reconcile_vc(name)
 
-    def _reconcile(self, name: str) -> None:
+    def _reconcile_vc(self, name: str) -> None:
         vc = self.informer.cache.get("", name)
         if vc is None:
             self._teardown(name)

@@ -83,6 +83,11 @@ class WorkQueue:
             self._shutdown = True
             self._cv.notify_all()
 
+    def reopen(self) -> None:
+        """Accept work again after shutdown() (controller restart)."""
+        with self._cv:
+            self._shutdown = False
+
     @property
     def is_shutdown(self) -> bool:
         with self._lock:

@@ -10,6 +10,13 @@ from typing import Tuple
 
 import jax
 
+from ..compat import abstract_mesh
+
+PRODUCTION_SHAPES = {
+    False: ((16, 16), ("data", "model")),
+    True: ((2, 16, 16), ("pod", "data", "model")),
+}
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """v5e production mesh: one pod = 16x16 = 256 chips; two pods = 512.
@@ -19,9 +26,15 @@ def make_production_mesh(*, multi_pod: bool = False):
     parallelism; "model" is the tensor/expert/sequence-parallel axis kept
     inside a pod (ICI-local).
     """
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    shape, axes = PRODUCTION_SHAPES[multi_pod]
     return jax.make_mesh(shape, axes)
+
+
+def make_abstract_production_mesh(*, multi_pod: bool = False):
+    """Device-free production mesh for planners/spec generation (safe to call
+    before jax device init — e.g. under the dry-run's XLA_FLAGS dance)."""
+    shape, axes = PRODUCTION_SHAPES[multi_pod]
+    return abstract_mesh(shape, axes)
 
 
 def make_test_mesh(shape: Tuple[int, ...] = (2, 4),

@@ -156,7 +156,8 @@ def _out_proj(out, wo, cfg, compute_dtype):
         manual.add(fa)
     if bd:
         manual.update((bd,) if isinstance(bd, str) else bd)
-    return jax.shard_map(
+    from ..compat import shard_map
+    return shard_map(
         body, mesh=mesh,
         in_specs=(P(bd, None, axis), P(axis, fa)),
         out_specs=P(bd, axis, None),

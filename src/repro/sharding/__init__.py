@@ -1,6 +1,8 @@
+from ..compat import abstract_mesh
 from .api import ShardingRules, active_rules, shard, use_rules
 
-__all__ = ["ShardingRules", "shard", "use_rules", "active_rules"]
+__all__ = ["ShardingRules", "shard", "use_rules", "active_rules",
+           "abstract_mesh"]
 
 # NOTE: repro.sharding.planner is imported directly (not re-exported here) to
 # avoid a circular import: models -> sharding.api, planner -> models.

@@ -1,0 +1,18 @@
+"""Shared test configuration: optional-dependency guards.
+
+``hypothesis`` is a dev-only dependency (declared in pyproject's ``dev``
+extra). When it is absent, the property-based test modules are skipped at
+collection instead of erroring the whole run.
+"""
+import importlib.util
+
+HYPOTHESIS_TEST_MODULES = [
+    "test_models.py",
+    "test_store.py",
+    "test_training_data_ckpt.py",
+    "test_workqueue.py",
+]
+
+collect_ignore = []
+if importlib.util.find_spec("hypothesis") is None:
+    collect_ignore.extend(HYPOTHESIS_TEST_MODULES)

@@ -10,6 +10,10 @@ import sys
 
 import pytest
 
+from repro.compat import shard_map  # noqa: F401 — the models' explicit-SP
+# shard_maps route through this shim; importing here fails fast (with a
+# readable error) if the installed jax satisfies neither API surface.
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -1,18 +1,13 @@
 """Sharding planner: strategy selection, divisibility fallbacks, spec
 generation (no devices needed — uses an abstract mesh)."""
-import jax
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import abstract_mesh
 from repro.configs import REGISTRY, get_shape
 from repro.sharding.api import ShardingRules
 from repro.sharding.planner import plan_for
-
-
-def abstract_mesh(shape, axes):
-    return jax.sharding.AbstractMesh(shape, axes)
-
 
 MESH1 = abstract_mesh((16, 16), ("data", "model"))
 MESH2 = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
