@@ -38,7 +38,8 @@ def _csv_row(rec) -> str:
             break
     derived = []
     for key in ("vc_p99_s", "base_p99_s", "vc_throughput_per_s",
-                "downward_throughput_per_s", "queue_wait_mean_ms",
+                "downward_throughput_per_s", "throughput_per_s",
+                "queue_wait_mean_ms",
                 "base_throughput_per_s", "degradation", "avg_cpus",
                 "cache_bytes_per_unit", "scan_s", "restart_rebuild_s",
                 "regular_worst_s", "greedy_mean_s", "gated_total_s",

@@ -1,15 +1,23 @@
 """Sharded-syncer scale sweep -> BENCH_syncer_shards.json.
 
-Measures pure downward-sync throughput (tenant create -> super-cluster copy)
-of a standalone Syncer at shard counts {1, 2, 4, 8}: T tenants burst N
-WorkUnit creations each into their control planes, and the clock stops when
-every projected object exists in the super cluster. The total downward
-worker count is held constant across configurations, so the sweep isolates
-the effect of per-shard queues + same-tenant batch coalescing over one
-global fair queue.
+Measures downward-sync throughput of a standalone Syncer at shard counts
+{1, 2, 4, 8} across three workloads:
 
-Config ``shards=1, batch=1`` is the pre-sharding baseline (the paper's
-single syncer).
+- ``create``  — T tenants burst N WorkUnit creations each; the clock stops
+  when every projected object exists in the super cluster.
+- ``update``  — the same units pre-created and synced, then every tenant
+  bursts a spec update per unit; the clock stops when every super copy shows
+  the new spec (exercises the batched ``update_batch`` fast lane).
+- ``churn``   — a create/update/delete mix per tenant against a pre-synced
+  population (exercises all three batched write paths at once).
+
+The total downward worker count is held constant across configurations, so
+each sweep isolates the effect of per-shard queues + same-tenant batch
+coalescing + per-shard super-API clients over one global fair queue.
+
+Config ``shards=1, batch=1`` is the per-item baseline (the paper's single
+syncer). ``--smoke`` runs a seconds-scale config for CI; ``--full`` the
+larger tracked workload.
 """
 from __future__ import annotations
 
@@ -17,15 +25,48 @@ import json
 import statistics
 import threading
 import time
-from typing import Dict, List
+from typing import Callable, Dict, List
 
-from repro.core import APIServer, Namespace, Syncer, TenantControlPlane
+from repro.core import APIServer, Namespace, Syncer, TenantControlPlane, WorkUnit
 
 OUT_PATH = "BENCH_syncer_shards.json"
+UPDATED_CHIPS = 123        # spec marker the update/churn waits look for
 
 
-def _run_config(shards: int, batch: int, tenants: int, per_tenant: int,
-                downward_workers: int = 20) -> Dict:
+def _mk_unit(name: str) -> WorkUnit:
+    u = WorkUnit()
+    u.metadata.name = name
+    u.metadata.namespace = "bench"
+    return u
+
+
+def _count_super(super_api: APIServer, pred: Callable) -> int:
+    """Cheap predicate poll over live super WorkUnits (no deepcopies);
+    count-only waits use the public ``ObjectStore.count`` instead."""
+    store = super_api.store
+    with store._lock:
+        return sum(1 for (k, _, _), o in store._objects.items()
+                   if k == "WorkUnit" and pred(o))
+
+
+def _wait(cond: Callable[[], bool], timeout: float = 600.0) -> None:
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if cond():
+            return
+        time.sleep(0.01)
+    raise TimeoutError("benchmark wait timed out")
+
+
+def _fanout(planes, fn) -> None:
+    threads = [threading.Thread(target=fn, args=(p,)) for p in planes]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+
+def _rig(shards: int, batch: int, tenants: int, downward_workers: int):
     super_api = APIServer("super")
     syncer = Syncer(super_api, downward_workers=downward_workers,
                     upward_workers=4, scan_interval=0.0,
@@ -34,96 +75,200 @@ def _run_config(shards: int, batch: int, tenants: int, per_tenant: int,
     for i, p in enumerate(planes):
         syncer.register_tenant(p, f"uid-{i:03d}")
     syncer.start()
+    for p in planes:
+        ns = Namespace()
+        ns.metadata.name = "bench"
+        p.api.create(ns)
+    return super_api, syncer, planes
+
+
+def _batch_totals(syncer: Syncer):
+    """(sum, count) of realized dequeue batch sizes across all shards."""
+    snap = syncer.up_controller.metrics.snapshot()
+    down = [s for k, s in snap["summaries"].items()
+            if k.startswith("batch_size{controller=syncer-dws")]
+    return sum(s["sum"] for s in down), sum(s["count"] for s in down)
+
+
+def _reset_phase_stats(syncer: Syncer):
+    """Start a fresh measurement phase: drop queue-wait samples accumulated
+    by un-timed pre-population and return the batch-size baseline to
+    subtract, so reported stats describe only the timed phase."""
+    for c in syncer.shard_controllers:
+        c.queue.per_tenant_wait.clear()
+    return _batch_totals(syncer)
+
+
+def _collect(syncer: Syncer, super_api: APIServer, rec: Dict,
+             batch_base=(0.0, 0.0)) -> Dict:
+    waits: List[float] = []
+    for c in syncer.shard_controllers:
+        for per in c.queue.per_tenant_wait.values():
+            waits.extend(per)
+    bsum, bcount = _batch_totals(syncer)
+    mean_batch = ((bsum - batch_base[0])
+                  / max(1.0, bcount - batch_base[1]))
+    rec["queue_wait_mean_ms"] = (statistics.mean(waits) * 1e3
+                                 if waits else 0.0)
+    rec["mean_dequeue_batch"] = mean_batch
+    return rec
+
+
+def _run_create(shards, batch, tenants, per_tenant, downward_workers=20) -> Dict:
+    super_api, syncer, planes = _rig(shards, batch, tenants, downward_workers)
     try:
-        for p in planes:
-            ns = Namespace()
-            ns.metadata.name = "bench"
-            p.api.create(ns)
         total = tenants * per_tenant
         t0 = time.monotonic()
 
         def submit(plane):
             for j in range(per_tenant):
-                from repro.core import WorkUnit
-                u = WorkUnit()
-                u.metadata.name = f"u{j:05d}"
-                u.metadata.namespace = "bench"
-                plane.api.create(u)
+                plane.api.create(_mk_unit(f"u{j:05d}"))
 
-        threads = [threading.Thread(target=submit, args=(p,)) for p in planes]
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join()
+        _fanout(planes, submit)
         submit_s = time.monotonic() - t0
-        deadline = time.monotonic() + 600
-        while time.monotonic() < deadline:
-            if super_api.store.count("WorkUnit") >= total:
-                break
-            time.sleep(0.01)
+        _wait(lambda: super_api.store.count("WorkUnit") >= total)
         elapsed = time.monotonic() - t0
-        synced = super_api.store.count("WorkUnit")
-
-        # per-tenant queue-wait means across all shard queues
-        waits: List[float] = []
-        for c in syncer.shard_controllers:
-            for per in c.queue.per_tenant_wait.values():
-                waits.extend(per)
-        snap = syncer.up_controller.metrics.snapshot()
-        down_batches = [s for k, s in snap["summaries"].items()
-                        if k.startswith("batch_size{controller=syncer-dws")]
-        mean_batch = (sum(s["sum"] for s in down_batches)
-                      / max(1.0, sum(s["count"] for s in down_batches)))
-        return {
-            "shards": shards, "batch": batch,
-            "tenants": tenants, "units": total,
-            "downward_workers": downward_workers,
-            "synced": synced,
-            "submit_s": submit_s,
-            "elapsed_s": elapsed,
-            "downward_throughput_per_s": synced / elapsed if elapsed else 0.0,
-            "queue_wait_mean_ms": (statistics.mean(waits) * 1e3
-                                   if waits else 0.0),
-            "mean_dequeue_batch": mean_batch,
-        }
+        return _collect(syncer, super_api, {
+            "shards": shards, "batch": batch, "tenants": tenants,
+            "ops": total, "downward_workers": downward_workers,
+            "submit_s": submit_s, "elapsed_s": elapsed,
+            "throughput_per_s": total / elapsed if elapsed else 0.0,
+        })
     finally:
         syncer.stop()
         super_api.close()
 
 
-def run(full: bool = False, out_path: str = OUT_PATH) -> List[Dict]:
-    tenants, per_tenant = (32, 300) if full else (16, 120)
-    configs = [(1, 1), (1, 8), (2, 8), (4, 8), (8, 8)]
-    out: List[Dict] = []
-    for shards, batch in configs:
-        rec = _run_config(shards, batch, tenants, per_tenant)
-        rec["name"] = f"syncer_shards/s{shards}_b{batch}"
-        out.append(rec)
-        print(f"  shards={shards} batch={batch}: "
-              f"{rec['downward_throughput_per_s']:.0f} units/s "
-              f"(elapsed {rec['elapsed_s']:.2f}s, queue wait "
-              f"{rec['queue_wait_mean_ms']:.1f}ms, mean batch "
-              f"{rec['mean_dequeue_batch']:.1f})", flush=True)
-    baseline = out[0]["downward_throughput_per_s"]
-    best = max(out, key=lambda r: r["downward_throughput_per_s"])
-    result = {
+def _run_update(shards, batch, tenants, per_tenant, downward_workers=20) -> Dict:
+    super_api, syncer, planes = _rig(shards, batch, tenants, downward_workers)
+    try:
+        total = tenants * per_tenant
+        _fanout(planes, lambda p: [p.api.create(_mk_unit(f"u{j:05d}"))
+                                   for j in range(per_tenant)])
+        _wait(lambda: super_api.store.count("WorkUnit") >= total)
+        time.sleep(0.1)   # let super informer caches settle on the creates
+        batch_base = _reset_phase_stats(syncer)
+        t0 = time.monotonic()
+
+        def submit(plane):
+            for j in range(per_tenant):
+                u = plane.api.get("WorkUnit", "bench", f"u{j:05d}")
+                u.spec.chips = UPDATED_CHIPS
+                plane.api.update(u)
+
+        _fanout(planes, submit)
+        submit_s = time.monotonic() - t0
+        _wait(lambda: _count_super(
+            super_api, lambda o: o.spec.chips == UPDATED_CHIPS) >= total)
+        elapsed = time.monotonic() - t0
+        return _collect(syncer, super_api, {
+            "shards": shards, "batch": batch, "tenants": tenants,
+            "ops": total, "downward_workers": downward_workers,
+            "submit_s": submit_s, "elapsed_s": elapsed,
+            "throughput_per_s": total / elapsed if elapsed else 0.0,
+        }, batch_base)
+    finally:
+        syncer.stop()
+        super_api.close()
+
+
+def _run_churn(shards, batch, tenants, per_tenant, downward_workers=20) -> Dict:
+    """Pre-sync ``per_tenant`` units, then per tenant interleave K creates,
+    K spec updates, and K deletes (K = per_tenant // 3)."""
+    super_api, syncer, planes = _rig(shards, batch, tenants, downward_workers)
+    try:
+        base = tenants * per_tenant
+        k = max(1, per_tenant // 3)
+        _fanout(planes, lambda p: [p.api.create(_mk_unit(f"u{j:05d}"))
+                                   for j in range(per_tenant)])
+        _wait(lambda: super_api.store.count("WorkUnit") >= base)
+        time.sleep(0.1)
+        batch_base = _reset_phase_stats(syncer)
+        t0 = time.monotonic()
+
+        def submit(plane):
+            for i in range(k):
+                plane.api.create(_mk_unit(f"c{i:05d}"))
+                u = plane.api.get("WorkUnit", "bench", f"u{i:05d}")
+                u.spec.chips = UPDATED_CHIPS
+                plane.api.update(u)
+                plane.api.delete("WorkUnit", "bench",
+                                 f"u{per_tenant - 1 - i:05d}")
+
+        _fanout(planes, submit)
+        submit_s = time.monotonic() - t0
+        # end state: creates landed, updates visible, deletes gone
+        _wait(lambda: (
+            _count_super(super_api,
+                         lambda o: o.metadata.name.startswith("c")) >= tenants * k
+            and _count_super(super_api,
+                             lambda o: o.spec.chips == UPDATED_CHIPS) >= tenants * k
+            and super_api.store.count("WorkUnit") <= base))
+        elapsed = time.monotonic() - t0
+        ops = tenants * k * 3
+        return _collect(syncer, super_api, {
+            "shards": shards, "batch": batch, "tenants": tenants,
+            "ops": ops, "downward_workers": downward_workers,
+            "submit_s": submit_s, "elapsed_s": elapsed,
+            "throughput_per_s": ops / elapsed if elapsed else 0.0,
+        }, batch_base)
+    finally:
+        syncer.stop()
+        super_api.close()
+
+
+SCENARIOS = {
+    "create": _run_create,
+    "update": _run_update,
+    "churn": _run_churn,
+}
+
+
+def run(full: bool = False, smoke: bool = False,
+        out_path: str = OUT_PATH) -> List[Dict]:
+    if smoke:
+        tenants, per_tenant = 4, 24
+        configs = [(1, 1), (2, 4)]
+        if out_path == OUT_PATH:
+            # never clobber the tracked full-scale series with smoke numbers
+            out_path = "/tmp/BENCH_syncer_shards_smoke.json"
+    else:
+        tenants, per_tenant = (32, 300) if full else (16, 120)
+        configs = [(1, 1), (1, 8), (2, 8), (4, 8), (8, 8)]
+    result: Dict = {
         "workload": {"tenants": tenants, "units_per_tenant": per_tenant},
-        "baseline_shards1_throughput_per_s": baseline,
-        "best": {"name": best["name"],
-                 "throughput_per_s": best["downward_throughput_per_s"],
-                 "speedup_vs_single_shard": (
-                     best["downward_throughput_per_s"] / baseline
-                     if baseline else 0.0)},
-        "sweep": out,
+        "scenarios": {},
     }
+    for scenario, fn in SCENARIOS.items():
+        sweep: List[Dict] = []
+        for shards, batch in configs:
+            rec = fn(shards, batch, tenants, per_tenant)
+            rec["name"] = f"syncer_shards/{scenario}/s{shards}_b{batch}"
+            sweep.append(rec)
+            print(f"  {scenario} shards={shards} batch={batch}: "
+                  f"{rec['throughput_per_s']:.0f} ops/s "
+                  f"(elapsed {rec['elapsed_s']:.2f}s, queue wait "
+                  f"{rec['queue_wait_mean_ms']:.1f}ms, mean batch "
+                  f"{rec['mean_dequeue_batch']:.1f})", flush=True)
+        baseline = sweep[0]["throughput_per_s"]
+        best = max(sweep, key=lambda r: r["throughput_per_s"])
+        result["scenarios"][scenario] = {
+            "baseline_per_item_throughput_per_s": baseline,
+            "best": {"name": best["name"],
+                     "throughput_per_s": best["throughput_per_s"],
+                     "speedup_vs_per_item": (best["throughput_per_s"] / baseline
+                                             if baseline else 0.0)},
+            "sweep": sweep,
+        }
+        print(f"  {scenario}: best {best['name']} "
+              f"{result['scenarios'][scenario]['best']['speedup_vs_per_item']:.2f}x "
+              f"vs per-item baseline", flush=True)
     with open(out_path, "w") as f:
         json.dump(result, f, indent=1)
-    print(f"  wrote {out_path}: best {best['name']} "
-          f"{result['best']['speedup_vs_single_shard']:.2f}x vs single shard",
-          flush=True)
-    return out
+    print(f"  wrote {out_path}", flush=True)
+    return [rec for s in result["scenarios"].values() for rec in s["sweep"]]
 
 
 if __name__ == "__main__":
     import sys
-    run(full="--full" in sys.argv)
+    run(full="--full" in sys.argv, smoke="--smoke" in sys.argv)

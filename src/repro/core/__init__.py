@@ -1,6 +1,6 @@
 """VirtualCluster core: the paper's multi-tenant control plane."""
 from .agent import CallableProvider, MockProvider, NodeAgent, Provider, VnAgent
-from .apiserver import APIServer, TenantControlPlane
+from .apiserver import APIClient, APIServer, TenantControlPlane
 from .cluster import VirtualClusterFramework
 from .fairqueue import FairWorkQueue
 from .informer import Informer, InformerCache
@@ -11,17 +11,17 @@ from .runtime import Controller, ControllerManager, MetricsRegistry
 from .scheduler import SuperScheduler
 from .store import (ADDED, DELETED, MODIFIED, AlreadyExistsError,
                     ConflictError, NotFoundError, ObjectStore)
-from .syncer import Syncer, ns_prefix, shard_for
+from .syncer import ShardRing, Syncer, ns_prefix, shard_for
 from .tenant_operator import TenantOperator
 from .vnode import VNodeManager
 from .workqueue import DelayingQueue, RateLimiter, WorkQueue
 
 __all__ = [
-    "APIServer", "TenantControlPlane", "VirtualClusterFramework",
+    "APIClient", "APIServer", "TenantControlPlane", "VirtualClusterFramework",
     "Controller", "ControllerManager", "MetricsRegistry",
     "FairWorkQueue", "WorkQueue", "DelayingQueue", "RateLimiter",
     "Informer", "InformerCache", "ObjectStore", "Syncer", "ns_prefix",
-    "shard_for",
+    "shard_for", "ShardRing",
     "SuperScheduler", "TenantOperator", "VNodeManager", "MeshRouter",
     "IsolationViolation", "NodeAgent", "VnAgent", "Provider", "MockProvider",
     "CallableProvider", "WorkUnit", "WorkUnitSpec", "Service", "Secret",

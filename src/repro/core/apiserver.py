@@ -5,14 +5,17 @@ dedicated ObjectStore (paper: "a dedicated etcd can be assigned to each tenant
 control plane"). It adds:
 - token-bucket request rate limiting (k8s built-in client rate limits);
 - request metrics (the Fig.1 interference story becomes measurable);
-- a bearer credential whose hash identifies the tenant (used by VnAgent).
+- a bearer credential whose hash identifies the tenant (used by VnAgent);
+- per-client handles (:meth:`APIServer.client`): thin views over the shared
+  store, each with a dedicated token bucket, so independent callers (e.g.
+  syncer shards) don't serialize on one bucket lock.
 """
 from __future__ import annotations
 
 import hashlib
 import threading
 import time
-from typing import Any, Callable, List, Optional
+from typing import Any, Callable, List, Optional, Tuple
 
 from .objects import new_uid
 from .store import ObjectStore
@@ -48,25 +51,29 @@ class TokenBucket:
             time.sleep(need)
 
 
-class APIServer:
-    """CRUD/list/watch facade over one ObjectStore."""
+class APIClient:
+    """Rate-limited CRUD/list/watch handle over a (possibly shared) ObjectStore.
 
-    def __init__(self, name: str, qps: float = 50_000.0, burst: int = 100_000):
+    Every client has its OWN token bucket and request counters; many clients
+    may front one store (the k8s picture: many connections, one apiserver
+    storage). :class:`APIServer` is itself the default client that owns the
+    store; extra handles come from :meth:`APIServer.client`.
+    """
+
+    def __init__(self, name: str, store: ObjectStore,
+                 qps: float = 50_000.0, burst: int = 100_000):
         self.name = name
-        self.store = ObjectStore(name)
-        self.credential = new_uid()          # bearer token for this plane
+        self.store = store
+        self.qps = qps
+        self.burst = burst
         self._bucket = TokenBucket(qps, burst)
         self._lock = threading.Lock()
         self.request_count = 0
         self.request_latency_sum = 0.0
 
-    @property
-    def credential_hash(self) -> str:
-        return hashlib.sha256(self.credential.encode()).hexdigest()[:16]
-
-    def _req(self, fn: Callable[[], Any]) -> Any:
+    def _req(self, fn: Callable[[], Any], tokens: int = 1) -> Any:
         t0 = time.monotonic()
-        self._bucket.take()
+        self._bucket.take(n=tokens)
         out = fn()
         with self._lock:
             self.request_count += 1
@@ -78,16 +85,11 @@ class APIServer:
     def create(self, obj: Any) -> Any:
         return self._req(lambda: self.store.create(obj))
 
-    def create_batch(self, objs: List[Any]) -> Any:
+    def create_batch(self, objs: List[Any]) -> Tuple[List[Any], List[Any]]:
         """Batched create: one request, ``len(objs)`` rate-limit tokens.
         Returns ``(created, conflicted)`` (see ``ObjectStore.create_many``)."""
-        t0 = time.monotonic()
-        self._bucket.take(n=max(1, len(objs)))
-        out = self.store.create_many(objs)
-        with self._lock:
-            self.request_count += 1
-            self.request_latency_sum += time.monotonic() - t0
-        return out
+        return self._req(lambda: self.store.create_many(objs),
+                         tokens=max(1, len(objs)))
 
     def get(self, kind: str, namespace: str, name: str) -> Any:
         return self._req(lambda: self.store.get(kind, namespace, name))
@@ -95,12 +97,26 @@ class APIServer:
     def update(self, obj: Any, *, force: bool = False) -> Any:
         return self._req(lambda: self.store.update(obj, force=force))
 
+    def update_batch(self, objs: List[Any], *, force: bool = False
+                     ) -> Tuple[List[Any], List[Any]]:
+        """Batched update: one request, ``len(objs)`` rate-limit tokens.
+        Returns ``(updated, conflicted)`` (see ``ObjectStore.update_many``)."""
+        return self._req(lambda: self.store.update_many(objs, force=force),
+                         tokens=max(1, len(objs)))
+
     def update_status(self, kind: str, namespace: str, name: str,
                       mutate: Callable[[Any], None]) -> Any:
         return self._req(lambda: self.store.update_status(kind, namespace, name, mutate))
 
     def delete(self, kind: str, namespace: str, name: str) -> Any:
         return self._req(lambda: self.store.delete(kind, namespace, name))
+
+    def delete_batch(self, keys: List[Tuple[str, str, str]]
+                     ) -> Tuple[List[Any], List[Tuple[str, str, str]]]:
+        """Batched delete: one request, ``len(keys)`` rate-limit tokens.
+        Returns ``(deleted, missing)`` (see ``ObjectStore.delete_many``)."""
+        return self._req(lambda: self.store.delete_many(keys),
+                         tokens=max(1, len(keys)))
 
     def list(self, kind: str, namespace: Optional[str] = None) -> List[Any]:
         return self._req(lambda: self.store.list(kind, namespace))
@@ -110,6 +126,25 @@ class APIServer:
 
     def list_and_watch(self, kind: str, namespace: Optional[str] = None):
         return self._req(lambda: self.store.list_and_watch(kind, namespace))
+
+
+class APIServer(APIClient):
+    """The store-owning client plus server-side identity and lifecycle."""
+
+    def __init__(self, name: str, qps: float = 50_000.0, burst: int = 100_000):
+        super().__init__(name, ObjectStore(name), qps, burst)
+        self.credential = new_uid()          # bearer token for this plane
+
+    @property
+    def credential_hash(self) -> str:
+        return hashlib.sha256(self.credential.encode()).hexdigest()[:16]
+
+    def client(self, name: str, qps: Optional[float] = None,
+               burst: Optional[int] = None) -> APIClient:
+        """A dedicated client handle: same store, its own token bucket."""
+        return APIClient(f"{self.name}/{name}", self.store,
+                         qps if qps is not None else self.qps,
+                         burst if burst is not None else self.burst)
 
     def close(self) -> None:
         self.store.close()

@@ -58,6 +58,40 @@ class FairWorkQueue:
             self._weights[tenant] = max(1, int(weight))
             self._subs.setdefault(tenant, _SubQueue())
 
+    def drain_tenant(self, tenant: str) -> List[Hashable]:
+        """Atomically remove and return every pending key of one tenant
+        (shard migration). Pending re-add requests for keys currently being
+        processed are claimed too — the migrating caller re-enqueues them on
+        the destination queue, so ``done()`` here won't resurrect them."""
+        with self._cv:
+            out: List[Hashable] = []
+            if not self.fair:
+                kept: List[Item] = []
+                for item in self._fifo:
+                    if item[0] == tenant:
+                        out.append(item[1])
+                    else:
+                        kept.append(item)
+                self._fifo = kept
+            else:
+                sub = self._subs.get(tenant)
+                if sub is not None:
+                    out.extend(sub.items)
+                    sub.items.clear()
+                if tenant in self._active:
+                    i = self._active.index(tenant)
+                    self._active.pop(i)
+                    if i < self._cursor:
+                        self._cursor -= 1
+            claimed = set(out)
+            for item in [it for it in self._dirty if it[0] == tenant]:
+                self._dirty.discard(item)
+                if item in self._processing and item[1] not in claimed:
+                    out.append(item[1])   # re-add request on an in-flight key
+            for key in out:
+                self._enqueue_time.pop((tenant, key), None)
+            return out
+
     def unregister_tenant(self, tenant: str) -> None:
         with self._lock:
             self._weights.pop(tenant, None)

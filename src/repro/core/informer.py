@@ -76,7 +76,13 @@ class Informer:
     def add_handler(self, handler: Handler) -> None:
         self._handlers.append(handler)
 
+    @property
+    def alive(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
     def start(self) -> None:
+        if self.alive:
+            return   # idempotent: an adopted informer keeps its reflector
         # fresh events so a stopped informer can be restarted (cache rebuild)
         self._stop = threading.Event()
         self._synced.clear()

@@ -172,6 +172,23 @@ class Controller:
                 self._informers.remove(inf)
         inf.stop()
 
+    def detach_informer(self, inf: Informer) -> None:
+        """Release an informer from this controller WITHOUT stopping it
+        (live shard migration: the reflector keeps streaming throughout)."""
+        with self._lifecycle_lock:
+            if inf in self._informers:
+                self._informers.remove(inf)
+
+    def attach_informer(self, inf: Informer) -> None:
+        """Adopt a (possibly already-running) informer into this controller's
+        lifecycle; started here if the controller runs and it isn't yet."""
+        with self._lifecycle_lock:
+            self._informers.append(inf)
+            running = self._running
+        if running and not inf.alive:
+            inf.start()
+            inf.wait_for_cache_sync()
+
     # -- overridables ------------------------------------------------------
 
     def reconcile(self, key: Hashable) -> None:

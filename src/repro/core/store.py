@@ -63,12 +63,19 @@ class _Watch:
             self._cv.notify_all()
 
     def next(self, timeout: Optional[float] = None) -> Optional[WatchEvent]:
+        deadline = None if timeout is None else time.monotonic() + timeout
         with self._cv:
-            if not self._events and not self._closed:
-                self._cv.wait(timeout)
+            # loop: Condition.wait can return spuriously, and a bare single
+            # wait would make an open stream look closed/overflowed
+            while not self._events and not self._closed:
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    return None  # timed out
+                self._cv.wait(remaining)
             if self._events:
                 return self._events.pop(0)
-            return None  # closed or timed out
+            return None  # closed
 
     def close(self) -> None:
         with self._cv:
@@ -181,7 +188,59 @@ class ObjectStore:
                 raise NotFoundError(f"{kind} {namespace}/{name} not found")
             self._rv += 1
             self._notify(WatchEvent(DELETED, deepcopy_obj(obj), self._rv))
-            return obj
+            return deepcopy_obj(obj)
+
+    def update_many(self, objs: List[Any], *, force: bool = False
+                    ) -> Tuple[List[Any], List[Any]]:
+        """Batched update under ONE lock round (etcd-txn analogue).
+
+        Returns ``(updated, conflicted)`` — objects that are missing or carry
+        a stale resourceVersion land in ``conflicted`` instead of raising, so
+        callers can coalesce a burst and fall back per-item for the losers.
+        """
+        updated: List[Any] = []
+        conflicted: List[Any] = []
+        with self._lock:
+            for obj in objs:
+                key = obj_key(obj)
+                cur = self._objects.get(key)
+                if cur is None:
+                    conflicted.append(obj)
+                    continue
+                if (not force and obj.metadata.resource_version
+                        != cur.metadata.resource_version):
+                    conflicted.append(obj)
+                    continue
+                stored = deepcopy_obj(obj)
+                self._rv += 1
+                stored.metadata.uid = cur.metadata.uid
+                stored.metadata.creation_timestamp = cur.metadata.creation_timestamp
+                stored.metadata.resource_version = self._rv
+                self._objects[key] = stored
+                self._notify(WatchEvent(MODIFIED, deepcopy_obj(stored), self._rv))
+                updated.append(deepcopy_obj(stored))
+        return updated, conflicted
+
+    def delete_many(self, keys: List[Tuple[str, str, str]]
+                    ) -> Tuple[List[Any], List[Tuple[str, str, str]]]:
+        """Batched delete under ONE lock round.
+
+        ``keys`` are ``(kind, namespace, name)`` triples. Returns
+        ``(deleted, missing)``: copies of the removed objects, and the keys
+        that were already gone (reported, not raised).
+        """
+        deleted: List[Any] = []
+        missing: List[Tuple[str, str, str]] = []
+        with self._lock:
+            for key in keys:
+                obj = self._objects.pop(key, None)
+                if obj is None:
+                    missing.append(key)
+                    continue
+                self._rv += 1
+                self._notify(WatchEvent(DELETED, deepcopy_obj(obj), self._rv))
+                deleted.append(deepcopy_obj(obj))
+        return deleted, missing
 
     def list(self, kind: str, namespace: Optional[str] = None) -> List[Any]:
         with self._lock:

@@ -8,13 +8,17 @@ queue. Per-resource reconcilers perform:
 - downward synchronization: tenant spec -> super cluster (namespace-prefixed);
 - upward synchronization: super status -> tenant control plane (vNode-mapped).
 
-Scaling beyond the paper, the downward path is **hash-sharded by tenant
-UID**: ``shards`` independent :class:`~repro.core.runtime.Controller` workers
-each own a per-shard fair queue serving the tenants that hash onto them.
-Every tenant deterministically lands on one shard (stable across restarts),
-per-shard WRR preserves the Fig.11 fairness guarantees, and same-tenant
-bursts are coalesced into batches (``downward_batch``) before super-cluster
-writes.
+Scaling beyond the paper, the downward path is **sharded by tenant UID over
+a consistent-hash ring** (``ring_vnodes`` virtual nodes per shard): ``shards``
+independent :class:`~repro.core.runtime.Controller` workers each own a
+per-shard fair queue serving the tenants that hash onto them. Every tenant
+deterministically lands on one shard (stable across restarts), growing the
+fleet via :meth:`Syncer.resize_shards` live-migrates only ~1/N of the
+tenants, per-shard WRR preserves the Fig.11 fairness guarantees, and
+same-tenant bursts are coalesced into batches (``downward_batch``) covering
+the full CRUD surface — batched creates, spec updates, AND deletes — issued
+through a per-shard super-API client (dedicated token bucket), so shards
+never serialize on one bucket lock.
 
 State comparisons are made against informer caches, never the apiservers.
 A periodic scan remediates rare permanently-inconsistent states by re-sending
@@ -26,6 +30,7 @@ upward workers, 60 s scan interval, one shard.
 """
 from __future__ import annotations
 
+import bisect
 import hashlib
 import threading
 import time
@@ -53,11 +58,55 @@ def ns_prefix(vc_name: str, vc_uid: str) -> str:
     return f"{vc_name}-{h}"
 
 
-def shard_for(tenant_uid: str, num_shards: int) -> int:
-    """Stable tenant->shard partition: same UID always lands on one shard."""
+class ShardRing:
+    """Consistent-hash ring mapping tenant UIDs to shards.
+
+    Each shard contributes ``vnodes`` deterministic points on a sha256 ring;
+    a tenant maps to the first point clockwise of its own hash. Same UID +
+    same shard count -> same shard across restarts, and growing the fleet
+    from N to N+1 shards remaps only ~1/(N+1) of the tenants (the slices the
+    new shard's vnodes claim) instead of ~all, which is what makes
+    :meth:`Syncer.resize_shards` a cheap live operation.
+    """
+
+    def __init__(self, num_shards: int, vnodes: int = 64):
+        self.num_shards = max(1, int(num_shards))
+        self.vnodes = max(1, int(vnodes))
+        points: List[Tuple[int, int]] = []
+        for s in range(self.num_shards):
+            for v in range(self.vnodes):
+                h = int(hashlib.sha256(
+                    f"shard-{s}/vn-{v}".encode()).hexdigest(), 16)
+                points.append((h, s))
+        points.sort()
+        self._hashes = [p[0] for p in points]
+        self._shards = [p[1] for p in points]
+
+    def shard_for(self, tenant_uid: str) -> int:
+        if self.num_shards == 1:
+            return 0
+        h = int(hashlib.sha256(tenant_uid.encode()).hexdigest(), 16)
+        i = bisect.bisect_right(self._hashes, h) % len(self._hashes)
+        return self._shards[i]
+
+
+_ring_cache: Dict[Tuple[int, int], ShardRing] = {}
+_ring_cache_lock = threading.Lock()
+
+
+def shard_for(tenant_uid: str, num_shards: int, vnodes: int = 64) -> int:
+    """Stable tenant->shard partition: same UID always lands on one shard.
+
+    Consistent-hash ring (not modulo), so N -> N+1 remaps ~1/N tenants.
+    """
     if num_shards <= 1:
         return 0
-    return int(hashlib.sha256(tenant_uid.encode()).hexdigest(), 16) % num_shards
+    key = (num_shards, vnodes)
+    with _ring_cache_lock:
+        ring = _ring_cache.get(key)
+        if ring is None:
+            ring = _ring_cache[key] = ShardRing(num_shards, vnodes)
+    return ring.shard_for(tenant_uid)
 
 
 @dataclass
@@ -104,15 +153,33 @@ class SyncerMetrics:
                 tl = self.timelines[key] = UnitTimeline()
             return tl
 
+    # Counters are bumped from many worker threads; bare += would lose
+    # increments (read-modify-write race), so all increments go through here.
+
+    def inc_downward(self, n: int = 1) -> None:
+        with self._lock:
+            self.downward_syncs += n
+
+    def inc_upward(self, n: int = 1) -> None:
+        with self._lock:
+            self.upward_syncs += n
+
+    def inc_scan(self, fixes: int, duration: float) -> None:
+        with self._lock:
+            self.scan_runs += 1
+            self.scan_fixes += fixes
+            self.scan_duration_sum += duration
+
 
 class TenantRegistration:
     """Everything the syncer holds per tenant."""
 
     def __init__(self, plane: TenantControlPlane, prefix: str,
-                 shard: "_DownwardShard"):
+                 shard: "_DownwardShard", uid: str = ""):
         self.plane = plane
         self.prefix = prefix
-        self.shard = shard
+        self.shard = shard     # current owning shard; swapped on resize
+        self.uid = uid or plane.name
         self.informers: Dict[str, Informer] = {}
         # super namespaces already ensured for this tenant (coalesces the
         # per-item existence probe before super-cluster writes)
@@ -122,7 +189,12 @@ class TenantRegistration:
 
 class _DownwardShard(Controller):
     """One downward shard: a per-shard fair queue + workers for the tenants
-    hashed onto it. Retries Conflict/AlreadyExists (informer-cache races)."""
+    hashed onto it. Retries Conflict/AlreadyExists (informer-cache races).
+
+    Each shard talks to the super cluster through its OWN ``APIClient``
+    (dedicated token bucket over the shared store), so batched writes from
+    different shards never serialize on one bucket lock.
+    """
 
     def __init__(self, syncer: "Syncer", shard_id: int, *, workers: int,
                  fair: bool, batch_size: int):
@@ -133,6 +205,7 @@ class _DownwardShard(Controller):
                          drop_on=())
         self.syncer = syncer
         self.shard_id = shard_id
+        self.api = syncer.super_api.client(f"dws-{shard_id}")
 
     def reconcile(self, item: Any) -> None:
         tenant, (kind, ns, name) = item
@@ -143,15 +216,16 @@ class _DownwardShard(Controller):
             if tl.dws_dequeue == 0.0:
                 tl.dws_dequeue = time.time()
         try:
-            sy._reconcile_down(tenant, kind, ns, name)
+            sy._reconcile_down(tenant, kind, ns, name, api=self.api)
         finally:
             if tl is not None and tl.dws_done == 0.0:
                 tl.dws_done = time.time()
 
     def reconcile_batch(self, items: List[Any]) -> None:
         """Coalesce a same-tenant burst: cache-based state comparison plus
-        one batched super-cluster write; leftovers (deletes, spec updates,
-        cache races) take the authoritative per-item path."""
+        batched super-cluster writes over the full CRUD surface (creates,
+        spec updates, deletes); leftovers (Namespace objects, cache races)
+        take the authoritative per-item path."""
         if len(items) == 1:
             return self._reconcile_one(items[0])
         tenant = items[0][0]
@@ -164,7 +238,7 @@ class _DownwardShard(Controller):
         t0 = time.monotonic()
         try:
             fast, slow = self.syncer._reconcile_down_fast(
-                tenant, [key for _, key in items])
+                tenant, [key for _, key in items], api=self.api)
         except Exception:
             fast, slow = [], [key for _, key in items]
         dur = time.monotonic() - t0
@@ -237,14 +311,19 @@ class Syncer:
                  scan_interval: float = 60.0,
                  batch_upward: bool = False,
                  shards: int = 1,
-                 downward_batch: int = 1):
+                 downward_batch: int = 1,
+                 ring_vnodes: int = 64):
         self.super_api = super_api
         self.downward_workers = downward_workers
         self.upward_workers = upward_workers
+        self.fair_queuing = fair_queuing
         self.scan_interval = scan_interval
         self.batch_upward = batch_upward
         self.num_shards = max(1, int(shards))
         self.downward_batch = max(1, int(downward_batch))
+        self.ring_vnodes = max(1, int(ring_vnodes))
+        self.ring = ShardRing(self.num_shards, self.ring_vnodes)
+        self._resize_lock = threading.Lock()
         self.metrics = SyncerMetrics()
         self.vnodes = VNodeManager()
         self.tenants: Dict[str, TenantRegistration] = {}
@@ -294,31 +373,35 @@ class Syncer:
         return self.shard_controllers[0].queue
 
     def shard_for(self, tenant_uid: str) -> int:
-        return shard_for(tenant_uid, self.num_shards)
+        return self.ring.shard_for(tenant_uid)
 
     def register_tenant(self, plane: TenantControlPlane, vc_uid: str = "") -> str:
         uid = vc_uid or plane.name
         prefix = ns_prefix(plane.name, uid)
-        shard = self.shard_controllers[self.shard_for(uid)]
-        reg = TenantRegistration(plane, prefix, shard)
-        with self._tenants_lock:
-            self.tenants[plane.name] = reg
-        shard.queue.register_tenant(plane.name, plane.weight)
-        for kind in SYNCED_KINDS_DOWNWARD:
-            reg.informers[kind] = shard.add_informer(
-                plane.api, kind,
-                handler=self._tenant_handler(plane.name, kind, shard.queue),
-                name=f"{plane.name}/{kind}")
+        with self._resize_lock:
+            shard = self.shard_controllers[self.ring.shard_for(uid)]
+            reg = TenantRegistration(plane, prefix, shard, uid)
+            with self._tenants_lock:
+                self.tenants[plane.name] = reg
+            shard.queue.register_tenant(plane.name, plane.weight)
+            for kind in SYNCED_KINDS_DOWNWARD:
+                reg.informers[kind] = shard.add_informer(
+                    plane.api, kind,
+                    handler=self._tenant_handler(plane.name, kind),
+                    name=f"{plane.name}/{kind}")
         return prefix
 
     def unregister_tenant(self, tenant: str) -> None:
-        with self._tenants_lock:
-            reg = self.tenants.pop(tenant, None)
-        if reg is None:
-            return
-        for inf in reg.informers.values():
-            reg.shard.remove_informer(inf)
-        reg.shard.queue.unregister_tenant(tenant)
+        # under the resize lock: a concurrent resize_shards must not migrate
+        # (re-register + re-enqueue) a tenant that is being torn down
+        with self._resize_lock:
+            with self._tenants_lock:
+                reg = self.tenants.pop(tenant, None)
+            if reg is None:
+                return
+            for inf in reg.informers.values():
+                reg.shard.remove_informer(inf)
+            reg.shard.queue.unregister_tenant(tenant)
         # remove the tenant's synced objects from the super cluster
         # (match by the tenant's namespace prefix — the registration is
         # already popped, so the reverse map may not resolve anymore)
@@ -342,9 +425,79 @@ class Syncer:
         for c in reversed(self.controllers):
             c.stop()
 
+    # --------------------------------------------------------------- resizing
+
+    def resize_shards(self, n: int) -> Dict[str, int]:
+        """Live-resize the downward shard fleet to ``n`` shards.
+
+        The consistent-hash ring guarantees only ~1/N of the tenants change
+        shard. Each moved tenant is migrated without dropping work: it is
+        registered on the destination fair queue (same WRR weight), event
+        routing flips to the new shard, the old sub-queue is drained into the
+        destination, and its informers are handed over WITHOUT stopping their
+        reflectors. Returns ``{tenant: new_shard_id}`` for the movers.
+
+        Note: when the syncer's controllers are owned by an external
+        ControllerManager, shards added here are started/stopped by the
+        syncer itself.
+        """
+        n = max(1, int(n))
+        with self._resize_lock:
+            if n == self.num_shards:
+                return {}
+            registry = self.up_controller.metrics
+            running = any(c.running for c in self.shard_controllers)
+            # new shards match the existing per-shard worker count so the
+            # fleet stays uniform (growing the fleet grows total capacity;
+            # sizing new shards to downward_workers // n would leave old
+            # shards with several times the workers of their peers)
+            per_shard = self.shard_controllers[0].workers
+            while len(self.shard_controllers) < n:
+                i = len(self.shard_controllers)
+                c = _DownwardShard(self, i, workers=per_shard,
+                                   fair=self.fair_queuing,
+                                   batch_size=self.downward_batch)
+                c.metrics = registry
+                self.shard_controllers.append(c)
+                self.controllers.append(c)
+                if running:
+                    c.start()   # must run before tenants route onto it
+            new_ring = ShardRing(n, self.ring_vnodes)
+            with self._tenants_lock:
+                regs = list(self.tenants.values())
+            moved: Dict[str, int] = {}
+            for reg in regs:
+                target = new_ring.shard_for(reg.uid)
+                if target == reg.shard.shard_id:
+                    continue
+                self._migrate_tenant(reg, self.shard_controllers[target])
+                moved[reg.plane.name] = target
+            self.ring = new_ring
+            self.num_shards = n
+            if len(self.shard_controllers) > n:   # shrink: now-empty shards
+                for c in self.shard_controllers[n:]:
+                    c.stop()
+                    self.controllers.remove(c)
+                del self.shard_controllers[n:]
+            return moved
+
+    def _migrate_tenant(self, reg: TenantRegistration,
+                        new_shard: _DownwardShard) -> None:
+        old_shard = reg.shard
+        tenant = reg.plane.name
+        new_shard.queue.register_tenant(tenant, reg.plane.weight)
+        reg.shard = new_shard       # event handlers resolve the queue via reg
+        pending = old_shard.queue.drain_tenant(tenant)
+        old_shard.queue.unregister_tenant(tenant)
+        for key in pending:
+            new_shard.queue.add(tenant, key)
+        for inf in reg.informers.values():
+            old_shard.detach_informer(inf)
+            new_shard.attach_informer(inf)
+
     # ------------------------------------------------------------ event handlers
 
-    def _tenant_handler(self, tenant: str, kind: str, queue: FairWorkQueue):
+    def _tenant_handler(self, tenant: str, kind: str):
         def handler(ev_type: str, obj: Any) -> None:
             ns, name = obj.metadata.namespace, obj.metadata.name
             if kind == "WorkUnit" and ev_type == ADDED:
@@ -352,7 +505,20 @@ class Syncer:
                 if tl.dws_enqueue == 0.0:
                     tl.tenant_create = obj.metadata.creation_timestamp
                     tl.dws_enqueue = time.time()
-            queue.add(tenant, (kind, ns, name))
+            # Resolve the owning shard at event time, not at registration:
+            # resize_shards may have migrated the tenant since. Lock-free
+            # dict read (GIL-atomic) — this is the per-event hot path.
+            # If a migration races the add (the old queue may already be
+            # drained or even shut down), re-add on the new shard; the
+            # destination queue dedups, so a double add is harmless.
+            while True:
+                reg = self.tenants.get(tenant)
+                if reg is None:
+                    return
+                shard = reg.shard
+                shard.queue.add(tenant, (kind, ns, name))
+                if reg.shard is shard:
+                    return
         return handler
 
     def _super_handler(self, kind: str):
@@ -379,8 +545,14 @@ class Syncer:
 
     # ------------------------------------------------------------- reconcilers
 
-    def _reconcile_down(self, tenant: str, kind: str, ns: str, name: str) -> None:
-        """Tenant spec is the source of truth -> project into the super cluster."""
+    def _reconcile_down(self, tenant: str, kind: str, ns: str, name: str,
+                        api: Optional[Any] = None) -> None:
+        """Tenant spec is the source of truth -> project into the super cluster.
+
+        ``api`` is the caller's super-cluster client (a shard's dedicated
+        handle); defaults to the shared server client.
+        """
+        api = api or self.super_api
         with self._tenants_lock:
             reg = self.tenants.get(tenant)
         if reg is None:
@@ -390,33 +562,34 @@ class Syncer:
         if kind == "Namespace":
             super_ns_name = self._translate_ns(reg, name)
             if tenant_obj is None:
-                self._delete_super("Namespace", "", super_ns_name)
+                self._delete_super("Namespace", "", super_ns_name, api=api)
                 with reg.ensured_lock:
                     reg.ensured_ns.discard(super_ns_name)
             else:
-                self._ensure_super_namespace(reg, super_ns_name, tenant, name)
+                self._ensure_super_namespace(reg, super_ns_name, tenant, name,
+                                             api=api)
             return
 
         if tenant_obj is None:
             # deleted in tenant -> delete downstream
             try:
-                self.super_api.get(kind, super_ns, name)
+                api.get(kind, super_ns, name)
             except NotFoundError:
                 return
-            self._delete_super(kind, super_ns, name)
+            self._delete_super(kind, super_ns, name, api=api)
             if kind == "WorkUnit":
                 self.vnodes.unbind(reg.plane, ns, name)
-            self.metrics.downward_syncs += 1
+            self.metrics.inc_downward()
             return
 
-        self._ensure_super_namespace(reg, super_ns, tenant, ns)
+        self._ensure_super_namespace(reg, super_ns, tenant, ns, api=api)
         projected = self._project_down(tenant_obj, tenant, ns, super_ns)
         try:
-            existing = self.super_api.get(kind, super_ns, name)
+            existing = api.get(kind, super_ns, name)
         except NotFoundError:
             try:
-                self.super_api.create(projected)
-                self.metrics.downward_syncs += 1
+                api.create(projected)
+                self.metrics.inc_downward()
             except AlreadyExistsError:
                 pass
             return
@@ -425,21 +598,26 @@ class Syncer:
             projected.metadata.resource_version = existing.metadata.resource_version
             if hasattr(existing, "status"):
                 projected.status = existing.status  # status is super-owned
-            self.super_api.update(projected)
-            self.metrics.downward_syncs += 1
+            api.update(projected)
+            self.metrics.inc_downward()
 
-    def _reconcile_down_fast(self, tenant: str, keys: List[DownItem]
+    def _reconcile_down_fast(self, tenant: str, keys: List[DownItem],
+                             api: Optional[Any] = None
                              ) -> Tuple[List[DownItem], List[DownItem]]:
-        """Coalesced downward pass over a same-tenant burst.
+        """Coalesced downward pass over a same-tenant burst — full CRUD.
 
         State comparisons run against the super-side informer caches (paper
-        §III-C) and all missing objects are created with ONE batched
-        super-cluster write. Returns ``(done, slow)``: ``slow`` items —
-        deletes, Namespace objects, spec updates, and cache races — need the
-        authoritative per-item reconcile. The periodic scan remediates any
-        rare staleness this cache-based path lets through, exactly as it does
-        for every other informer-cache comparison.
+        §III-C); missing objects, stale specs, and tenant-side deletions are
+        then committed with ONE batched super-cluster write EACH
+        (``create_batch`` / ``update_batch`` / ``delete_batch``, all a single
+        store lock round). Returns ``(done, slow)``: ``slow`` items —
+        Namespace objects, cache races (create conflict / stale update rv),
+        and unconfirmed absences — need the authoritative per-item reconcile.
+        The periodic scan remediates any rare staleness this cache-based path
+        lets through, exactly as it does for every other informer-cache
+        comparison.
         """
+        api = api or self.super_api
         fast: List[DownItem] = []
         slow: List[DownItem] = []
         with self._tenants_lock:
@@ -448,6 +626,10 @@ class Syncer:
             return list(keys), slow
         to_create: List[Any] = []
         create_keys: List[DownItem] = []
+        to_update: List[Any] = []
+        update_keys: List[DownItem] = []
+        to_delete: List[Tuple[str, str, str]] = []   # (kind, super_ns, name)
+        delete_keys: List[DownItem] = []
         for key in keys:
             kind, ns, name = key
             sup_inf = self._super_informers.get(kind)
@@ -455,30 +637,63 @@ class Syncer:
                 slow.append(key)
                 continue
             tenant_obj = reg.informers[kind].cache.get(ns, name)
-            if tenant_obj is None:          # deletion: authoritative path
-                slow.append(key)
-                continue
             super_ns = self._translate_ns(reg, ns)
             cached = sup_inf.cache.get(super_ns, name)
+            if tenant_obj is None:          # deleted in tenant
+                if cached is None:
+                    # absence not confirmed by the cache (it may simply lag
+                    # the create): authoritative per-item check
+                    slow.append(key)
+                else:
+                    to_delete.append((kind, super_ns, name))
+                    delete_keys.append(key)
+                continue
             if cached is None:
-                self._ensure_super_namespace(reg, super_ns, tenant, ns)
+                self._ensure_super_namespace(reg, super_ns, tenant, ns,
+                                             api=api)
                 to_create.append(
                     self._project_down(tenant_obj, tenant, ns, super_ns))
                 create_keys.append(key)
             elif _spec_equal(tenant_obj, cached):
                 fast.append(key)            # echo: two-side states match
-            else:
-                slow.append(key)            # spec update: authoritative path
-        if to_create:
-            created, conflicted = self.super_api.create_batch(to_create)
-            self.metrics.downward_syncs += len(created)
+            else:                           # spec update: batched write
+                proj = self._project_down(tenant_obj, tenant, ns, super_ns)
+                proj.metadata.uid = cached.metadata.uid
+                proj.metadata.resource_version = cached.metadata.resource_version
+                if hasattr(cached, "status"):
+                    proj.status = deepcopy_obj(cached.status)  # super-owned
+                to_update.append(proj)
+                update_keys.append(key)
+        def route_write(keys_projs: List[Tuple[DownItem, Any]],
+                        applied: int, conflicted: List[Any]) -> None:
+            # cache races (create conflict / stale update rv) go slow for
+            # the authoritative per-item retry; the rest are done
+            self.metrics.inc_downward(applied)
             lost = {(obj_kind(o), o.metadata.namespace, o.metadata.name)
                     for o in conflicted}
-            for key, proj in zip(create_keys, to_create):
+            for key, proj in keys_projs:
                 if (key[0], proj.metadata.namespace, key[2]) in lost:
-                    slow.append(key)        # cache race: authoritative retry
+                    slow.append(key)
                 else:
                     fast.append(key)
+
+        if to_create:
+            created, conflicted = api.create_batch(to_create)
+            route_write(list(zip(create_keys, to_create)),
+                        len(created), conflicted)
+        if to_update:
+            updated, conflicted = api.update_batch(to_update)
+            route_write(list(zip(update_keys, to_update)),
+                        len(updated), conflicted)
+        if to_delete:
+            deleted, _missing = api.delete_batch(to_delete)
+            self.metrics.inc_downward(len(deleted))
+            gone = {(obj_kind(o), o.metadata.namespace, o.metadata.name)
+                    for o in deleted}
+            for skey, key in zip(to_delete, delete_keys):
+                if skey in gone and key[0] == "WorkUnit":
+                    self.vnodes.unbind(reg.plane, key[1], key[2])
+                fast.append(key)            # missing == already gone: done
         return fast, slow
 
     def _reconcile_up(self, kind: str, super_ns: str, name: str) -> None:
@@ -498,7 +713,7 @@ class Syncer:
             self._sync_unit_status_up(reg, tenant_ns, name, super_obj)
         elif kind == "Service":
             self._sync_service_up(reg, tenant_ns, name, super_obj)
-        self.metrics.upward_syncs += 1
+        self.metrics.inc_upward()
 
     def _sync_unit_status_up(self, reg: TenantRegistration, tenant_ns: str,
                              name: str, super_obj: WorkUnit) -> None:
@@ -560,19 +775,27 @@ class Syncer:
         fixes = 0
         with self._tenants_lock:
             regs = list(self.tenants.items())
-        for tenant, reg in regs:
-            for kind in SYNCED_KINDS_DOWNWARD:
-                if kind == "Namespace":
-                    continue
+        for kind in SYNCED_KINDS_DOWNWARD:
+            if kind == "Namespace":
+                continue
+            # ONE super-cluster list per kind per scan (was per tenant,
+            # making the orphan pass O(tenants x super-objects))
+            super_by_key: Dict[Tuple[str, str], Any] = {}
+            orphans_by_tenant: Dict[str, List[Tuple[Any, str]]] = {}
+            for sobj in self.super_api.list(kind):
+                sns = sobj.metadata.namespace
+                super_by_key[(sns, sobj.metadata.name)] = sobj
+                resolved = self._resolve_super_ns(sns)
+                if resolved is not None:
+                    orphans_by_tenant.setdefault(resolved[0], []).append(
+                        (sobj, resolved[1]))
+            for tenant, reg in regs:
                 tcache = reg.informers[kind].cache
                 seen_super = set()
                 for tobj in tcache.list():
                     ns, name = tobj.metadata.namespace, tobj.metadata.name
                     super_ns = self._translate_ns(reg, ns)
-                    try:
-                        sobj = self.super_api.get(kind, super_ns, name)
-                    except NotFoundError:
-                        sobj = None
+                    sobj = super_by_key.get((super_ns, name))
                     if sobj is None or not _spec_equal(
                             self._project_down(tobj, tenant, ns, super_ns), sobj):
                         reg.shard.queue.add(tenant, (kind, ns, name))
@@ -584,18 +807,13 @@ class Syncer:
                         fixes += 1
                     seen_super.add((super_ns, name))
                 # orphans in super (tenant object gone but super copy remains)
-                for sobj in self.super_api.list(kind):
-                    sns = sobj.metadata.namespace
-                    resolved = self._resolve_super_ns(sns)
-                    if resolved is None or resolved[0] != tenant:
-                        continue
-                    if (sns, sobj.metadata.name) not in seen_super:
+                for sobj, tenant_ns in orphans_by_tenant.get(tenant, []):
+                    if (sobj.metadata.namespace,
+                            sobj.metadata.name) not in seen_super:
                         reg.shard.queue.add(
-                            tenant, (kind, resolved[1], sobj.metadata.name))
+                            tenant, (kind, tenant_ns, sobj.metadata.name))
                         fixes += 1
-        self.metrics.scan_runs += 1
-        self.metrics.scan_fixes += fixes
-        self.metrics.scan_duration_sum += time.monotonic() - t0
+        self.metrics.inc_scan(fixes, time.monotonic() - t0)
         return fixes
 
     # ----------------------------------------------------------------- helpers
@@ -623,19 +841,21 @@ class Syncer:
         return None
 
     def _ensure_super_namespace(self, reg: TenantRegistration, super_ns: str,
-                                tenant: str, tenant_ns: str) -> None:
+                                tenant: str, tenant_ns: str,
+                                api: Optional[Any] = None) -> None:
+        api = api or self.super_api
         with reg.ensured_lock:
             if super_ns in reg.ensured_ns:
                 return
         try:
-            self.super_api.get("Namespace", "", super_ns)
+            api.get("Namespace", "", super_ns)
         except NotFoundError:
             nsobj = Namespace()
             nsobj.metadata.name = super_ns
             nsobj.metadata.annotations["vc/tenant"] = tenant
             nsobj.metadata.annotations["vc/namespace"] = tenant_ns
             try:
-                self.super_api.create(nsobj)
+                api.create(nsobj)
             except AlreadyExistsError:
                 pass
         with reg.ensured_lock:
@@ -653,9 +873,10 @@ class Syncer:
             proj.status = type(proj.status)()
         return proj
 
-    def _delete_super(self, kind: str, ns: str, name: str) -> None:
+    def _delete_super(self, kind: str, ns: str, name: str,
+                      api: Optional[Any] = None) -> None:
         try:
-            self.super_api.delete(kind, ns, name)
+            (api or self.super_api).delete(kind, ns, name)
         except NotFoundError:
             pass
 

@@ -1,0 +1,179 @@
+"""Consistent-hash shard ring + live resize: placement stability across
+restarts, ~1/N remap on growth, no lost work mid-migration, per-shard
+super-API clients."""
+import time
+
+import pytest
+
+from repro.core import (APIServer, Namespace, ShardRing, Syncer,
+                        TenantControlPlane, WorkUnit, shard_for)
+
+
+def wait_for(cond, timeout=15.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if cond():
+            return True
+        time.sleep(0.01)
+    return False
+
+
+def mk_unit(name, ns="default"):
+    u = WorkUnit()
+    u.metadata.name = name
+    u.metadata.namespace = ns
+    return u
+
+
+# ------------------------------------------------------------------- the ring
+
+def test_ring_is_deterministic_across_instances():
+    uids = [f"uid-{i}" for i in range(128)]
+    a, b = ShardRing(4), ShardRing(4)
+    assert [a.shard_for(u) for u in uids] == [b.shard_for(u) for u in uids]
+    assert [shard_for(u, 4) for u in uids] == [a.shard_for(u) for u in uids]
+
+
+def test_ring_spreads_and_stays_in_range():
+    uids = [f"uid-{i}" for i in range(512)]
+    placed = [ShardRing(8).shard_for(u) for u in uids]
+    assert all(0 <= s < 8 for s in placed)
+    assert len(set(placed)) == 8
+
+
+def test_ring_growth_remaps_about_one_over_n():
+    """N -> N+1 shards must move ~1/(N+1) of tenants, not ~all (the modulo
+    failure mode)."""
+    uids = [f"uid-{i}" for i in range(600)]
+    for n in (2, 4, 8):
+        before = ShardRing(n)
+        after = ShardRing(n + 1)
+        moved = sum(1 for u in uids
+                    if before.shard_for(u) != after.shard_for(u))
+        expected = len(uids) / (n + 1)
+        assert moved <= 2 * expected, (
+            f"{moved}/{len(uids)} moved going {n}->{n + 1}; "
+            f"expected about {expected:.0f}")
+        # movers must land ONLY on the new shard (consistent hashing: old
+        # shards never trade tenants among themselves)
+        for u in uids:
+            if before.shard_for(u) != after.shard_for(u):
+                assert after.shard_for(u) == n
+
+
+def test_syncer_placement_survives_restart():
+    """Same tenant -> same shard across independent syncer processes."""
+    placements = []
+    for _ in range(2):
+        api = APIServer("super")
+        syncer = Syncer(api, downward_workers=4, upward_workers=2,
+                        scan_interval=0.0, shards=4)
+        try:
+            for i in range(10):
+                p = TenantControlPlane(f"t{i}")
+                syncer.register_tenant(p, f"uid-{i}")
+            placements.append(
+                {t: r.shard.shard_id for t, r in syncer.tenants.items()})
+        finally:
+            syncer.stop()
+            api.close()
+    assert placements[0] == placements[1]
+
+
+# -------------------------------------------------------------------- resize
+
+@pytest.fixture
+def live_rig():
+    super_api = APIServer("super")
+    syncer = Syncer(super_api, downward_workers=8, upward_workers=4,
+                    scan_interval=0.0, shards=2, downward_batch=4)
+    planes = [TenantControlPlane(f"t{i:02d}", weight=1 + i % 3)
+              for i in range(12)]
+    for i, p in enumerate(planes):
+        syncer.register_tenant(p, f"uid-{i}")
+    syncer.start()
+    yield super_api, syncer, planes
+    syncer.stop()
+    super_api.close()
+
+
+def test_resize_moves_at_most_a_fraction_and_keeps_weights(live_rig):
+    super_api, syncer, planes = live_rig
+    before = {p.name: syncer.tenants[p.name].shard.shard_id for p in planes}
+    moved = syncer.resize_shards(3)
+    assert syncer.num_shards == 3
+    assert len(syncer.shard_controllers) == 3
+    # ~1/N remap: at most half the tenants move for 2 -> 3 shards (expected
+    # fraction is 1/3; allow sampling slack on 12 tenants)
+    assert len(moved) <= len(planes) // 2
+    for tenant, new_shard in moved.items():
+        assert new_shard != before[tenant]
+        reg = syncer.tenants[tenant]
+        assert reg.shard.shard_id == new_shard
+        # WRR weight preserved on the destination queue
+        assert reg.shard.queue._weights[tenant] == reg.plane.weight
+    # stayers keep their registration on the original queue
+    for p in planes:
+        if p.name not in moved:
+            assert p.name in syncer.tenants[p.name].shard.queue._weights
+
+
+def test_resize_agrees_with_fresh_syncer_at_new_count(live_rig):
+    super_api, syncer, planes = live_rig
+    syncer.resize_shards(3)
+    for i, p in enumerate(planes):
+        assert (syncer.tenants[p.name].shard.shard_id
+                == shard_for(f"uid-{i}", 3))
+
+
+def test_resize_mid_burst_loses_no_items(live_rig):
+    """Items queued and in flight when the fleet grows must all still sync."""
+    super_api, syncer, planes = live_rig
+    per_tenant = 40
+    for p in planes:
+        for j in range(per_tenant):
+            p.api.create(mk_unit(f"u{j:03d}"))
+    syncer.resize_shards(3)        # mid-burst: queues are non-empty
+    for p in planes:               # post-resize traffic follows the movers
+        for j in range(per_tenant, per_tenant + 5):
+            p.api.create(mk_unit(f"u{j:03d}"))
+    total = len(planes) * (per_tenant + 5)
+    assert wait_for(
+        lambda: super_api.store.count("WorkUnit") == total, timeout=30), \
+        f"synced {super_api.store.count('WorkUnit')}/{total}"
+
+
+def test_resize_shrink_drains_removed_shards(live_rig):
+    super_api, syncer, planes = live_rig
+    syncer.resize_shards(3)
+    for p in planes:
+        p.api.create(mk_unit("a"))
+    assert wait_for(
+        lambda: super_api.store.count("WorkUnit") == len(planes))
+    moved = syncer.resize_shards(1)
+    assert syncer.num_shards == 1
+    assert len(syncer.shard_controllers) == 1
+    # every tenant must now live on shard 0
+    assert all(r.shard.shard_id == 0 for r in syncer.tenants.values())
+    for p in planes:
+        p.api.create(mk_unit("b"))
+    assert wait_for(
+        lambda: super_api.store.count("WorkUnit") == 2 * len(planes))
+
+
+# ------------------------------------------------------- per-shard API clients
+
+def test_each_shard_gets_its_own_super_client(live_rig):
+    super_api, syncer, planes = live_rig
+    clients = [c.api for c in syncer.shard_controllers]
+    assert len({id(c) for c in clients}) == len(clients)
+    for c in clients:
+        assert c is not super_api
+        assert c.store is super_api.store          # shared storage layer
+        assert c._bucket is not super_api._bucket  # dedicated token bucket
+    for p in planes:
+        p.api.create(mk_unit("c"))
+    assert wait_for(
+        lambda: super_api.store.count("WorkUnit") == len(planes))
+    # downward writes were issued via the shard clients, not the shared one
+    assert sum(c.request_count for c in clients) > 0

@@ -1,0 +1,153 @@
+"""ObjectStore batch CRUD (update_many/delete_many), the reads-return-copies
+contract on delete, and _Watch.next spurious-wakeup robustness.
+
+Kept separate from test_store.py so these run even without hypothesis
+(test_store.py is collection-skipped when the dev extra is absent).
+"""
+import threading
+import time
+
+from repro.core import (ADDED, DELETED, MODIFIED, ObjectStore, WorkUnit)
+
+
+def mk_unit(name, ns="default"):
+    u = WorkUnit()
+    u.metadata.name = name
+    u.metadata.namespace = ns
+    return u
+
+
+# ----------------------------------------------------------------- update_many
+
+def test_update_many_applies_all_and_bumps_versions():
+    s = ObjectStore()
+    fresh = [s.create(mk_unit(n)) for n in ("a", "b", "c")]
+    for u in fresh:
+        u.spec.chips = 9
+    updated, conflicted = s.update_many(fresh)
+    assert conflicted == []
+    assert [u.metadata.name for u in updated] == ["a", "b", "c"]
+    versions = [u.metadata.resource_version for u in updated]
+    assert versions == sorted(versions)
+    assert all(s.get("WorkUnit", "default", n).spec.chips == 9
+               for n in ("a", "b", "c"))
+
+
+def test_update_many_reports_stale_and_missing_per_item():
+    s = ObjectStore()
+    a = s.create(mk_unit("a"))
+    b = s.create(mk_unit("b"))
+    s.update(s.get("WorkUnit", "default", "b"))   # bump b: 'b' copy is stale
+    ghost = mk_unit("ghost")                       # never created
+    a.spec.chips = 5
+    b.spec.chips = 5
+    updated, conflicted = s.update_many([a, b, ghost])
+    assert [u.metadata.name for u in updated] == ["a"]
+    assert {o.metadata.name for o in conflicted} == {"b", "ghost"}
+    # the conflicted update must NOT have been applied
+    assert s.get("WorkUnit", "default", "b").spec.chips != 5
+
+
+def test_update_many_force_overrides_stale_versions():
+    s = ObjectStore()
+    a = s.create(mk_unit("a"))
+    s.update(s.get("WorkUnit", "default", "a"))
+    a.spec.chips = 7
+    updated, conflicted = s.update_many([a], force=True)
+    assert len(updated) == 1 and conflicted == []
+    assert s.get("WorkUnit", "default", "a").spec.chips == 7
+
+
+def test_update_many_emits_modified_events_in_version_order():
+    s = ObjectStore()
+    fresh = [s.create(mk_unit(n)) for n in ("a", "b")]
+    w = s.watch("WorkUnit")
+    updated, _ = s.update_many(fresh)
+    evs = [w.next(timeout=1.0) for _ in range(2)]
+    assert [e.type for e in evs] == [MODIFIED, MODIFIED]
+    assert evs[0].resource_version < evs[1].resource_version
+
+
+# ----------------------------------------------------------------- delete_many
+
+def test_delete_many_reports_missing_per_item():
+    s = ObjectStore()
+    s.create(mk_unit("a"))
+    s.create(mk_unit("b"))
+    deleted, missing = s.delete_many([
+        ("WorkUnit", "default", "a"),
+        ("WorkUnit", "default", "ghost"),
+        ("WorkUnit", "default", "b"),
+    ])
+    assert {o.metadata.name for o in deleted} == {"a", "b"}
+    assert missing == [("WorkUnit", "default", "ghost")]
+    assert s.count("WorkUnit") == 0
+
+
+def test_delete_many_emits_deleted_events():
+    s = ObjectStore()
+    s.create(mk_unit("a"))
+    s.create(mk_unit("b"))
+    w = s.watch("WorkUnit")
+    s.delete_many([("WorkUnit", "default", "a"), ("WorkUnit", "default", "b")])
+    evs = [w.next(timeout=1.0) for _ in range(2)]
+    assert [e.type for e in evs] == [DELETED, DELETED]
+
+
+# ------------------------------------------------------- reads-return-copies
+
+def test_delete_returns_a_copy_not_the_live_object():
+    s = ObjectStore()
+    w = s.watch("WorkUnit")
+    s.create(mk_unit("a"))
+    ev_added = w.next(timeout=1.0)
+    assert ev_added.type == ADDED
+    removed = s.delete("WorkUnit", "default", "a")
+    removed.spec.arch = "mutated"
+    ev = w.next(timeout=1.0)
+    # the watch event payload must not alias the returned object
+    assert ev.type == DELETED and ev.object.spec.arch != "mutated"
+
+
+def test_delete_many_returns_copies():
+    s = ObjectStore()
+    s.create(mk_unit("a"))
+    w = s.watch("WorkUnit")
+    (removed,), _ = s.delete_many([("WorkUnit", "default", "a")])
+    removed.spec.arch = "mutated"
+    ev = w.next(timeout=1.0)
+    assert ev.object.spec.arch != "mutated"
+
+
+# ------------------------------------------------------------ watch semantics
+
+def test_watch_next_survives_spurious_wakeup():
+    """A spurious condition-variable wakeup must not make an OPEN stream
+    report None (informers treat that as closed/overflowed -> relist)."""
+    s = ObjectStore()
+    w = s.watch("WorkUnit")
+    got = []
+
+    def consume():
+        got.append(w.next(timeout=None))   # block until a real event
+
+    t = threading.Thread(target=consume, daemon=True)
+    t.start()
+    time.sleep(0.05)
+    with w._cv:                            # spurious wakeup: no event pushed
+        w._cv.notify_all()
+    time.sleep(0.05)
+    assert t.is_alive(), "next() returned on a spurious wakeup"
+    s.create(mk_unit("a"))
+    t.join(timeout=2.0)
+    assert not t.is_alive()
+    assert got and got[0] is not None and got[0].type == ADDED
+
+
+def test_watch_next_timeout_accounts_for_deadline():
+    s = ObjectStore()
+    w = s.watch("WorkUnit")
+    t0 = time.monotonic()
+    assert w.next(timeout=0.2) is None
+    elapsed = time.monotonic() - t0
+    assert 0.15 <= elapsed < 2.0

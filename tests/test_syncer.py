@@ -212,6 +212,62 @@ def test_sharded_burst_no_starvation(sharded_rig):
         lambda: _count_ns(super_api, f"{gpre}-default") == 200, timeout=30)
 
 
+def test_sharded_mixed_churn_fast_lane(sharded_rig):
+    """Create/update/delete mix through the batched fast lane: end state in
+    the super cluster matches the tenants' final specs exactly."""
+    super_api, syncer, planes, prefixes = sharded_rig
+    per_tenant = 12
+    for p in planes:
+        for j in range(per_tenant):
+            p.api.create(mk_unit(f"u{j:02d}"))
+    total = len(planes) * per_tenant
+    assert wait_for(lambda: super_api.store.count("WorkUnit") == total)
+    # churn: update the first third, delete the last third
+    k = per_tenant // 3
+    for p in planes:
+        for j in range(k):
+            u = p.api.get("WorkUnit", "default", f"u{j:02d}")
+            u.spec.chips = 42
+            p.api.update(u)
+        for j in range(per_tenant - k, per_tenant):
+            p.api.delete("WorkUnit", "default", f"u{j:02d}")
+    expected = len(planes) * (per_tenant - k)
+    assert wait_for(lambda: super_api.store.count("WorkUnit") == expected)
+    assert wait_for(lambda: sum(
+        1 for u in super_api.list("WorkUnit") if u.spec.chips == 42
+    ) == len(planes) * k)
+    # updated super copies keep their identity (update, not delete+create)
+    for pre in prefixes:
+        u = super_api.get("WorkUnit", f"{pre}-default", "u00")
+        assert u.spec.chips == 42
+        assert u.metadata.uid
+
+
+def test_batched_update_preserves_super_status(sharded_rig):
+    """The batched spec-update path must not clobber super-owned status."""
+    super_api, syncer, planes, prefixes = sharded_rig
+    p, pre = planes[0], prefixes[0]
+    p.api.create(mk_unit("job"))
+    assert wait_for(lambda: _count_ns(super_api, f"{pre}-default") == 1)
+    super_api.update_status("WorkUnit", f"{pre}-default", "job",
+                            lambda u: setattr(u.status, "phase", "Ready"))
+    assert wait_for(lambda: super_api.get(
+        "WorkUnit", f"{pre}-default", "job").status.phase == "Ready")
+    # wait until the super informer cache has seen the status write, so the
+    # batched update builds on it
+    sup_inf = syncer._super_informers["WorkUnit"]
+    assert wait_for(lambda: (
+        (c := sup_inf.cache.get(f"{pre}-default", "job")) is not None
+        and c.status.phase == "Ready"))
+    u = p.api.get("WorkUnit", "default", "job")
+    u.spec.chips = 3
+    p.api.update(u)
+    assert wait_for(lambda: super_api.get(
+        "WorkUnit", f"{pre}-default", "job").spec.chips == 3)
+    assert super_api.get(
+        "WorkUnit", f"{pre}-default", "job").status.phase == "Ready"
+
+
 def test_wrr_fairness_deterministic_under_batching():
     """Fig.11 guarantee at the queue level, with batch draining: a regular
     tenant's item is dispatched within one WRR round (== a few batches) of a
