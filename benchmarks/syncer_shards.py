@@ -16,21 +16,46 @@ each sweep isolates the effect of per-shard queues + same-tenant batch
 coalescing + per-shard super-API clients over one global fair queue.
 
 Config ``shards=1, batch=1`` is the per-item baseline (the paper's single
-syncer). ``--smoke`` runs a seconds-scale config for CI; ``--full`` the
-larger tracked workload.
+syncer). ``--smoke`` runs a small-workload config for CI (minutes-scale:
+repeated + trimmed for a noise-robust mode ratio); ``--full`` the larger
+tracked workload.
+
+Every configuration runs in both scheduling modes — ``threads`` (legacy
+one-OS-thread-per-worker/informer) and ``executor`` (shared cooperative
+pool sized to the downward worker budget) — and the two are recorded side
+by side. ``BENCH_syncer_shards.json`` is an append-only history: each run
+adds a record carrying its git sha, timestamp, and config instead of
+overwriting the series.
 """
 from __future__ import annotations
 
+import datetime
+import gc
 import json
+import os
 import statistics
+import subprocess
 import threading
 import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
 
-from repro.core import APIServer, Namespace, Syncer, TenantControlPlane, WorkUnit
+from repro.core import (APIServer, CooperativeExecutor, Namespace, Syncer,
+                        TenantControlPlane, WorkUnit)
 
 OUT_PATH = "BENCH_syncer_shards.json"
 UPDATED_CHIPS = 123        # spec marker the update/churn waits look for
+MODES = ("threads", "executor")
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
 
 
 def _mk_unit(name: str) -> WorkUnit:
@@ -54,7 +79,8 @@ def _wait(cond: Callable[[], bool], timeout: float = 600.0) -> None:
     while time.monotonic() < deadline:
         if cond():
             return
-        time.sleep(0.01)
+        # 2 ms poll: a 10 ms grain is +-10% of a sub-second timed phase
+        time.sleep(0.002)
     raise TimeoutError("benchmark wait timed out")
 
 
@@ -66,11 +92,18 @@ def _fanout(planes, fn) -> None:
         t.join()
 
 
-def _rig(shards: int, batch: int, tenants: int, downward_workers: int):
+def _rig(shards: int, batch: int, tenants: int, downward_workers: int,
+         mode: str = "threads"):
     super_api = APIServer("super")
+    executor: Optional[CooperativeExecutor] = None
+    if mode == "executor":
+        # equal worker budget: the pool is sized to the downward worker
+        # count (+ a little headroom for the upward workers), and every
+        # informer/worker/scan multiplexes onto it
+        executor = CooperativeExecutor(downward_workers + 4, name="bench")
     syncer = Syncer(super_api, downward_workers=downward_workers,
                     upward_workers=4, scan_interval=0.0,
-                    shards=shards, downward_batch=batch)
+                    shards=shards, downward_batch=batch, executor=executor)
     planes = [TenantControlPlane(f"t{i:03d}") for i in range(tenants)]
     for i, p in enumerate(planes):
         syncer.register_tenant(p, f"uid-{i:03d}")
@@ -79,7 +112,7 @@ def _rig(shards: int, batch: int, tenants: int, downward_workers: int):
         ns = Namespace()
         ns.metadata.name = "bench"
         p.api.create(ns)
-    return super_api, syncer, planes
+    return super_api, syncer, planes, executor
 
 
 def _batch_totals(syncer: Syncer):
@@ -93,9 +126,13 @@ def _batch_totals(syncer: Syncer):
 def _reset_phase_stats(syncer: Syncer):
     """Start a fresh measurement phase: drop queue-wait samples accumulated
     by un-timed pre-population and return the batch-size baseline to
-    subtract, so reported stats describe only the timed phase."""
+    subtract, so reported stats describe only the timed phase. Also clears
+    collection debt and freezes the GC so a cycle pause can't land
+    mid-phase (re-enabled in each scenario's ``finally``)."""
     for c in syncer.shard_controllers:
         c.queue.per_tenant_wait.clear()
+    gc.collect()
+    gc.disable()
     return _batch_totals(syncer)
 
 
@@ -114,10 +151,14 @@ def _collect(syncer: Syncer, super_api: APIServer, rec: Dict,
     return rec
 
 
-def _run_create(shards, batch, tenants, per_tenant, downward_workers=20) -> Dict:
-    super_api, syncer, planes = _rig(shards, batch, tenants, downward_workers)
+def _run_create(shards, batch, tenants, per_tenant, downward_workers=20,
+                mode="threads") -> Dict:
+    super_api, syncer, planes, executor = _rig(shards, batch, tenants,
+                                               downward_workers, mode)
     try:
         total = tenants * per_tenant
+        gc.collect()
+        gc.disable()
         t0 = time.monotonic()
 
         def submit(plane):
@@ -130,17 +171,23 @@ def _run_create(shards, batch, tenants, per_tenant, downward_workers=20) -> Dict
         elapsed = time.monotonic() - t0
         return _collect(syncer, super_api, {
             "shards": shards, "batch": batch, "tenants": tenants,
+            "mode": mode,
             "ops": total, "downward_workers": downward_workers,
             "submit_s": submit_s, "elapsed_s": elapsed,
             "throughput_per_s": total / elapsed if elapsed else 0.0,
         })
     finally:
+        gc.enable()
         syncer.stop()
+        if executor is not None:
+            executor.shutdown()
         super_api.close()
 
 
-def _run_update(shards, batch, tenants, per_tenant, downward_workers=20) -> Dict:
-    super_api, syncer, planes = _rig(shards, batch, tenants, downward_workers)
+def _run_update(shards, batch, tenants, per_tenant, downward_workers=20,
+                mode="threads") -> Dict:
+    super_api, syncer, planes, executor = _rig(shards, batch, tenants,
+                                               downward_workers, mode)
     try:
         total = tenants * per_tenant
         _fanout(planes, lambda p: [p.api.create(_mk_unit(f"u{j:05d}"))
@@ -163,19 +210,25 @@ def _run_update(shards, batch, tenants, per_tenant, downward_workers=20) -> Dict
         elapsed = time.monotonic() - t0
         return _collect(syncer, super_api, {
             "shards": shards, "batch": batch, "tenants": tenants,
+            "mode": mode,
             "ops": total, "downward_workers": downward_workers,
             "submit_s": submit_s, "elapsed_s": elapsed,
             "throughput_per_s": total / elapsed if elapsed else 0.0,
         }, batch_base)
     finally:
+        gc.enable()
         syncer.stop()
+        if executor is not None:
+            executor.shutdown()
         super_api.close()
 
 
-def _run_churn(shards, batch, tenants, per_tenant, downward_workers=20) -> Dict:
+def _run_churn(shards, batch, tenants, per_tenant, downward_workers=20,
+               mode="threads") -> Dict:
     """Pre-sync ``per_tenant`` units, then per tenant interleave K creates,
     K spec updates, and K deletes (K = per_tenant // 3)."""
-    super_api, syncer, planes = _rig(shards, batch, tenants, downward_workers)
+    super_api, syncer, planes, executor = _rig(shards, batch, tenants,
+                                               downward_workers, mode)
     try:
         base = tenants * per_tenant
         k = max(1, per_tenant // 3)
@@ -208,12 +261,16 @@ def _run_churn(shards, batch, tenants, per_tenant, downward_workers=20) -> Dict:
         ops = tenants * k * 3
         return _collect(syncer, super_api, {
             "shards": shards, "batch": batch, "tenants": tenants,
+            "mode": mode,
             "ops": ops, "downward_workers": downward_workers,
             "submit_s": submit_s, "elapsed_s": elapsed,
             "throughput_per_s": ops / elapsed if elapsed else 0.0,
         }, batch_base)
     finally:
+        gc.enable()
         syncer.stop()
+        if executor is not None:
+            executor.shutdown()
         super_api.close()
 
 
@@ -224,51 +281,142 @@ SCENARIOS = {
 }
 
 
+def _append_history(out_path: str, record: Dict) -> None:
+    """Append one run record to the tracked history file (never overwrite).
+
+    A pre-history file (the old single-run ``{"workload", "scenarios"}``
+    layout) is adopted as the first history entry. Smoke runs land in
+    ``latest_smoke`` so they never displace the tracked full-scale
+    ``latest`` series."""
+    history: List[Dict] = []
+    out: Dict = {}
+    try:
+        with open(out_path) as f:
+            existing = json.load(f)
+        if isinstance(existing, dict) and "history" in existing:
+            out = existing
+            history = existing["history"]
+        elif isinstance(existing, dict) and "scenarios" in existing:
+            existing.setdefault("git_sha", "pre-history")
+            history = [existing]
+    except (FileNotFoundError, json.JSONDecodeError):
+        pass
+    history.append(record)
+    out["history"] = history
+    key = "latest_smoke" if record["config"]["smoke"] else "latest"
+    out[key] = record
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+
+
 def run(full: bool = False, smoke: bool = False,
-        out_path: str = OUT_PATH) -> List[Dict]:
+        out_path: str = OUT_PATH, modes=MODES,
+        repeats: Optional[int] = None) -> List[Dict]:
     if smoke:
-        tenants, per_tenant = 4, 24
+        # big enough that steady-state throughput (not the wake latency of
+        # the last item) dominates the executor-vs-threads ratio; 7 repeats
+        # per cell feed the trimmed means that tame scheduler noise on
+        # shared CI machines (~3-5 min wall time — the price of a ratio
+        # stable enough to gate on)
+        tenants, per_tenant = 6, 64
         configs = [(1, 1), (2, 4)]
-        if out_path == OUT_PATH:
-            # never clobber the tracked full-scale series with smoke numbers
-            out_path = "/tmp/BENCH_syncer_shards_smoke.json"
+        repeats = 7 if repeats is None else repeats
     else:
         tenants, per_tenant = (32, 300) if full else (16, 120)
         configs = [(1, 1), (1, 8), (2, 8), (4, 8), (8, 8)]
-    result: Dict = {
+        repeats = 1 if repeats is None else repeats
+    record: Dict = {
+        "git_sha": _git_sha(),
+        "timestamp": datetime.datetime.now(datetime.timezone.utc)
+                     .isoformat(timespec="seconds"),
+        "config": {"smoke": smoke, "full": full, "modes": list(modes),
+                   "configs": [list(c) for c in configs]},
         "workload": {"tenants": tenants, "units_per_tenant": per_tenant},
-        "scenarios": {},
+        "modes": {},
     }
-    for scenario, fn in SCENARIOS.items():
-        sweep: List[Dict] = []
-        for shards, batch in configs:
-            rec = fn(shards, batch, tenants, per_tenant)
-            rec["name"] = f"syncer_shards/{scenario}/s{shards}_b{batch}"
-            sweep.append(rec)
-            print(f"  {scenario} shards={shards} batch={batch}: "
-                  f"{rec['throughput_per_s']:.0f} ops/s "
-                  f"(elapsed {rec['elapsed_s']:.2f}s, queue wait "
+    all_recs: List[Dict] = []
+    sweeps: Dict[str, Dict[str, List[Dict]]] = {
+        m: {s: [] for s in SCENARIOS} for m in modes}
+    # repeat-major sweep with modes interleaved per cell: a slow phase of a
+    # shared/noisy machine dilutes evenly across every (scenario, config,
+    # mode) cell instead of poisoning one cell's whole sample set — so
+    # drift can't masquerade as a mode or config difference
+    cells = [(scenario, shards, batch)
+             for scenario in SCENARIOS for shards, batch in configs]
+    best: Dict[tuple, Dict] = {}
+    samples: Dict[tuple, List[float]] = {}
+    for _ in range(max(1, repeats)):
+        for scenario, shards, batch in cells:
+            for mode in modes:
+                rec = SCENARIOS[scenario](shards, batch, tenants,
+                                          per_tenant, mode=mode)
+                key = (scenario, shards, batch, mode)
+                samples.setdefault(key, []).append(rec["throughput_per_s"])
+                if (key not in best or rec["throughput_per_s"]
+                        > best[key]["throughput_per_s"]):
+                    best[key] = rec
+    for scenario, shards, batch in cells:
+        for mode in modes:
+            key = (scenario, shards, batch, mode)
+            rec = best[key]
+            rec["repeats"] = max(1, repeats)
+            rec["throughput_median_per_s"] = statistics.median(samples[key])
+            vals = sorted(samples[key])
+            if len(vals) >= 3:         # drop min and max: tail-robust
+                vals = vals[1:-1]
+            rec["throughput_trimmed_per_s"] = statistics.mean(vals)
+            rec["name"] = (f"syncer_shards/{mode}/{scenario}"
+                           f"/s{shards}_b{batch}")
+            sweeps[mode][scenario].append(rec)
+            print(f"  [{mode}] {scenario} shards={shards} batch={batch}: "
+                  f"trimmed {rec['throughput_trimmed_per_s']:.0f} ops/s "
+                  f"(best {rec['throughput_per_s']:.0f}, queue wait "
                   f"{rec['queue_wait_mean_ms']:.1f}ms, mean batch "
                   f"{rec['mean_dequeue_batch']:.1f})", flush=True)
-        baseline = sweep[0]["throughput_per_s"]
-        best = max(sweep, key=lambda r: r["throughput_per_s"])
-        result["scenarios"][scenario] = {
-            "baseline_per_item_throughput_per_s": baseline,
-            "best": {"name": best["name"],
-                     "throughput_per_s": best["throughput_per_s"],
-                     "speedup_vs_per_item": (best["throughput_per_s"] / baseline
-                                             if baseline else 0.0)},
-            "sweep": sweep,
+    for mode in modes:
+        scenarios: Dict = {}
+        for scenario in SCENARIOS:
+            sweep = sweeps[mode][scenario]
+            baseline = sweep[0]["throughput_per_s"]
+            best_rec = max(sweep, key=lambda r: r["throughput_per_s"])
+            scenarios[scenario] = {
+                "baseline_per_item_throughput_per_s": baseline,
+                "best": {"name": best_rec["name"],
+                         "throughput_per_s": best_rec["throughput_per_s"],
+                         "speedup_vs_per_item": (
+                             best_rec["throughput_per_s"] / baseline
+                             if baseline else 0.0)},
+                "sweep": sweep,
+            }
+            all_recs.extend(sweep)
+        record["modes"][mode] = {"scenarios": scenarios}
+    if set(("threads", "executor")) <= set(modes):
+        # headline acceptance ratio: executor vs legacy threads per scenario
+        # at equal worker budget. Uses TRIMMED means (min/max dropped)
+        # summed across configs — single-run bests just reward whichever
+        # mode drew the luckier scheduling tail on a noisy machine
+        def _agg(mode: str, scenario: str) -> float:
+            return sum(r["throughput_trimmed_per_s"]
+                       for r in sweeps[mode][scenario])
+        record["executor_vs_threads"] = {
+            scenario: (_agg("executor", scenario)
+                       / max(1e-9, _agg("threads", scenario)))
+            for scenario in SCENARIOS
         }
-        print(f"  {scenario}: best {best['name']} "
-              f"{result['scenarios'][scenario]['best']['speedup_vs_per_item']:.2f}x "
-              f"vs per-item baseline", flush=True)
-    with open(out_path, "w") as f:
-        json.dump(result, f, indent=1)
-    print(f"  wrote {out_path}", flush=True)
-    return [rec for s in result["scenarios"].values() for rec in s["sweep"]]
+        for scenario, ratio in record["executor_vs_threads"].items():
+            print(f"  executor/threads {scenario}: {ratio:.2f}x", flush=True)
+    _append_history(out_path, record)
+    print(f"  appended run record to {out_path}", flush=True)
+    return all_recs
 
 
 if __name__ == "__main__":
-    import sys
-    run(full="--full" in sys.argv, smoke="--smoke" in sys.argv)
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mode", choices=["threads", "executor", "both"],
+                    default="both")
+    args = ap.parse_args()
+    modes = MODES if args.mode == "both" else (args.mode,)
+    run(full=args.full, smoke=args.smoke, modes=modes)

@@ -7,6 +7,7 @@ vNode semantics preserved).
 
     PYTHONPATH=src python examples/elastic_failover.py
 """
+import shutil
 import time
 
 import jax
@@ -25,6 +26,9 @@ def main():
     shape = ShapeConfig("demo", 64, 4, "train")
     step_fn = jax.jit(make_train_step(cfg, OptimizerConfig(peak_lr=1e-3)))
     data = SyntheticTokens(cfg, shape, DataConfig(seed=0))
+    # fresh demo state: stale checkpoints from a previous invocation would
+    # make every unit resume past its final step (empty train loop)
+    shutil.rmtree("/tmp/vc-failover-demo", ignore_errors=True)
     mgr = CheckpointManager("/tmp/vc-failover-demo", keep=2)
 
     def make_provider(node_name):

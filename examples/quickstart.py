@@ -6,7 +6,10 @@ collisions, vNode views preserved. Run:
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import json
 import time
+import urllib.error
+import urllib.request
 
 from repro.core import VirtualClusterFramework
 
@@ -15,6 +18,10 @@ def main():
     fw = VirtualClusterFramework(num_nodes=4, scan_interval=5.0,
                                  heartbeat_interval=2.0)
     with fw:
+        # metrics over HTTP: counters/summaries/gauges as JSON (stdlib only)
+        port = fw.serve_metrics()
+        print(f"metrics: http://127.0.0.1:{port}/metrics  "
+              f"health: http://127.0.0.1:{port}/healthz")
         # tenants are provisioned by the tenant operator from VC objects
         acme = fw.add_tenant("acme", weight=2)
         globex = fw.add_tenant("globex", weight=1)
@@ -52,12 +59,22 @@ def main():
               len(fw.super_api.list("WorkUnit")))
 
         # every controller runs on the shared runtime: one health map and
-        # one metrics registry for the whole control plane
-        print("controller health:", fw.healthy())
-        snap = fw.metrics.snapshot()
+        # one metrics registry for the whole control plane, served over HTTP
+        try:
+            health = json.load(urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/healthz"))
+        except urllib.error.HTTPError as e:   # 503 = some controller down
+            health = json.load(e.fp)
+        print("controller health (HTTP):", all(health.values()))
+        snap = json.load(urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/metrics"))
         reconciles = {k: int(v) for k, v in snap["counters"].items()
                       if k.startswith("reconcile_total")}
         print("reconciles by controller:", reconciles)
+        # the whole control plane — informers, workers, scans for every
+        # tenant — multiplexes onto one fixed-size cooperative pool
+        print("executor:", {k: int(v) for k, v in snap["gauges"].items()
+                            if k.startswith("executor")})
     print("done")
 
 

@@ -2,12 +2,14 @@
 from .agent import CallableProvider, MockProvider, NodeAgent, Provider, VnAgent
 from .apiserver import APIClient, APIServer, TenantControlPlane
 from .cluster import VirtualClusterFramework
+from .executor import CooperativeExecutor, Task
 from .fairqueue import FairWorkQueue
 from .informer import Informer, InformerCache
 from .objects import (KINDS, ConfigMap, Namespace, Node, Secret, Service,
                       VirtualClusterCR, VirtualNode, WorkUnit, WorkUnitSpec)
 from .router import IsolationViolation, MeshRouter
-from .runtime import Controller, ControllerManager, MetricsRegistry
+from .runtime import (Controller, ControllerManager, MetricsRegistry,
+                      RetryLater)
 from .scheduler import SuperScheduler
 from .store import (ADDED, DELETED, MODIFIED, AlreadyExistsError,
                     ConflictError, NotFoundError, ObjectStore)
@@ -18,7 +20,8 @@ from .workqueue import DelayingQueue, RateLimiter, WorkQueue
 
 __all__ = [
     "APIClient", "APIServer", "TenantControlPlane", "VirtualClusterFramework",
-    "Controller", "ControllerManager", "MetricsRegistry",
+    "Controller", "ControllerManager", "MetricsRegistry", "RetryLater",
+    "CooperativeExecutor", "Task",
     "FairWorkQueue", "WorkQueue", "DelayingQueue", "RateLimiter",
     "Informer", "InformerCache", "ObjectStore", "Syncer", "ns_prefix",
     "shard_for", "ShardRing",

@@ -24,7 +24,7 @@ from typing import Any, Callable, Dict, List, Optional
 
 from .apiserver import APIServer
 from .objects import Node, NodeStatus, WorkUnit
-from .runtime import Controller
+from .runtime import Controller, RetryLater
 from .store import ADDED, MODIFIED, NotFoundError
 from .workqueue import WorkQueue
 
@@ -104,7 +104,8 @@ class NodeAgent(Controller):
                  heartbeat_interval: float = 5.0):
         super().__init__(f"agent-{node_name}",
                          queue=WorkQueue(f"agent-{node_name}"), workers=1,
-                         scan_interval=heartbeat_interval, retry_on=())
+                         scan_interval=heartbeat_interval,
+                         retry_on=(RetryLater,))
         self.api = api
         self.node_name = node_name
         self.chips = chips
@@ -158,9 +159,17 @@ class NodeAgent(Controller):
             return
         self._running_units[key] = unit
         # init-gate (paper §III-B (4)): routing rules must be injected before
-        # the workload starts — the init-container handshake.
+        # the workload starts — the init-container handshake. On the shared
+        # executor, blocking 30 s here would park a pool thread (and could
+        # starve the router task that opens the gate), so poll the gate and
+        # requeue with backoff instead.
         if unit.spec.init_gate and self.router is not None:
-            self.router.wait_for_rules(unit.metadata.uid, timeout=30.0)
+            timeout = 30.0 if self.executor is None else 0.0
+            if (not self.router.wait_for_rules(unit.metadata.uid,
+                                               timeout=timeout)
+                    and self.executor is not None):
+                del self._running_units[key]
+                raise RetryLater(f"routing rules pending for {key}")
         try:
             self.provider.run(unit)
             self._set_phase(unit, "Running")

@@ -9,11 +9,14 @@ benchmarks.
 """
 from __future__ import annotations
 
+import json
+import threading
 import time
 from typing import Any, Callable, Dict, List, Optional
 
 from .agent import MockProvider, NodeAgent, Provider, VnAgent
 from .apiserver import APIServer, TenantControlPlane
+from .executor import CooperativeExecutor
 from .objects import VirtualClusterCR, WorkUnit, WorkUnitSpec
 from .router import MeshRouter
 from .runtime import ControllerManager, MetricsRegistry
@@ -24,6 +27,16 @@ from .tenant_operator import TenantOperator
 
 
 class VirtualClusterFramework:
+    """One VirtualCluster deployment.
+
+    ``executor_mode`` (default on) runs every controller — informer pumps,
+    reconcile workers, periodic scans — on one shared
+    :class:`CooperativeExecutor` of ``executor_pool`` OS threads, so thread
+    count stays O(pool size) no matter how many tenants register.
+    ``executor_mode=False`` is the legacy blocking-thread fallback
+    (one thread per informer/worker/scan loop).
+    """
+
     def __init__(self, *, num_nodes: int = 4, chips_per_node: int = 8,
                  downward_workers: int = 20, upward_workers: int = 100,
                  fair_queuing: bool = True, scan_interval: float = 60.0,
@@ -33,8 +46,12 @@ class VirtualClusterFramework:
                  heartbeat_interval: float = 5.0,
                  grpc_latency_ms: float = 0.0,
                  syncer_shards: int = 1,
-                 downward_batch: int = 1):
-        self.manager = ControllerManager()
+                 downward_batch: int = 1,
+                 executor_mode: bool = True,
+                 executor_pool: int = 8):
+        self.executor = (CooperativeExecutor(executor_pool, name="vc-exec")
+                         if executor_mode else None)
+        self.manager = ControllerManager(executor=self.executor)
         self.super_api = APIServer("super")
         self.router = MeshRouter(self.super_api,
                                  grpc_latency_ms=grpc_latency_ms,
@@ -58,7 +75,8 @@ class VirtualClusterFramework:
                              fair_queuing=fair_queuing,
                              scan_interval=scan_interval,
                              shards=syncer_shards,
-                             downward_batch=downward_batch)
+                             downward_batch=downward_batch,
+                             executor=self.executor)
         self.operator = TenantOperator(self.super_api, self.syncer,
                                        vn_agents=[self.vn_agent])
         # registration order == start order; stop runs in reverse
@@ -66,8 +84,11 @@ class VirtualClusterFramework:
         self.manager.add(self.router)
         self.manager.add(self.scheduler)
         self.manager.add(*self.syncer.controllers)
+        self.syncer.manager = self.manager   # resize_shards stays in sync
         self.manager.add(self.operator)
         self._started = False
+        self._metrics_server: Optional[Any] = None
+        self._metrics_thread: Optional[threading.Thread] = None
 
     # -- lifecycle --------------------------------------------------------------
 
@@ -80,11 +101,61 @@ class VirtualClusterFramework:
     def healthy(self) -> Dict[str, bool]:
         return self.manager.healthy()
 
+    def serve_metrics(self, port: int = 0, host: str = "127.0.0.1") -> int:
+        """Serve the shared :class:`MetricsRegistry` snapshot as JSON over
+        HTTP (stdlib ``http.server``; one acceptor daemon thread plus a
+        short-lived daemon thread per request). Routes:
+
+        - ``/`` or ``/metrics`` — ``MetricsRegistry.snapshot()`` (counters,
+          summaries, gauges — including the executor gauges);
+        - ``/healthz`` — per-controller health map, 503 if any is unhealthy.
+
+        Returns the bound port (pass ``port=0`` for an ephemeral one).
+        """
+        from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+        if self._metrics_server is not None:
+            return self._metrics_server.server_port
+        fw = self
+
+        class Handler(BaseHTTPRequestHandler):
+            def do_GET(self) -> None:
+                if self.path in ("/", "/metrics"):
+                    code, payload = 200, fw.metrics.snapshot()
+                elif self.path == "/healthz":
+                    health = fw.healthy()
+                    code = 200 if all(health.values()) else 503
+                    payload = health
+                else:
+                    code, payload = 404, {"error": f"no route {self.path}"}
+                body = json.dumps(payload, default=str).encode()
+                self.send_response(code)
+                self.send_header("Content-Type", "application/json")
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def log_message(self, *args: Any) -> None:
+                pass   # keep benchmark/test output clean
+
+        # threading server: a slow/hung probe must not block later /healthz
+        self._metrics_server = ThreadingHTTPServer((host, port), Handler)
+        self._metrics_thread = threading.Thread(
+            target=self._metrics_server.serve_forever,
+            name="metrics-http", daemon=True)
+        self._metrics_thread.start()
+        return self._metrics_server.server_port
+
     def start(self) -> None:
         self.manager.start()
         self._started = True
 
     def stop(self) -> None:
+        if self._metrics_server is not None:
+            self._metrics_server.shutdown()
+            self._metrics_server.server_close()
+            self._metrics_server = None
+            self._metrics_thread = None
         self.manager.stop()
         self.super_api.close()
 

@@ -18,7 +18,9 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Dict, Hashable, List, Optional, Tuple
+from typing import Callable, Dict, Hashable, List, Optional, Tuple
+
+from .workqueue import WakerSubscriptions
 
 Item = Tuple[str, Hashable]   # (tenant, key)
 
@@ -31,7 +33,7 @@ class _SubQueue:
         self.credit = 0
 
 
-class FairWorkQueue:
+class FairWorkQueue(WakerSubscriptions):
     def __init__(self, name: str = "fair", fair: bool = True):
         self.name = name
         self.fair = fair
@@ -45,6 +47,10 @@ class FairWorkQueue:
         self._dirty: set = set()
         self._processing: set = set()
         self._shutdown = False
+        # waker depth is PER TENANT sub-queue here: each newly active tenant
+        # recruits a consumer (matching WRR's cross-tenant spread), while a
+        # same-tenant burst accumulates into real get_batch batches
+        self._init_wakers()
         # metrics
         self.added = 0
         self.deduped = 0
@@ -119,15 +125,18 @@ class FairWorkQueue:
             self._enqueue_time.setdefault(item, time.monotonic())
             if not self.fair:
                 self._fifo.append(item)
+                depth = len(self._fifo)
             else:
                 sub = self._subs.setdefault(tenant, _SubQueue())
                 if tenant not in self._weights:
                     self._weights[tenant] = 1
                 sub.items.append(key)
+                depth = len(sub.items)
                 if tenant not in self._active:
                     sub.credit = self._weights[tenant]
                     self._active.append(tenant)
             self._cv.notify()
+            self._notify_waker(depth)
 
     # -- consumer ----------------------------------------------------------------
 
@@ -205,13 +214,16 @@ class FairWorkQueue:
                 self._enqueue_time.setdefault(item, time.monotonic())
                 if not self.fair:
                     self._fifo.append(item)
+                    depth = len(self._fifo)
                 else:
                     sub = self._subs.setdefault(tenant, _SubQueue())
                     sub.items.append(key)
+                    depth = len(sub.items)
                     if tenant not in self._active:
                         sub.credit = self._weights.get(tenant, 1)
                         self._active.append(tenant)
                 self._cv.notify()
+                self._notify_waker(depth)
 
     # -- weighted round robin -----------------------------------------------------
 

@@ -5,6 +5,16 @@ apiserver; deltas update a read-only cache and fire event handlers, which
 typically enqueue keys into a work queue. Reconcilers read the cache, never
 the apiserver (paper §III-C: "state comparisons are made against ... informer
 caches to avoid intensive direct apiserver queries").
+
+Two reflector modes share one cache/handler surface:
+
+- **thread mode** (default): one OS thread blocks in ``watch.next()`` — the
+  legacy/fallback path;
+- **cooperative mode** (``start(executor=...)``): the reflector is a state
+  machine task on a shared :class:`~repro.core.executor.CooperativeExecutor`.
+  It drains a bounded batch of events per quantum via ``_Watch.poll()`` and
+  parks (zero threads) on the watch's waker when idle, so thousands of
+  informers cost O(pool size) threads instead of one thread each.
 """
 from __future__ import annotations
 
@@ -12,10 +22,15 @@ import threading
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from .apiserver import APIServer
+from .executor import CooperativeExecutor, Task
 from .objects import deepcopy_obj
 from .store import ADDED, DELETED, MODIFIED
 
 Handler = Callable[[str, Any], None]   # (event_type, object)
+
+# events drained per cooperative quantum before yielding the pool
+PUMP_QUANTUM = 256
+RELIST_BACKOFF = 0.05
 
 
 class InformerCache:
@@ -58,7 +73,8 @@ class InformerCache:
 
 
 class Informer:
-    """Reflector thread + cache + handler fan-out for one (apiserver, kind)."""
+    """Reflector (thread or cooperative task) + cache + handler fan-out for
+    one (apiserver, kind)."""
 
     def __init__(self, api: APIServer, kind: str,
                  namespace: Optional[str] = None, name: str = ""):
@@ -71,6 +87,10 @@ class Informer:
         self._stop = threading.Event()
         self._synced = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        self._task: Optional[Task] = None
+        self._executor: Optional[CooperativeExecutor] = None
+        self._watch: Optional[Any] = None
+        self._pstate = "relist"
         self.relist_count = 0
 
     def add_handler(self, handler: Handler) -> None:
@@ -78,14 +98,32 @@ class Informer:
 
     @property
     def alive(self) -> bool:
-        return self._thread is not None and self._thread.is_alive()
+        if self._thread is not None and self._thread.is_alive():
+            return True
+        return self._task is not None and self._task.alive
 
-    def start(self) -> None:
+    def start(self, executor: Optional[CooperativeExecutor] = None) -> None:
+        """Start the reflector: cooperative pump task when ``executor`` is
+        given, dedicated thread otherwise. Idempotent while alive (an
+        adopted informer keeps its running reflector, whatever its mode)."""
         if self.alive:
-            return   # idempotent: an adopted informer keeps its reflector
+            return
         # fresh events so a stopped informer can be restarted (cache rebuild)
         self._stop = threading.Event()
         self._synced.clear()
+        if executor is not None:
+            self._thread = None
+            self._watch = None
+            self._pstate = "relist"
+            self._executor = executor
+            # defer + publish-then-wake: the first quantum reads self._task
+            task = executor.spawn(self._pump, name=f"informer:{self.name}",
+                                  defer=True)
+            self._task = task
+            task.wake()
+            return
+        self._task = None
+        self._executor = None
         self._thread = threading.Thread(
             target=self._run, name=f"informer:{self.name}", daemon=True)
         self._thread.start()
@@ -97,28 +135,45 @@ class Informer:
         self._stop.set()
         if self._thread is not None:
             self._thread.join(timeout=5.0)
+        if self._task is not None:
+            watch = self._watch
+            if watch is not None:
+                watch.close()       # fires the waker: prompt wakeup
+            self._task.wake()       # covers the pre-watch (relist) state
+            # Joining from a pool thread (e.g. the tenant operator tearing a
+            # tenant down) would park the thread the pump task needs for its
+            # final quantum — self-deadlock at small pools. The task still
+            # terminates asynchronously via the stop event.
+            ex = self._executor
+            if ex is None or not ex.in_pool_thread():
+                self._task.join(timeout=5.0)
 
-    # -- reflector loop ------------------------------------------------------
+    # -- shared replay -------------------------------------------------------
+
+    def _replay(self, snapshot: List[Any]) -> None:
+        """Replay a list snapshot as ADDED events (client-go initial sync),
+        dropping cache entries that vanished between relists."""
+        seen = set()
+        for obj in snapshot:
+            seen.add((obj.metadata.namespace, obj.metadata.name))
+            self._dispatch(ADDED, obj)
+        for key in self.cache.keys():
+            if key not in seen:
+                ghost = self.cache.get(*key)
+                if ghost is not None:
+                    self._dispatch(DELETED, ghost)
+
+    # -- reflector loop (thread mode) ----------------------------------------
 
     def _run(self) -> None:
         while not self._stop.is_set():
             try:
                 snapshot, watch = self.api.list_and_watch(self.kind, self.namespace)
             except Exception:
-                self._stop.wait(0.05)
+                self._stop.wait(RELIST_BACKOFF)
                 continue
             self.relist_count += 1
-            # Replay the snapshot as ADDED events (client-go initial sync),
-            # dropping cache entries that vanished between relists.
-            seen = set()
-            for obj in snapshot:
-                seen.add((obj.metadata.namespace, obj.metadata.name))
-                self._dispatch(ADDED, obj)
-            for key in self.cache.keys():
-                if key not in seen:
-                    ghost = self.cache.get(*key)
-                    if ghost is not None:
-                        self._dispatch(DELETED, ghost)
+            self._replay(snapshot)
             self._synced.set()
             while not self._stop.is_set():
                 ev = watch.next(timeout=0.2)
@@ -128,6 +183,43 @@ class Informer:
                     continue
                 self._dispatch(ev.type, ev.object)
             watch.close()
+
+    # -- reflector pump (cooperative mode) -----------------------------------
+
+    def _pump(self) -> Any:
+        """One quantum of the cooperative reflector state machine."""
+        if self._stop.is_set():
+            watch, self._watch = self._watch, None
+            if watch is not None:
+                watch.close()
+            return Task.DONE
+        if self._pstate == "relist":
+            try:
+                snapshot, watch = self.api.list_and_watch(self.kind,
+                                                          self.namespace)
+            except Exception:
+                return RELIST_BACKOFF
+            self.relist_count += 1
+            self._watch = watch
+            self._replay(snapshot)
+            self._synced.set()
+            self._pstate = "pump"
+            # events pushed during replay are buffered; set_waker fires
+            # immediately if any are pending, so none are stranded
+            watch.set_waker(self._task.wake)
+            return Task.AGAIN
+        watch = self._watch
+        for _ in range(PUMP_QUANTUM):
+            ev = watch.poll()
+            if ev is None:
+                if watch.closed:   # overflowed/closed: relist
+                    watch.close()
+                    self._watch = None
+                    self._pstate = "relist"
+                    return Task.AGAIN
+                return Task.WAIT   # waker fires on the next push
+            self._dispatch(ev.type, ev.object)
+        return Task.AGAIN          # quantum spent; yield the pool
 
     def _dispatch(self, ev_type: str, obj: Any) -> None:
         self.cache._apply(ev_type, obj)

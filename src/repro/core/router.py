@@ -12,7 +12,9 @@ the shared controller runtime — Service/WorkUnit informers enqueue
 ``(unit_uid, namespace)`` keys, workers inject rules into per-WorkUnit guest
 tables *before* the workload starts (``wait_for_rules`` is the
 init-container handshake), and a periodic reconcile scan covers all guest
-tables (paper §IV-E measures its cost).
+tables (paper §IV-E measures its cost). On the cooperative executor the
+workers and scan are pool tasks; node agents then poll the init gate with
+backoff (``RetryLater``) rather than blocking a pool thread on it.
 
 It also **validates collective isolation**: parses compiled HLO and asserts
 that every collective's replica groups stay inside the tenant's slice — the

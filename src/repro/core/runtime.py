@@ -15,6 +15,17 @@ node agents declare only *what* they reconcile, not threads or lifecycle:
 - ``MetricsRegistry``   — counters, latency summaries, and live gauges
   (queue depth, reconcile latency, retries, scan cost) shared by every
   controller in the process.
+
+Two scheduling modes, switched by the ``executor`` attribute (set directly
+or adopted from the :class:`ControllerManager`):
+
+- **cooperative** (executor set): informer pumps, reconcile workers, and the
+  periodic scan are tasks on a shared
+  :class:`~repro.core.executor.CooperativeExecutor` — thread count is
+  O(pool size) regardless of controller/worker/informer count, and delayed
+  retries ride the executor's single timer wheel;
+- **blocking fallback** (executor ``None``): the legacy one-thread-per-
+  worker/informer/scan mode, kept so the two paths stay bisectable.
 """
 from __future__ import annotations
 
@@ -24,9 +35,17 @@ from typing import (Any, Callable, Dict, Hashable, List, Optional, Tuple,
                     Type)
 
 from .apiserver import APIServer
+from .executor import CooperativeExecutor, Task
 from .fairqueue import FairWorkQueue
 from .informer import Informer
 from .workqueue import DelayingQueue, RateLimiter, WorkQueue
+
+
+class RetryLater(Exception):
+    """Reconcile cannot make progress *yet* (a gate or precondition is
+    pending). Controllers listing it in ``retry_on`` requeue the key with
+    backoff instead of parking a worker — the cooperative replacement for
+    blocking inside ``reconcile``."""
 
 
 # --------------------------------------------------------------------- metrics
@@ -141,10 +160,13 @@ class Controller:
         self.max_retries = max_retries
         self.metrics = metrics or MetricsRegistry()
         self.limiter = RateLimiter()
+        self.executor: Optional[CooperativeExecutor] = None
         self._informers: List[Informer] = []
         self._threads: List[threading.Thread] = []
+        self._tasks: List[Task] = []
         self._stop = threading.Event()
         self._running = False
+        self._scan_failing = False
         self._lifecycle_lock = threading.Lock()
 
     # -- declaration -------------------------------------------------------
@@ -162,8 +184,8 @@ class Controller:
             self._informers.append(inf)
             running = self._running
         if running:
-            inf.start()
-            inf.wait_for_cache_sync()
+            inf.start(executor=self.executor)
+            self._sync_unless_pooled(inf)
         return inf
 
     def remove_informer(self, inf: Informer) -> None:
@@ -186,8 +208,20 @@ class Controller:
             self._informers.append(inf)
             running = self._running
         if running and not inf.alive:
-            inf.start()
-            inf.wait_for_cache_sync()
+            inf.start(executor=self.executor)
+            self._sync_unless_pooled(inf)
+
+    def _sync_unless_pooled(self, inf: Informer) -> None:
+        """Block until the informer cache syncs — unless we're ON a pool
+        thread, where blocking could starve the very pump task we're
+        waiting for (self-deadlock at pool_size=1, a parked thread per
+        registration otherwise). Reconcilers tolerate a not-yet-synced
+        cache: missing informer state retries (``RetryLater``) and the
+        initial replay re-delivers every key once the snapshot lands."""
+        ex = self.executor
+        if ex is not None and ex.in_pool_thread():
+            return
+        inf.wait_for_cache_sync()
 
     # -- overridables ------------------------------------------------------
 
@@ -218,9 +252,13 @@ class Controller:
                 return
             self._running = True
             self._stop = threading.Event()   # fresh event: restart works
+            self._scan_failing = False
             informers = list(self._informers)
+            ex = self.executor
+        if ex is not None:
+            ex.start()   # idempotent: first controller up brings the pool up
         for inf in informers:
-            inf.start()
+            inf.start(executor=ex)
         for inf in informers:
             inf.wait_for_cache_sync()
         self.on_start()
@@ -230,17 +268,34 @@ class Controller:
                 reopen()
             self.metrics.register_gauge(
                 "queue_depth", lambda: len(self.queue), controller=self.name)
-            for i in range(self.workers):
-                t = threading.Thread(target=self._worker,
-                                     name=f"{self.name}-worker-{i}",
-                                     daemon=True)
+            if ex is not None:
+                use_executor = getattr(self.queue, "use_executor", None)
+                if use_executor is not None:
+                    use_executor(ex)     # delayed retries -> shared timer wheel
+                for i in range(self.workers):
+                    # defer + subscribe-then-wake: no add is ever missed
+                    t = ex.spawn(self._worker_quantum,
+                                 name=f"{self.name}-worker-{i}", defer=True)
+                    self._tasks.append(t)
+                    self.queue.subscribe(t.wake)
+                    t.wake()
+            else:
+                for i in range(self.workers):
+                    t = threading.Thread(target=self._worker,
+                                         name=f"{self.name}-worker-{i}",
+                                         daemon=True)
+                    t.start()
+                    self._threads.append(t)
+        if self.scan_interval > 0:
+            if ex is not None:
+                self._tasks.append(
+                    ex.spawn(self._scan_quantum, name=f"{self.name}-scan",
+                             delay=self.scan_interval))
+            else:
+                t = threading.Thread(target=self._scan_loop,
+                                     name=f"{self.name}-scan", daemon=True)
                 t.start()
                 self._threads.append(t)
-        if self.scan_interval > 0:
-            t = threading.Thread(target=self._scan_loop,
-                                 name=f"{self.name}-scan", daemon=True)
-            t.start()
-            self._threads.append(t)
 
     def stop(self) -> None:
         with self._lifecycle_lock:
@@ -250,14 +305,23 @@ class Controller:
             informers = list(self._informers)
             self._stop.set()   # under the lock: a racing start() swaps the
             #                    event first or sees _running and bails
+            tasks = list(self._tasks)
         if self.queue is not None:
             self.queue.shutdown()
+            for t in tasks:
+                self.queue.unsubscribe(t.wake)
         for inf in informers:
             inf.stop()
         self.on_stop()
         for t in self._threads:
             t.join(timeout=5.0)
         self._threads.clear()
+        for t in tasks:
+            t.cancel()       # idle/ready die now; a running quantum finishes
+        for t in tasks:
+            t.join(timeout=5.0)
+        with self._lifecycle_lock:
+            self._tasks.clear()
 
     @property
     def running(self) -> bool:
@@ -265,10 +329,18 @@ class Controller:
             return self._running
 
     def healthy(self) -> bool:
-        """Running and no worker/scan thread has died."""
+        """Running, no worker/scan thread or cooperative task has died, and
+        the last periodic scan (if any) succeeded."""
         with self._lifecycle_lock:
             if not self._running:
                 return False
+            if self._scan_failing:
+                return False
+            if self._tasks:
+                ex = self.executor
+                if ex is None or not ex.running:
+                    return False
+                return all(t.alive for t in self._tasks)
             return all(t.is_alive() for t in self._threads)
 
     # -- worker machinery --------------------------------------------------
@@ -290,6 +362,33 @@ class Controller:
                     continue
                 self._reconcile_one(item)
 
+    # items per cooperative quantum (amortizes dispatch without hogging the
+    # pool; batched fair-queue dispatch already coalesces, so one per quantum)
+    _QUANTUM_ITEMS = 8
+
+    def _worker_quantum(self) -> Any:
+        """One cooperative worker quantum: drain a bounded number of items,
+        then yield (AGAIN) or park on the queue's waker (WAIT)."""
+        if self._stop.is_set():
+            return Task.DONE
+        q = self.queue
+        if isinstance(q, FairWorkQueue) and self.batch_size > 1:
+            items = q.get_batch(self.batch_size, timeout=0)
+            if not items:
+                return Task.WAIT
+            self.metrics.observe("batch_size", len(items),
+                                 controller=self.name)
+            self.reconcile_batch(items)
+            return Task.AGAIN
+        for _ in range(self._QUANTUM_ITEMS):
+            item = q.get(timeout=0)
+            if item is None:
+                return Task.WAIT
+            self._reconcile_one(item)
+            if self._stop.is_set():
+                return Task.DONE
+        return Task.AGAIN
+
     def _reconcile_one(self, item: Hashable) -> None:
         t0 = time.monotonic()
         m = self.metrics
@@ -310,6 +409,12 @@ class Controller:
                       controller=self.name)
             self.queue.done(item)
 
+    def _retry_queue(self, item: Hashable) -> AnyQueue:
+        """Queue a retried item re-enters — overridable so sharded
+        controllers can route it to the item's CURRENT owner (a tenant may
+        have migrated shards while the item was in flight)."""
+        return self.queue
+
     def _requeue(self, item: Hashable) -> None:
         delay = self.limiter.when(item)
         if self.max_retries is not None and \
@@ -318,19 +423,58 @@ class Controller:
             self.metrics.inc("reconcile_exhausted", controller=self.name)
             return
         self.metrics.inc("reconcile_retries", controller=self.name)
-        q = self.queue
+        q = self._retry_queue(item)
+        ex = self.executor
         if isinstance(q, FairWorkQueue):
-            q.add(*item)                # re-enters the tenant sub-queue
+            if ex is not None and delay > 0:
+                # honour the backoff on the shared timer wheel: an immediate
+                # re-add would hot-spin RetryLater conditions (add -> wake ->
+                # raise) and starve the task that clears them. The owning
+                # queue is re-resolved AT FIRE TIME — a migration during the
+                # backoff would otherwise strand the key on a drained queue.
+                ex.call_later(delay, lambda: self._readd_fair(item),
+                              name=f"{self.name}-retry")
+            else:
+                q.add(*item)            # re-enters the tenant sub-queue
         elif isinstance(q, DelayingQueue):
             q.add_after(item, delay)
+        elif ex is not None and delay > 0:
+            # plain queue on the executor: same timer-wheel backoff
+            ex.call_later(delay, lambda: q.add(item),
+                          name=f"{self.name}-retry")
         else:
             q.add(item)
+
+    def _readd_fair(self, item: Hashable) -> None:
+        """Re-add a retried fair-queue item to its CURRENT owning queue,
+        re-checking after the add (mirrors the tenant event handlers): if a
+        migration raced us, the destination dedups the double add."""
+        while True:
+            q = self._retry_queue(item)
+            q.add(*item)
+            if self._retry_queue(item) is q:
+                return
 
     # -- periodic scan -----------------------------------------------------
 
     def _scan_loop(self) -> None:
         while not self._stop.wait(self.scan_interval):
             self.scan_once()
+
+    def _scan_quantum(self) -> Any:
+        """Cooperative periodic scan: one pass, then re-arm the timer wheel.
+        A failing scan keeps retrying (unlike the thread fallback, whose
+        scan thread dies) but flags the controller unhealthy until a pass
+        succeeds, so both modes surface a broken scan in ``healthy()``."""
+        if self._stop.is_set():
+            return Task.DONE
+        try:
+            self.scan_once()
+            self._scan_failing = False
+        except Exception:
+            self._scan_failing = True
+            self.metrics.inc("scan_errors", controller=self.name)
+        return self.scan_interval
 
     def scan_once(self) -> int:
         t0 = time.monotonic()
@@ -346,28 +490,57 @@ class Controller:
 # --------------------------------------------------------------------- manager
 
 class ControllerManager:
-    """Owns controller lifecycle and the shared metrics registry.
+    """Owns controller lifecycle, the shared metrics registry, and (when
+    given one) the shared cooperative executor.
 
     Controllers start in registration order and stop in reverse, so wiring
     the cluster is just ``add()`` calls in dependency order. Adding to a
-    started manager starts the controller immediately.
+    started manager starts the controller immediately. An ``executor`` is
+    adopted by every added controller that doesn't already have one, started
+    before the first controller, shut down after the last, and exported as
+    gauges (pool size, ready-task backlog, timer-wheel depth) on the shared
+    registry.
     """
 
-    def __init__(self, metrics: Optional[MetricsRegistry] = None):
+    def __init__(self, metrics: Optional[MetricsRegistry] = None,
+                 executor: Optional[CooperativeExecutor] = None):
         self.metrics = metrics or MetricsRegistry()
+        self.executor = executor
+        if executor is not None:
+            self._register_executor_gauges()
         self._controllers: List[Controller] = []
         self._lock = threading.Lock()
         self._started = False
+
+    def _register_executor_gauges(self) -> None:
+        ex = self.executor
+        m = self.metrics
+        m.register_gauge("executor_pool_size", lambda: ex.pool_size)
+        m.register_gauge("executor_ready_backlog", ex.ready_backlog)
+        m.register_gauge("executor_timer_depth", ex.timer_depth)
+        m.register_gauge("executor_tasks", ex.task_count)
+        m.register_gauge("executor_quanta_total", lambda: ex.quanta_total)
+        m.register_gauge("executor_task_errors", lambda: ex.task_errors)
 
     def add(self, *controllers: Controller) -> None:
         with self._lock:
             started = self._started
             for c in controllers:
                 c.metrics = self.metrics
+                if c.executor is None:
+                    c.executor = self.executor
                 self._controllers.append(c)
         if started:
             for c in controllers:
                 c.start()
+
+    def remove(self, *controllers: Controller) -> None:
+        """Drop controllers from managed lifecycle/health (the caller stops
+        them — e.g. ``Syncer.resize_shards`` retiring a drained shard)."""
+        with self._lock:
+            for c in controllers:
+                if c in self._controllers:
+                    self._controllers.remove(c)
 
     def controller(self, name: str) -> Optional[Controller]:
         with self._lock:
@@ -380,6 +553,8 @@ class ControllerManager:
         with self._lock:
             self._started = True
             controllers = list(self._controllers)
+        if self.executor is not None:
+            self.executor.start()
         for c in controllers:
             c.start()
 
@@ -389,6 +564,8 @@ class ControllerManager:
             controllers = list(self._controllers)
         for c in reversed(controllers):
             c.stop()
+        if self.executor is not None:
+            self.executor.shutdown()
 
     def healthy(self) -> Dict[str, bool]:
         with self._lock:

@@ -9,7 +9,9 @@ in EXPERIMENTS.md §Perf (control-plane track).
 
 Runs on the shared controller runtime: a single worker drains a delaying
 queue fed by the WorkUnit informer; failed placements retry with per-key
-exponential backoff; vanished units are dropped.
+exponential backoff; vanished units are dropped. Under the cooperative
+executor the worker is a pool task and retry delays ride the shared timer
+wheel; the blocking-thread fallback keeps the legacy shape.
 
 Scheduling honours:
 - chip capacity (bin packing, least-allocated scoring);

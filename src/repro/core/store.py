@@ -38,7 +38,12 @@ class WatchEvent:
 
 
 class _Watch:
-    """A single watch stream: bounded event buffer + close signal."""
+    """A single watch stream: bounded event buffer + close signal.
+
+    Two consumption modes: the blocking :meth:`next` (reflector threads) and
+    the non-blocking :meth:`poll` + :meth:`set_waker` pair (cooperative
+    informer pumps — the waker fires on every push and on close, so an idle
+    pump parks no thread)."""
 
     def __init__(self, kind: str, namespace: Optional[str], maxlen: int = 100_000):
         self.kind = kind
@@ -48,6 +53,7 @@ class _Watch:
         self._cv = threading.Condition(self._lock)
         self._closed = False
         self._maxlen = maxlen
+        self._waker: Optional[Callable[[], None]] = None
         self.overflowed = False
 
     def _push(self, ev: WatchEvent) -> None:
@@ -61,6 +67,9 @@ class _Watch:
             else:
                 self._events.append(ev)
             self._cv.notify_all()
+            waker = self._waker
+        if waker is not None:
+            waker()
 
     def next(self, timeout: Optional[float] = None) -> Optional[WatchEvent]:
         deadline = None if timeout is None else time.monotonic() + timeout
@@ -77,10 +86,31 @@ class _Watch:
                 return self._events.pop(0)
             return None  # closed
 
+    def poll(self) -> Optional[WatchEvent]:
+        """Non-blocking :meth:`next`: an event if buffered, else None (check
+        :attr:`closed` to tell "idle" from "stream over")."""
+        with self._cv:
+            if self._events:
+                return self._events.pop(0)
+            return None
+
+    def set_waker(self, waker: Optional[Callable[[], None]]) -> None:
+        """Install an on-ready callback, fired on every push and on close.
+        Fires immediately if events are already buffered (or the stream is
+        closed), so no readiness edge is lost between poll() and arming."""
+        with self._cv:
+            self._waker = waker
+            fire = waker is not None and (bool(self._events) or self._closed)
+        if fire:
+            waker()
+
     def close(self) -> None:
         with self._cv:
             self._closed = True
             self._cv.notify_all()
+            waker = self._waker
+        if waker is not None:
+            waker()
 
     @property
     def closed(self) -> bool:

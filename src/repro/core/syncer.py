@@ -26,7 +26,11 @@ objects to the worker queues (paper: "significantly reduces the complexity of
 recovering inconsistencies caused by various rare reasons").
 
 Defaults follow the paper: 20 downward workers (split across shards), 100
-upward workers, 60 s scan interval, one shard.
+upward workers, 60 s scan interval, one shard. Passing ``executor=`` runs
+every shard/upward/scan controller — and all tenant informer pumps, the
+``resize_shards`` handover included — as tasks on that shared
+:class:`~repro.core.executor.CooperativeExecutor` instead of dedicated
+threads (thread count O(pool) instead of O(tenants × kinds)).
 """
 from __future__ import annotations
 
@@ -42,7 +46,7 @@ from .fairqueue import FairWorkQueue
 from .informer import Informer
 from .objects import (SYNCED_KINDS_DOWNWARD, SYNCED_KINDS_UPWARD, Namespace,
                       WorkUnit, deepcopy_obj, obj_kind)
-from .runtime import Controller, MetricsRegistry
+from .runtime import Controller, MetricsRegistry, RetryLater
 from .store import (ADDED, DELETED, MODIFIED, AlreadyExistsError,
                     ConflictError, NotFoundError)
 from .vnode import VNodeManager
@@ -201,11 +205,19 @@ class _DownwardShard(Controller):
         super().__init__(f"syncer-dws-{shard_id}",
                          queue=FairWorkQueue(f"downward-{shard_id}", fair=fair),
                          workers=workers, batch_size=batch_size,
-                         retry_on=(ConflictError, AlreadyExistsError),
+                         retry_on=(ConflictError, AlreadyExistsError,
+                                   RetryLater),
                          drop_on=())
         self.syncer = syncer
         self.shard_id = shard_id
         self.api = syncer.super_api.client(f"dws-{shard_id}")
+
+    def _retry_queue(self, item: Any) -> Any:
+        """Retries re-enter the tenant's CURRENT shard: if resize_shards
+        migrated the tenant while this item was in flight, re-adding to our
+        own (drained, possibly about-to-stop) queue would strand the key."""
+        reg = self.syncer.tenants.get(item[0])   # GIL-atomic dict read
+        return reg.shard.queue if reg is not None else self.queue
 
     def reconcile(self, item: Any) -> None:
         tenant, (kind, ns, name) = item
@@ -312,8 +324,15 @@ class Syncer:
                  batch_upward: bool = False,
                  shards: int = 1,
                  downward_batch: int = 1,
-                 ring_vnodes: int = 64):
+                 ring_vnodes: int = 64,
+                 executor: Optional[Any] = None):
         self.super_api = super_api
+        # shared CooperativeExecutor: informer pumps, workers, and the scan
+        # run as tasks on its bounded pool; None = legacy one-thread-per-loop
+        self.executor = executor
+        # optional owning ControllerManager: resize_shards keeps its
+        # controller list in sync (health map + stop cover resized shards)
+        self.manager: Optional[Any] = None
         self.downward_workers = downward_workers
         self.upward_workers = upward_workers
         self.fair_queuing = fair_queuing
@@ -345,6 +364,7 @@ class Syncer:
             self.controllers.append(_ScanController(self, scan_interval))
         for c in self.controllers:
             c.metrics = registry
+            c.executor = executor
 
         # Super-side informers for every synced kind: upward kinds feed the
         # upward queue; the rest exist so the downward fast lane can make
@@ -384,11 +404,17 @@ class Syncer:
             with self._tenants_lock:
                 self.tenants[plane.name] = reg
             shard.queue.register_tenant(plane.name, plane.weight)
+            # Declare ALL informers into reg.informers BEFORE starting any:
+            # a started informer's initial replay enqueues keys immediately,
+            # and a worker reconciling one must find every reg.informers
+            # entry populated (an unstarted informer just has an unsynced
+            # cache, which reconcile treats as "retry later").
             for kind in SYNCED_KINDS_DOWNWARD:
-                reg.informers[kind] = shard.add_informer(
-                    plane.api, kind,
-                    handler=self._tenant_handler(plane.name, kind),
-                    name=f"{plane.name}/{kind}")
+                inf = Informer(plane.api, kind, name=f"{plane.name}/{kind}")
+                inf.add_handler(self._tenant_handler(plane.name, kind))
+                reg.informers[kind] = inf
+            for inf in reg.informers.values():
+                shard.attach_informer(inf)
         return prefix
 
     def unregister_tenant(self, tenant: str) -> None:
@@ -437,9 +463,10 @@ class Syncer:
         destination, and its informers are handed over WITHOUT stopping their
         reflectors. Returns ``{tenant: new_shard_id}`` for the movers.
 
-        Note: when the syncer's controllers are owned by an external
-        ControllerManager, shards added here are started/stopped by the
-        syncer itself.
+        When the syncer's controllers are owned by a ControllerManager
+        (``self.manager``, wired by ``VirtualClusterFramework``), shards
+        added/removed here are also added/removed there, so the manager's
+        health map and stop cover the resized fleet.
         """
         n = max(1, int(n))
         with self._resize_lock:
@@ -458,10 +485,13 @@ class Syncer:
                                    fair=self.fair_queuing,
                                    batch_size=self.downward_batch)
                 c.metrics = registry
+                c.executor = self.executor
                 self.shard_controllers.append(c)
                 self.controllers.append(c)
                 if running:
                     c.start()   # must run before tenants route onto it
+                if self.manager is not None:
+                    self.manager.add(c)   # start() above is idempotent
             new_ring = ShardRing(n, self.ring_vnodes)
             with self._tenants_lock:
                 regs = list(self.tenants.values())
@@ -478,6 +508,8 @@ class Syncer:
                 for c in self.shard_controllers[n:]:
                     c.stop()
                     self.controllers.remove(c)
+                    if self.manager is not None:
+                        self.manager.remove(c)
                 del self.shard_controllers[n:]
             return moved
 
@@ -494,6 +526,13 @@ class Syncer:
         for inf in reg.informers.values():
             old_shard.detach_informer(inf)
             new_shard.attach_informer(inf)
+        # A handler that read reg.shard just before the swap may have
+        # added to the old queue after the drain — auto-re-registering the
+        # tenant there as a ghost. The handler's re-check routes the item
+        # to the new queue too (dedup makes the double add harmless), so
+        # this second drain+unregister only clears the ghost entry.
+        old_shard.queue.drain_tenant(tenant)
+        old_shard.queue.unregister_tenant(tenant)
 
     # ------------------------------------------------------------ event handlers
 
@@ -557,7 +596,17 @@ class Syncer:
             reg = self.tenants.get(tenant)
         if reg is None:
             return
-        tenant_obj = reg.informers[kind].cache.get(ns, name)
+        tenant_inf = reg.informers.get(kind)
+        if tenant_inf is None:
+            # registration still in flight: requeue with backoff instead of
+            # dropping the key (a drop would orphan the object until the
+            # next scan — forever when scans are disabled)
+            raise RetryLater(f"{tenant}/{kind} informer not registered yet")
+        tenant_obj = tenant_inf.cache.get(ns, name)
+        if tenant_obj is None and not tenant_inf.wait_for_cache_sync(0):
+            # an unsynced cache cannot confirm absence — deleting downstream
+            # off it would tear down live objects during informer (re)start
+            raise RetryLater(f"{tenant}/{kind} cache not synced yet")
         super_ns = self._translate_ns(reg, ns)
         if kind == "Namespace":
             super_ns_name = self._translate_ns(reg, name)
@@ -633,10 +682,12 @@ class Syncer:
         for key in keys:
             kind, ns, name = key
             sup_inf = self._super_informers.get(kind)
-            if kind == "Namespace" or sup_inf is None:
-                slow.append(key)
-                continue
-            tenant_obj = reg.informers[kind].cache.get(ns, name)
+            tenant_inf = reg.informers.get(kind)
+            if (kind == "Namespace" or sup_inf is None or tenant_inf is None
+                    or not tenant_inf.wait_for_cache_sync(0)):
+                slow.append(key)     # authoritative per-item path (which
+                continue             # retries mid-registration informers)
+            tenant_obj = tenant_inf.cache.get(ns, name)
             super_ns = self._translate_ns(reg, ns)
             cached = sup_inf.cache.get(super_ns, name)
             if tenant_obj is None:          # deleted in tenant
@@ -737,7 +788,8 @@ class Syncer:
         def mutate(u: WorkUnit) -> None:
             u.status = status
 
-        cached = reg.informers["WorkUnit"].cache.get(tenant_ns, name)
+        winf = reg.informers.get("WorkUnit")
+        cached = winf.cache.get(tenant_ns, name) if winf is not None else None
         if cached is not None and _status_equal(cached.status, status):
             return
         try:
@@ -754,7 +806,8 @@ class Syncer:
             s.endpoints = eps
             s.virtual_ip = vip
 
-        cached = reg.informers["Service"].cache.get(tenant_ns, name)
+        sinf = reg.informers.get("Service")
+        cached = sinf.cache.get(tenant_ns, name) if sinf is not None else None
         if cached is not None and cached.endpoints == eps and cached.virtual_ip == vip:
             return
         try:
@@ -790,7 +843,14 @@ class Syncer:
                     orphans_by_tenant.setdefault(resolved[0], []).append(
                         (sobj, resolved[1]))
             for tenant, reg in regs:
-                tcache = reg.informers[kind].cache
+                tenant_inf = reg.informers.get(kind)
+                if tenant_inf is None or not tenant_inf.wait_for_cache_sync(0):
+                    # registration in flight or cache not yet synced: an
+                    # empty pre-sync cache would read as "everything
+                    # deleted" and orphan-enqueue the tenant's live super
+                    # objects; the next scan covers this tenant instead
+                    continue
+                tcache = tenant_inf.cache
                 seen_super = set()
                 for tobj in tcache.list():
                     ns, name = tobj.metadata.namespace, tobj.metadata.name

@@ -7,7 +7,9 @@ so the syncer can reach every tenant plane, register the tenant with the
 syncer and the vn-agents, and tear everything down on delete.
 
 Runs on the shared controller runtime: one informer, a delaying queue, one
-worker, rate-limited retries on provisioning errors.
+worker, rate-limited retries on provisioning errors. Under the cooperative
+executor all of it is pool tasks (tenant registration spawns the per-tenant
+informer pumps on the same shared pool).
 """
 from __future__ import annotations
 

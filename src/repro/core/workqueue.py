@@ -13,10 +13,55 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Any, Dict, Hashable, List, Optional, Tuple
+from typing import Any, Callable, Dict, Hashable, List, Optional, Tuple
 
 
-class WorkQueue:
+class WakerSubscriptions:
+    """Readiness subscription shared by every work-queue flavour
+    (cooperative executor mode).
+
+    ``subscribe(waker)`` registers an on-ready callback; consumers poll
+    with ``get(timeout=0)`` (or ``get_batch(..., timeout=0)``) and park when
+    nothing is returned. Producers call ``_notify_waker(depth)`` with their
+    pending-item depth — the whole queue, or one tenant sub-queue in fair
+    mode — and one subscriber is woken (round-robin) per ``_WAKE_STRIDE``
+    pending items: the empty->nonempty edge always wakes (it sustains the
+    drain — a woken consumer polls until the queue is empty before parking
+    again), the stride recruits extra consumers for bursts without a waker
+    round-trip per add, and the in-between silence lets bursts accumulate
+    into real dequeue batches.
+    """
+
+    _WAKE_STRIDE = 8
+
+    def _init_wakers(self) -> None:
+        self._wakers: List[Callable[[], None]] = []
+        self._waker_rr = 0
+
+    def subscribe(self, waker: Callable[[], None]) -> None:
+        with self._cv:
+            self._wakers.append(waker)
+
+    def unsubscribe(self, waker: Callable[[], None]) -> None:
+        with self._cv:
+            try:
+                self._wakers.remove(waker)
+            except ValueError:
+                pass
+
+    def _notify_waker(self, depth: int) -> None:
+        # call with _cv held
+        if not self._wakers or not (
+                depth == 1 or depth % self._WAKE_STRIDE == 0):
+            return
+        self._waker_rr = (self._waker_rr + 1) % len(self._wakers)
+        try:
+            self._wakers[self._waker_rr]()
+        except Exception:
+            pass
+
+
+class WorkQueue(WakerSubscriptions):
     def __init__(self, name: str = "queue"):
         self.name = name
         self._lock = threading.Lock()
@@ -25,6 +70,7 @@ class WorkQueue:
         self._dirty: set = set()
         self._processing: set = set()
         self._shutdown = False
+        self._init_wakers()
         # metrics
         self.added = 0
         self.deduped = 0
@@ -46,6 +92,7 @@ class WorkQueue:
             self._queue.append(key)
             self._enqueue_time.setdefault(key, time.monotonic())
             self._cv.notify()
+            self._notify_waker(len(self._queue))
 
     def get(self, timeout: Optional[float] = None) -> Optional[Hashable]:
         with self._cv:
@@ -73,6 +120,7 @@ class WorkQueue:
                 self._queue.append(key)
                 self._enqueue_time.setdefault(key, time.monotonic())
                 self._cv.notify()
+                self._notify_waker(len(self._queue))
 
     def __len__(self) -> int:
         with self._lock:
@@ -118,26 +166,56 @@ class RateLimiter:
 
 
 class DelayingQueue(WorkQueue):
-    """WorkQueue + add_after (used for rate-limited retries)."""
+    """WorkQueue + add_after (used for rate-limited retries).
+
+    Delays run on per-item ``threading.Timer`` threads by default; wiring a
+    :class:`~repro.core.executor.CooperativeExecutor` via :meth:`use_executor`
+    moves them onto its single shared timer wheel (no thread per delay).
+    ``shutdown()`` cancels every pending delay and ``add_after`` on a shut
+    queue is a no-op, so stray timers can never re-open a drained queue
+    (e.g. during ``resize_shards`` or manager stop)."""
 
     def __init__(self, name: str = "delaying"):
         super().__init__(name)
         self._timers: List[threading.Timer] = []
+        self._handles: List[Any] = []          # executor timer tasks
         self._tlock = threading.Lock()
+        self._executor: Optional[Any] = None
+
+    def use_executor(self, executor: Any) -> None:
+        """Schedule future delays on ``executor``'s shared timer wheel."""
+        with self._tlock:
+            self._executor = executor
 
     def add_after(self, key: Hashable, delay: float) -> None:
         if delay <= 0:
             self.add(key)
             return
-        t = threading.Timer(delay, self.add, args=(key,))
-        t.daemon = True
         with self._tlock:
+            # shutdown() sets the flag BEFORE cancelling under _tlock, so a
+            # timer registered here is either seen by that cancel pass or
+            # never created — add_after after shutdown is a strict no-op
+            if self.is_shutdown:
+                return
+            ex = self._executor
+            if ex is not None:
+                self._handles = [h for h in self._handles if h.alive]
+                self._handles.append(
+                    ex.call_later(delay, lambda: self.add(key),
+                                  name=f"{self.name}-delay"))
+                return
+            t = threading.Timer(delay, self.add, args=(key,))
+            t.daemon = True
             self._timers = [x for x in self._timers if x.is_alive()]
             self._timers.append(t)
         t.start()
 
     def shutdown(self) -> None:
+        super().shutdown()    # flag first: concurrent add_after turns no-op
         with self._tlock:
-            for t in self._timers:
-                t.cancel()
-        super().shutdown()
+            timers, self._timers = self._timers, []
+            handles, self._handles = self._handles, []
+        for t in timers:
+            t.cancel()
+        for h in handles:
+            h.cancel()

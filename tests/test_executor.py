@@ -1,0 +1,314 @@
+"""Shared cooperative executor: timer-wheel ordering, starvation freedom
+across controllers on one pool, informer handover under resize_shards with
+events in flight, the O(pool) thread bound at 64 tenants, DelayingQueue
+shutdown semantics, and the metrics HTTP endpoint."""
+import json
+import threading
+import time
+import urllib.request
+
+import pytest
+
+from repro.core import (APIServer, Controller, ControllerManager,
+                        CooperativeExecutor, Namespace, Syncer, Task,
+                        TenantControlPlane, VirtualClusterFramework, WorkUnit)
+from repro.core.workqueue import DelayingQueue, WorkQueue
+
+
+def wait_for(cond, timeout=10.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if cond():
+            return True
+        time.sleep(0.005)
+    return False
+
+
+@pytest.fixture
+def ex():
+    ex = CooperativeExecutor(pool_size=4, name="test")
+    ex.start()
+    yield ex
+    ex.shutdown()
+
+
+# ------------------------------------------------------------------ executor
+
+def test_executor_thread_count_is_pool_size_not_task_count(ex):
+    base = threading.active_count()
+    waited = [ex.spawn(lambda: Task.WAIT, name=f"idle-{i}")
+              for i in range(200)]
+    assert wait_for(lambda: ex.ready_backlog() == 0)
+    assert ex.task_count() >= 200
+    assert threading.active_count() == base          # zero threads per task
+    for t in waited:
+        t.cancel()
+    assert wait_for(lambda: ex.task_count() == 0)
+
+
+def test_timer_wheel_fires_in_deadline_order(ex):
+    fired = []
+    lock = threading.Lock()
+
+    def mark(tag):
+        def fn():
+            with lock:
+                fired.append(tag)
+        return fn
+
+    # armed out of order; must fire in deadline order off one shared wheel
+    ex.call_later(0.15, mark("c"))
+    ex.call_later(0.05, mark("a"))
+    ex.call_later(0.10, mark("b"))
+    assert ex.timer_depth() == 3
+    assert wait_for(lambda: len(fired) == 3)
+    assert fired == ["a", "b", "c"]
+    assert ex.timer_depth() == 0
+
+
+def test_task_wake_during_run_requeues_once_more(ex):
+    runs = []
+    gate = threading.Event()
+
+    def fn():
+        runs.append(time.monotonic())
+        gate.wait(1.0)
+        return Task.WAIT
+
+    t = ex.spawn(fn, name="rewake")
+    assert wait_for(lambda: len(runs) == 1)
+    t.wake()            # lands while RUNNING -> pending -> one more quantum
+    gate.set()
+    assert wait_for(lambda: len(runs) == 2)
+    time.sleep(0.05)
+    assert len(runs) == 2
+
+
+def test_task_errors_do_not_kill_the_pool(ex):
+    def boom():
+        raise RuntimeError("induced")
+
+    t = ex.spawn(boom, name="boom")
+    assert wait_for(lambda: ex.task_errors >= 1)
+    assert t.alive                  # broken task idles; pool unharmed
+    ok = []
+    ex.spawn(lambda: ok.append(1) or Task.DONE, name="after")
+    assert wait_for(lambda: ok == [1])
+
+
+class Recorder(Controller):
+    def __init__(self, name, queue=None, delay=0.0, **kw):
+        super().__init__(name, queue=queue or WorkQueue(name), **kw)
+        self.seen = []
+        self.delay = delay
+        self._seen_lock = threading.Lock()
+
+    def reconcile(self, key):
+        if self.delay:
+            time.sleep(self.delay)
+        with self._seen_lock:
+            self.seen.append(key)
+
+
+def test_starvation_freedom_two_controllers_one_pool():
+    """A controller flooding the pool must not starve a light controller:
+    FIFO ready-deque dispatch with bounded quanta interleaves them."""
+    ex = CooperativeExecutor(pool_size=2, name="tiny")
+    heavy = Recorder("heavy", workers=2, delay=0.002)
+    light = Recorder("light", workers=1)
+    m = ControllerManager(executor=ex)
+    m.add(heavy, light)
+    m.start()
+    try:
+        for i in range(300):
+            heavy.queue.add(f"h{i}")
+        for i in range(5):
+            light.queue.add(f"l{i}")
+        assert wait_for(lambda: len(light.seen) == 5, timeout=5.0)
+        # the light controller finished while the flood was still draining
+        assert len(heavy.seen) < 300
+        assert wait_for(lambda: len(heavy.seen) == 300, timeout=30.0)
+    finally:
+        m.stop()
+
+
+def test_controller_restart_and_health_on_executor(ex):
+    c = Recorder("restartable", workers=2)
+    c.executor = ex
+    c.start()
+    assert c.healthy()
+    c.queue.add("a")
+    assert wait_for(lambda: c.seen == ["a"])
+    c.stop()
+    assert not c.healthy()
+    c.start()
+    c.queue.add("b")
+    assert wait_for(lambda: c.seen == ["a", "b"])
+    c.stop()
+
+
+# ------------------------------------------------------- delaying queue fix
+
+def test_delaying_queue_shutdown_cancels_pending_timers():
+    q = DelayingQueue("dq")
+    q.add_after("k", 0.05)
+    q.shutdown()
+    q.reopen()               # drained queue reopened (controller restart)
+    time.sleep(0.12)
+    assert len(q) == 0       # the cancelled timer must not resurrect "k"
+
+
+def test_delaying_queue_add_after_post_shutdown_is_noop():
+    q = DelayingQueue("dq2")
+    q.shutdown()
+    q.add_after("k", 0.01)   # no-op: no timer is even created
+    q.reopen()
+    time.sleep(0.05)
+    assert len(q) == 0
+
+
+def test_delaying_queue_on_executor_timer_wheel(ex):
+    q = DelayingQueue("dq3")
+    q.use_executor(ex)
+    base = threading.active_count()
+    q.add_after("k", 0.03)
+    assert threading.active_count() == base   # no threading.Timer thread
+    assert ex.timer_depth() >= 1
+    assert wait_for(lambda: len(q) == 1)
+    assert q.get(timeout=0) == "k"
+    # shutdown cancels wheel entries too
+    q.add_after("k2", 0.03)
+    q.shutdown()
+    q.reopen()
+    time.sleep(0.08)
+    assert len(q) == 0
+
+
+# ------------------------------------------------ syncer on the shared pool
+
+def _mk_unit(name, ns="default"):
+    u = WorkUnit()
+    u.metadata.name = name
+    u.metadata.namespace = ns
+    return u
+
+
+def _syncer_rig(tenants, ex, shards=1, batch=1):
+    super_api = APIServer("super")
+    syncer = Syncer(super_api, downward_workers=4, upward_workers=2,
+                    scan_interval=0.0, shards=shards, downward_batch=batch,
+                    executor=ex)
+    planes = [TenantControlPlane(f"t{i:03d}") for i in range(tenants)]
+    for i, p in enumerate(planes):
+        syncer.register_tenant(p, f"uid-{i:03d}")
+    syncer.start()
+    return super_api, syncer, planes
+
+
+def test_thread_count_bounded_with_64_tenants():
+    """The acceptance bound: 64 tenants x 5 informers each would be 300+
+    threads in legacy mode; on the executor, OS thread count stays within
+    pool + 8 regardless."""
+    pool = 8
+    base = threading.active_count()
+    ex = CooperativeExecutor(pool_size=pool, name="dense")
+    super_api, syncer, planes = _syncer_rig(64, ex)
+    try:
+        assert len(syncer.tenants) == 64
+        assert ex.task_count() > 300          # informer pumps + workers
+        assert threading.active_count() <= pool + 8
+        assert threading.active_count() - base <= pool + 2
+        # and the control plane actually works at that density
+        for p in planes[:8]:
+            ns = Namespace()
+            ns.metadata.name = "default"
+            p.api.create(ns)
+            p.api.create(_mk_unit("u0"))
+        assert wait_for(
+            lambda: super_api.store.count("WorkUnit") >= 8, timeout=15.0)
+    finally:
+        syncer.stop()
+        ex.shutdown()
+        super_api.close()
+    assert wait_for(lambda: threading.active_count() <= base)
+
+
+def test_resize_shards_handover_with_events_in_flight():
+    """Live informer handover on the executor: grow the shard fleet while
+    tenants are bursting; nothing is lost and no reflector restarts."""
+    ex = CooperativeExecutor(pool_size=4, name="resize")
+    super_api, syncer, planes = _syncer_rig(8, ex, shards=1, batch=4)
+    try:
+        for p in planes:
+            ns = Namespace()
+            ns.metadata.name = "default"
+            p.api.create(ns)
+        relists_before = {
+            t: {k: inf.relist_count for k, inf in reg.informers.items()}
+            for t, reg in syncer.tenants.items()}
+        stop_burst = threading.Event()
+
+        def burst(plane, idx):
+            i = 0
+            while not stop_burst.is_set():
+                plane.api.create(_mk_unit(f"u{idx}-{i:04d}"))
+                i += 1
+                time.sleep(0.001)
+
+        threads = [threading.Thread(target=burst, args=(p, i), daemon=True)
+                   for i, p in enumerate(planes)]
+        for t in threads:
+            t.start()
+        time.sleep(0.05)
+        moved = syncer.resize_shards(3)
+        time.sleep(0.05)
+        stop_burst.set()
+        for t in threads:
+            t.join()
+        assert moved                           # some tenants changed shard
+        total = sum(p.api.store.count("WorkUnit") for p in planes)
+        assert wait_for(
+            lambda: super_api.store.count("WorkUnit") >= total, timeout=30.0)
+        # handed-over informers kept their reflector tasks: no relists
+        for t, reg in syncer.tenants.items():
+            for k, inf in reg.informers.items():
+                assert inf.relist_count == relists_before[t][k]
+                assert inf.alive
+    finally:
+        syncer.stop()
+        ex.shutdown()
+        super_api.close()
+
+
+# ----------------------------------------------------- metrics HTTP export
+
+def test_serve_metrics_http_endpoint():
+    fw = VirtualClusterFramework(num_nodes=2, scan_interval=0.0,
+                                 heartbeat_interval=0.5)
+    with fw:
+        port = fw.serve_metrics(port=0)
+        snap = json.load(urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/metrics", timeout=5))
+        assert set(snap) == {"counters", "summaries", "gauges"}
+        assert snap["gauges"]["executor_pool_size"] == 8.0
+        assert "executor_ready_backlog" in snap["gauges"]
+        assert "executor_timer_depth" in snap["gauges"]
+        health = json.load(urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/healthz", timeout=5))
+        assert health and all(health.values())
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(f"http://127.0.0.1:{port}/nope", timeout=5)
+
+
+def test_framework_legacy_thread_mode_still_works():
+    """The blocking-thread fallback stays alive (bisectable diff). Small
+    worker budget: the default 120+ threads thrash small CI machines."""
+    fw = VirtualClusterFramework(num_nodes=2, scan_interval=0.0,
+                                 heartbeat_interval=0.5, executor_mode=False,
+                                 downward_workers=4, upward_workers=4)
+    assert fw.executor is None
+    with fw:
+        plane = fw.add_tenant("legacy")
+        fw.submit(plane, fw.make_unit("job", chips=1))
+        u = fw.wait_ready(plane, "default", "job", timeout=60)
+        assert u.status.phase == "Ready"

@@ -71,9 +71,30 @@ def test_every_unit_bound_to_virtual_node(burst_rig):
 
 
 def test_dedup_reduces_sync_work(burst_rig):
+    """Paper §III-C: "the client-go worker queue has the capability of
+    deduplicating the incoming requests". Back-to-back updates of the same
+    key land while the first add is still queued/processing, so the second
+    is absorbed. (Label-only updates: no spec change reaches the super
+    cluster, so this is pure sync-queue traffic.)"""
     fw, planes = burst_rig
     q = fw.syncer.down_queue
-    assert q.deduped > 0          # status-echo events were deduplicated
+
+    def churn(plane):
+        for j in range(25):
+            for rev in ("a", "b"):
+                u = plane.api.get("WorkUnit", "default", f"u{j:03d}")
+                u.metadata.labels["rev"] = rev
+                plane.api.update(u)
+
+    threads = [threading.Thread(target=churn, args=(p,)) for p in planes]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    deadline = time.monotonic() + 10.0
+    while time.monotonic() < deadline and q.deduped == 0:
+        time.sleep(0.01)
+    assert q.deduped > 0          # duplicate sync requests were absorbed
     assert q.added > q.deduped
 
 
