@@ -11,6 +11,12 @@ Measures downward-sync throughput of a standalone Syncer at shard counts
 - ``churn``   — a create/update/delete mix per tenant against a pre-synced
   population (exercises all three batched write paths at once).
 
+A fourth, executor-only ``autoscale`` scenario drives the closed-loop
+autoscaler through a burst ramp: starting from 1 shard / 2 pool threads, the
+fleet must grow (shards and executor threads) during the waves, converge
+every created object, and shrink back to its floors after idle cooldown.
+``--smoke`` asserts all three (the CI gate for the scaling loop).
+
 The total downward worker count is held constant across configurations, so
 each sweep isolates the effect of per-shard queues + same-tenant batch
 coalescing + per-shard super-API clients over one global fair queue.
@@ -39,8 +45,8 @@ import threading
 import time
 from typing import Callable, Dict, List, Optional
 
-from repro.core import (APIServer, CooperativeExecutor, Namespace, Syncer,
-                        TenantControlPlane, WorkUnit)
+from repro.core import (APIServer, Autoscaler, CooperativeExecutor, Namespace,
+                        ScalingPolicy, Syncer, TenantControlPlane, WorkUnit)
 
 OUT_PATH = "BENCH_syncer_shards.json"
 UPDATED_CHIPS = 123        # spec marker the update/churn waits look for
@@ -281,13 +287,97 @@ SCENARIOS = {
 }
 
 
-def _append_history(out_path: str, record: Dict) -> None:
-    """Append one run record to the tracked history file (never overwrite).
+def _run_autoscale(tenants: int, per_tenant: int, waves: int = 3,
+                   idle_timeout: float = 30.0) -> Dict:
+    """Closed-loop load ramp: burst waves against a minimal fleet, prove the
+    autoscaler grows shards AND executor threads during the burst and
+    shrinks both back to their floors after idle cooldown, with no lost
+    keys (every created tenant object converges to the super cluster).
+
+    Executor mode only — the vertical actuator needs a pool to size. The
+    fleet starts at 1 shard / 2 pool threads; the policy's fast ticks and
+    short cooldowns are benchmark-scale (the in-process control plane
+    reconciles in microseconds, so seconds-scale production cooldowns would
+    just mean watching paint dry)."""
+    super_api = APIServer("super")
+    executor = CooperativeExecutor(2, name="bench-as")
+    syncer = Syncer(super_api, downward_workers=8, upward_workers=4,
+                    scan_interval=0.0, shards=1, downward_batch=4,
+                    executor=executor)
+    policy = ScalingPolicy(min_shards=1, max_shards=8, shard_up_depth=16.0,
+                           shard_down_depth=1.0, min_pool=2, max_pool=16,
+                           pool_up_backlog=2.0, pool_down_backlog=0.25,
+                           hysteresis=2, up_cooldown_s=0.1,
+                           down_cooldown_s=0.5, window_s=1.5)
+    scaler = Autoscaler(syncer, executor, policy=policy, interval=0.03)
+    planes = [TenantControlPlane(f"t{i:03d}") for i in range(tenants)]
+    for i, p in enumerate(planes):
+        syncer.register_tenant(p, f"uid-{i:03d}")
+    syncer.start()
+    scaler.start()
+    try:
+        for p in planes:
+            ns = Namespace()
+            ns.metadata.name = "bench"
+            p.api.create(ns)
+        total = 0
+        t0 = time.monotonic()
+        for wave in range(waves):
+            lo = wave * per_tenant
+            _fanout(planes, lambda p, lo=lo: [
+                p.api.create(_mk_unit(f"u{j:05d}"))
+                for j in range(lo, lo + per_tenant)])
+            total += tenants * per_tenant
+            time.sleep(0.05)      # ramp, not one monolithic burst
+        _wait(lambda: super_api.store.count("WorkUnit") >= total)
+        burst_s = time.monotonic() - t0
+        events = scaler.scale_events()
+        peak_shards = max([d["to"] for d in events
+                           if d["actuator"] == "shards"] + [1])
+        peak_pool = max([d["to"] for d in events
+                         if d["actuator"] == "executor_pool"] + [2])
+        # idle cooldown: both actuators must return to their floors
+        _wait(lambda: (syncer.num_shards == policy.min_shards
+                       and executor.pool_size == policy.min_pool),
+              timeout=idle_timeout)
+        events = scaler.scale_events()
+        rec = {
+            "name": f"syncer_shards/executor/autoscale/t{tenants}",
+            "scenario": "autoscale", "mode": "executor",
+            "tenants": tenants, "per_tenant": per_tenant, "waves": waves,
+            "ops": total, "elapsed_s": burst_s,
+            "throughput_per_s": total / burst_s if burst_s else 0.0,
+            "converged": super_api.store.count("WorkUnit") >= total,
+            "scale_ups": sum(1 for d in events if d["direction"] == "up"),
+            "scale_downs": sum(1 for d in events if d["direction"] == "down"),
+            "shard_ups": sum(1 for d in events if d["actuator"] == "shards"
+                             and d["direction"] == "up"),
+            "pool_ups": sum(1 for d in events
+                            if d["actuator"] == "executor_pool"
+                            and d["direction"] == "up"),
+            "peak_shards": peak_shards, "peak_pool": peak_pool,
+            "final_shards": syncer.num_shards,
+            "final_pool": executor.pool_size,
+            "contended_resizes": scaler.state()["contended_resizes"],
+            "events": [{k: v for k, v in d.items() if k != "t_monotonic"}
+                       for d in events],
+        }
+        return rec
+    finally:
+        scaler.stop()
+        syncer.stop()
+        executor.shutdown()
+        super_api.close()
+
+
+def _append_history(out_path: str, record: Dict, latest_key: str) -> None:
+    """Append one run record to a tracked history file (never overwrite);
+    shared by every bench that keeps an append-only series.
 
     A pre-history file (the old single-run ``{"workload", "scenarios"}``
-    layout) is adopted as the first history entry. Smoke runs land in
-    ``latest_smoke`` so they never displace the tracked full-scale
-    ``latest`` series."""
+    layout) is adopted as the first history entry. ``latest_key`` names the
+    pointer this record updates (e.g. smoke runs land in ``latest_smoke``
+    so they never displace the tracked full-scale ``latest`` series)."""
     history: List[Dict] = []
     out: Dict = {}
     try:
@@ -303,8 +393,7 @@ def _append_history(out_path: str, record: Dict) -> None:
         pass
     history.append(record)
     out["history"] = history
-    key = "latest_smoke" if record["config"]["smoke"] else "latest"
-    out[key] = record
+    out[latest_key] = record
     with open(out_path, "w") as f:
         json.dump(out, f, indent=1)
 
@@ -405,7 +494,28 @@ def run(full: bool = False, smoke: bool = False,
         }
         for scenario, ratio in record["executor_vs_threads"].items():
             print(f"  executor/threads {scenario}: {ratio:.2f}x", flush=True)
-    _append_history(out_path, record)
+    if "executor" in modes:
+        # closed-loop ramp: executor mode only (needs a pool to size)
+        a_tenants, a_per = (6, 120) if smoke else ((16, 300) if full
+                                                   else (8, 200))
+        arec = _run_autoscale(a_tenants, a_per)
+        record["autoscale"] = arec
+        all_recs.append(arec)
+        print(f"  [executor] autoscale: {arec['scale_ups']} ups "
+              f"({arec['shard_ups']} shard / {arec['pool_ups']} pool), "
+              f"{arec['scale_downs']} downs, peak {arec['peak_shards']} "
+              f"shards / {arec['peak_pool']} pool, final "
+              f"{arec['final_shards']}/{arec['final_pool']}, "
+              f"converged={arec['converged']}", flush=True)
+        if smoke:
+            # CI gate: the fleet must have scaled up during the ramp and
+            # returned to its floors, losing nothing on the way
+            assert arec["shard_ups"] >= 1, "autoscaler never grew the fleet"
+            assert arec["converged"], "autoscale ramp lost tenant objects"
+            assert arec["final_shards"] == 1 and arec["final_pool"] == 2, \
+                "fleet did not shrink back after idle cooldown"
+    _append_history(out_path, record,
+                    "latest_smoke" if smoke else "latest")
     print(f"  appended run record to {out_path}", flush=True)
     return all_recs
 

@@ -15,8 +15,10 @@ from repro.core import VirtualClusterFramework
 
 
 def main():
+    # autoscale=True: the closed-loop autoscaler (sixth controller) sizes
+    # the downward shard fleet and the executor pool from live load
     fw = VirtualClusterFramework(num_nodes=4, scan_interval=5.0,
-                                 heartbeat_interval=2.0)
+                                 heartbeat_interval=2.0, autoscale=True)
     with fw:
         # metrics over HTTP: counters/summaries/gauges as JSON (stdlib only)
         port = fw.serve_metrics()
@@ -65,7 +67,12 @@ def main():
                 f"http://127.0.0.1:{port}/healthz"))
         except urllib.error.HTTPError as e:   # 503 = some controller down
             health = json.load(e.fp)
-        print("controller health (HTTP):", all(health.values()))
+        print("controller health (HTTP):", all(health["controllers"].values()))
+        # the autoscaler's loop state rides /healthz: last decision, live
+        # targets, cooldown remaining — a wedged loop is visible here
+        scaler = health["autoscaler"]
+        print("autoscaler targets:", scaler["targets"],
+              "last decision:", scaler["last_decision"])
         snap = json.load(urllib.request.urlopen(
             f"http://127.0.0.1:{port}/metrics"))
         reconciles = {k: int(v) for k, v in snap["counters"].items()

@@ -1,6 +1,7 @@
 """VirtualCluster core: the paper's multi-tenant control plane."""
 from .agent import CallableProvider, MockProvider, NodeAgent, Provider, VnAgent
 from .apiserver import APIClient, APIServer, TenantControlPlane
+from .autoscaler import Autoscaler, ScalingPolicy, SignalWindow
 from .cluster import VirtualClusterFramework
 from .executor import CooperativeExecutor, Task
 from .fairqueue import FairWorkQueue
@@ -22,6 +23,7 @@ __all__ = [
     "APIClient", "APIServer", "TenantControlPlane", "VirtualClusterFramework",
     "Controller", "ControllerManager", "MetricsRegistry", "RetryLater",
     "CooperativeExecutor", "Task",
+    "Autoscaler", "ScalingPolicy", "SignalWindow",
     "FairWorkQueue", "WorkQueue", "DelayingQueue", "RateLimiter",
     "Informer", "InformerCache", "ObjectStore", "Syncer", "ns_prefix",
     "shard_for", "ShardRing",

@@ -1,0 +1,406 @@
+"""Closed-loop autoscaler: load-driven shard fleet + executor pool sizing.
+
+The paper's VirtualCluster design (§III) shares one super cluster among many
+tenant control planes, which only pays off when the *control plane itself*
+tracks tenant load instead of being provisioned for peak. This module closes
+the loop over the two elastic axes the framework already exposes:
+
+- **horizontal** — the downward syncer fleet: per-shard fair-queue depth and
+  reconcile latency drive :meth:`Syncer.resize_shards(n)
+  <repro.core.syncer.Syncer.resize_shards>` (consistent-hash ring, ~1/N
+  tenant migration per step);
+- **vertical** — the shared cooperative executor: ready-task backlog per
+  thread and quantum latency drive :meth:`CooperativeExecutor.resize(n)
+  <repro.core.executor.CooperativeExecutor.resize>` (grow spawns threads,
+  shrink drains-and-retires via poison quanta).
+
+Signal flow::
+
+    MetricsRegistry gauges/summaries          (queue depth, reconcile
+              │                                latency, ready backlog,
+              ▼                                quantum latency)
+        SignalWindow × 4                      (sliding horizon: EWMA +
+              │                                percentile aggregation)
+              ▼
+        ScalingPolicy                         (thresholds, hysteresis,
+              │                                cooldowns, min/max bounds)
+              ▼
+    ┌─ Syncer.resize_shards(n, block=False)  (never parks a pool thread
+    └─ CooperativeExecutor.resize(n)          behind an operator resize)
+
+The :class:`Autoscaler` is an ordinary queue-less :class:`Controller` whose
+periodic scan is the control tick, so it runs as a cooperative task on the
+very pool it scales (sixth controller on the shared runtime) and inherits
+health/metrics/lifecycle for free. Decisions are exported as counters
+(``autoscaler_scale_total{actuator=...,direction=...}``), live targets and
+window aggregates as gauges, and :meth:`Autoscaler.state` feeds ``/healthz``
+so a wedged control loop is visible (last decision, current targets,
+cooldown remaining).
+
+Scale-up is multiplicative (default ×2: bursts are met in O(log max) ticks)
+and scale-down is halving gated by a *longer* cooldown and a hysteresis
+band (``*_down`` thresholds well below the ``*_up`` ones), the classic
+flap-damping asymmetry.
+"""
+from __future__ import annotations
+
+import math
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+
+from .runtime import Controller
+
+
+class SignalWindow:
+    """Sliding-horizon aggregation over one scalar control signal.
+
+    Keeps ``(t, value)`` samples no older than ``horizon`` seconds and
+    serves the aggregates scaling decisions want: **EWMA** (smoothed level,
+    ``alpha`` per sample) and **percentile** over the retained window (the
+    burst detector — a p90 over raw samples reacts faster than any mean).
+    Thread-safe: ticks write while gauges/healthz read.
+    """
+
+    def __init__(self, horizon: float = 30.0, alpha: float = 0.3):
+        self.horizon = float(horizon)
+        self.alpha = float(alpha)
+        self._samples: Deque[Tuple[float, float]] = deque()
+        self._ewma: Optional[float] = None
+        self._lock = threading.Lock()
+
+    def observe(self, value: float, now: Optional[float] = None) -> None:
+        now = time.monotonic() if now is None else now
+        v = float(value)
+        with self._lock:
+            self._samples.append((now, v))
+            cutoff = now - self.horizon
+            while self._samples and self._samples[0][0] < cutoff:
+                self._samples.popleft()
+            self._ewma = (v if self._ewma is None
+                          else self.alpha * v + (1 - self.alpha) * self._ewma)
+
+    def ewma(self) -> float:
+        with self._lock:
+            return self._ewma if self._ewma is not None else 0.0
+
+    def percentile(self, p: float) -> float:
+        with self._lock:
+            if not self._samples:
+                return 0.0
+            vals = sorted(v for _, v in self._samples)
+        idx = min(len(vals) - 1, int(len(vals) * p))
+        return vals[idx]
+
+    def last(self) -> float:
+        with self._lock:
+            return self._samples[-1][1] if self._samples else 0.0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._samples)
+
+    def state(self) -> Dict[str, float]:
+        return {"ewma": self.ewma(), "p90": self.percentile(0.9),
+                "last": self.last(), "n": float(len(self))}
+
+
+@dataclass
+class ScalingPolicy:
+    """Thresholds, bounds, and damping for both scaling axes.
+
+    ``*_up`` thresholds trigger growth, ``*_down`` thresholds (set well
+    below) permit shrink; the gap is the hysteresis band. A breach must
+    persist for ``hysteresis`` consecutive ticks, and actions are spaced by
+    ``up_cooldown_s`` / ``down_cooldown_s`` (down longer: shrinking is the
+    cheap-to-delay direction). Growth multiplies by ``grow_factor``; shrink
+    halves. Defaults suit the in-process benchmarks (sub-second reconciles);
+    real deployments tune the policy, not the loop.
+    """
+
+    # horizontal: downward shard fleet
+    min_shards: int = 1
+    max_shards: int = 8
+    shard_up_depth: float = 32.0       # p90 of max per-shard queue depth
+    shard_down_depth: float = 2.0
+    shard_up_latency_s: float = 0.25   # windowed mean reconcile latency
+    # vertical: cooperative executor pool
+    min_pool: int = 2
+    max_pool: int = 32
+    pool_up_backlog: float = 4.0       # p90 ready backlog per pool thread
+    pool_down_backlog: float = 0.5
+    pool_up_quantum_s: float = 0.05    # windowed mean quantum latency
+    # control-loop damping
+    hysteresis: int = 2                # consecutive breaching ticks to act
+    up_cooldown_s: float = 3.0
+    down_cooldown_s: float = 10.0
+    grow_factor: float = 2.0
+    # signal windows
+    window_s: float = 30.0
+    ewma_alpha: float = 0.3
+
+    def clamp_shards(self, n: int) -> int:
+        return max(self.min_shards, min(self.max_shards, n))
+
+    def clamp_pool(self, n: int) -> int:
+        return max(self.min_pool, min(self.max_pool, n))
+
+
+class _Actuator:
+    """Hysteresis + cooldown bookkeeping for one scaling dimension.
+
+    ``clamp`` is the policy's live bound function
+    (:meth:`ScalingPolicy.clamp_shards` / :meth:`ScalingPolicy.clamp_pool`),
+    read at decision time so post-construction policy changes are honored
+    for bounds exactly like they are for thresholds.
+    """
+
+    def __init__(self, name: str, policy: ScalingPolicy,
+                 clamp: Callable[[int], int]):
+        self.name = name
+        self.policy = policy
+        self.clamp = clamp
+        self._up_streak = 0
+        self._down_streak = 0
+        self._last_scale_t: Optional[float] = None
+
+    def decide(self, cur: int, up_breach: bool, down_breach: bool,
+               now: float) -> Optional[int]:
+        """Fold this tick's breach verdicts in; return a new target size or
+        ``None`` (hold). The caller commits via :meth:`committed` only after
+        the actuation actually happened (a contended resize keeps streaks)."""
+        p = self.policy
+        if up_breach:
+            self._up_streak += 1
+            self._down_streak = 0
+        elif down_breach:
+            self._down_streak += 1
+            self._up_streak = 0
+        else:
+            self._up_streak = self._down_streak = 0
+        since = (math.inf if self._last_scale_t is None
+                 else now - self._last_scale_t)
+        if self._up_streak >= p.hysteresis and since >= p.up_cooldown_s:
+            target = self.clamp(max(cur + 1, math.ceil(cur * p.grow_factor)))
+            if target > cur:
+                return target
+        if self._down_streak >= p.hysteresis and since >= p.down_cooldown_s:
+            target = self.clamp(cur // 2)
+            if target < cur:
+                return target
+        return None
+
+    def committed(self, now: float) -> None:
+        self._last_scale_t = now
+        self._up_streak = self._down_streak = 0
+
+    def cooldown_remaining(self, now: float) -> Dict[str, float]:
+        p = self.policy
+        if self._last_scale_t is None:
+            return {"up_s": 0.0, "down_s": 0.0}
+        since = now - self._last_scale_t
+        return {"up_s": round(max(0.0, p.up_cooldown_s - since), 3),
+                "down_s": round(max(0.0, p.down_cooldown_s - since), 3)}
+
+
+class Autoscaler(Controller):
+    """Sixth controller on the shared runtime: the closed scaling loop.
+
+    A queue-less :class:`Controller` whose periodic ``scan`` (every
+    ``interval`` seconds) is one control tick: sample signals into the
+    :class:`SignalWindow`\\ s, evaluate the :class:`ScalingPolicy` per
+    actuator, and actuate ``syncer.resize_shards`` (non-blocking — a
+    contended resize lock defers to the next tick rather than parking a
+    pool thread) and ``executor.resize``. Pass ``executor=None`` to scale
+    only the shard fleet (legacy thread mode has no pool to size).
+    """
+
+    def __init__(self, syncer: Any, executor: Optional[Any] = None, *,
+                 policy: Optional[ScalingPolicy] = None,
+                 interval: float = 0.5, name: str = "autoscaler"):
+        super().__init__(name, queue=None, workers=0, scan_interval=interval)
+        self.syncer = syncer
+        # the pool being *scaled* (usually also the one this task runs on);
+        # kept apart from Controller.executor, the scheduling attribute
+        self.pool_executor = executor
+        # standalone-friendly defaults: decisions land in the registry the
+        # signals are read from, and the tick schedules on the pool it
+        # scales. A ControllerManager.add() overrides both (same objects in
+        # the framework wiring).
+        self.metrics = syncer.up_controller.metrics
+        self.executor = executor
+        self.policy = policy or ScalingPolicy()
+        p = self.policy
+        self.w_depth = SignalWindow(p.window_s, p.ewma_alpha)
+        self.w_latency = SignalWindow(p.window_s, p.ewma_alpha)
+        self.w_backlog = SignalWindow(p.window_s, p.ewma_alpha)
+        self.w_quantum = SignalWindow(p.window_s, p.ewma_alpha)
+        self._shards_act = _Actuator("shards", p, p.clamp_shards)
+        self._pool_act = _Actuator("executor_pool", p, p.clamp_pool)
+        # cumulative (sum, count) per shard-controller NAME: the registry
+        # keeps a retired shard's summary and a re-grown shard reuses its
+        # name, so per-name baselines survive fleet resizes (a fleet-wide
+        # total would go negative on shrink and jump on regrow)
+        self._prev_reconcile: Dict[str, Tuple[float, float]] = {}
+        self._prev_quanta = (0.0, 0)         # cumulative (seconds, quanta)
+        self.decisions: Deque[Dict[str, Any]] = deque(maxlen=64)
+        self.ticks = 0
+        self.contended_resizes = 0
+        self._state_lock = threading.Lock()
+
+    # -- controller hooks ---------------------------------------------------
+
+    def on_start(self) -> None:
+        m = self.metrics
+        m.register_gauge("autoscaler_target_shards",
+                         lambda: self.syncer.num_shards)
+        if self.pool_executor is not None:
+            m.register_gauge("autoscaler_target_pool",
+                             lambda: self.pool_executor.pool_size)
+        m.register_gauge("autoscaler_shard_depth_p90",
+                         lambda: self.w_depth.percentile(0.9))
+        m.register_gauge("autoscaler_reconcile_latency_s", self.w_latency.ewma)
+        m.register_gauge("autoscaler_backlog_per_thread_p90",
+                         lambda: self.w_backlog.percentile(0.9))
+        m.register_gauge("autoscaler_quantum_latency_s", self.w_quantum.ewma)
+        m.register_gauge("autoscaler_ticks", lambda: self.ticks)
+
+    def scan(self) -> int:
+        """One control tick; returns the number of scaling actions taken."""
+        return self.tick()
+
+    # -- the control loop ---------------------------------------------------
+
+    def tick(self, now: Optional[float] = None) -> int:
+        now = time.monotonic() if now is None else now
+        self._sample(now)
+        actions = self._evaluate_shards(now) + self._evaluate_pool(now)
+        with self._state_lock:
+            self.ticks += 1
+        return actions
+
+    def _sample(self, now: float) -> None:
+        # hot-shard depth: the max per-shard fair-queue depth is the signal
+        # (a single overloaded shard must be able to trigger growth even
+        # when the fleet average looks healthy)
+        shards = list(self.syncer.shard_controllers)
+        depth = max((len(c.queue) for c in shards), default=0)
+        self.w_depth.observe(depth, now)
+        # windowed mean reconcile latency from the cumulative summaries:
+        # delta(sum)/delta(count) since the previous tick
+        reg = self.syncer.up_controller.metrics
+        dsum = dcount = 0.0
+        for c in shards:
+            s = reg.summary("reconcile_seconds", controller=c.name)
+            psum, pcount = self._prev_reconcile.get(c.name, (0.0, 0.0))
+            dsum += s["sum"] - psum
+            dcount += s["count"] - pcount
+            self._prev_reconcile[c.name] = (s["sum"], s["count"])
+        # no reconciles this tick = an idle fleet: observe zero so the
+        # latency window decays and permits shrink
+        self.w_latency.observe(dsum / dcount if dcount > 0 else 0.0, now)
+        ex = self.pool_executor
+        if ex is not None:
+            self.w_backlog.observe(
+                ex.ready_backlog() / max(1, ex.pool_size), now)
+            qsec, qtot = ex.quanta_seconds, ex.quanta_total
+            pqs, pqt = self._prev_quanta
+            dq = qtot - pqt
+            self._prev_quanta = (qsec, qtot)
+            self.w_quantum.observe((qsec - pqs) / dq if dq > 0 else 0.0, now)
+
+    def _evaluate_shards(self, now: float) -> int:
+        p = self.policy
+        depth_p90 = self.w_depth.percentile(0.9)
+        lat = self.w_latency.ewma()
+        up = depth_p90 > p.shard_up_depth or lat > p.shard_up_latency_s
+        down = (depth_p90 <= p.shard_down_depth
+                and lat <= p.shard_up_latency_s / 2)
+        cur = self.syncer.num_shards
+        target = self._shards_act.decide(cur, up, down, now)
+        if target is None:
+            return 0
+        moved = self.syncer.resize_shards(target, block=False)
+        if moved is None:
+            # operator call in flight: keep streaks, retry next tick
+            with self._state_lock:
+                self.contended_resizes += 1
+            self.metrics.inc("autoscaler_resize_contended",
+                             controller=self.name)
+            return 0
+        self._commit("shards", cur, target, now,
+                     reason=(f"depth_p90={depth_p90:.1f} "
+                             f"latency={lat * 1e3:.1f}ms"),
+                     extra={"tenants_moved": len(moved)})
+        return 1
+
+    def _evaluate_pool(self, now: float) -> int:
+        ex = self.pool_executor
+        if ex is None:
+            return 0
+        p = self.policy
+        backlog_p90 = self.w_backlog.percentile(0.9)
+        quantum = self.w_quantum.ewma()
+        up = backlog_p90 > p.pool_up_backlog or quantum > p.pool_up_quantum_s
+        down = (backlog_p90 <= p.pool_down_backlog
+                and quantum <= p.pool_up_quantum_s / 2)
+        cur = ex.pool_size
+        target = self._pool_act.decide(cur, up, down, now)
+        if target is None:
+            return 0
+        ex.resize(target)
+        self._commit("executor_pool", cur, target, now,
+                     reason=(f"backlog/thread_p90={backlog_p90:.2f} "
+                             f"quantum={quantum * 1e3:.2f}ms"))
+        return 1
+
+    def _commit(self, actuator: str, cur: int, target: int, now: float,
+                reason: str, extra: Optional[Dict[str, Any]] = None) -> None:
+        act = self._shards_act if actuator == "shards" else self._pool_act
+        act.committed(now)
+        direction = "up" if target > cur else "down"
+        decision = {"actuator": actuator, "from": cur, "to": target,
+                    "direction": direction, "reason": reason,
+                    "t_monotonic": now}
+        if extra:
+            decision.update(extra)
+        with self._state_lock:
+            self.decisions.append(decision)
+        self.metrics.inc("autoscaler_scale_total", controller=self.name,
+                         actuator=actuator, direction=direction)
+
+    # -- observability ------------------------------------------------------
+
+    def state(self) -> Dict[str, Any]:
+        """Wedge-visible loop state for ``/healthz``: last decision, live
+        targets, per-actuator cooldown remaining, and signal aggregates."""
+        now = time.monotonic()
+        with self._state_lock:
+            last = dict(self.decisions[-1]) if self.decisions else None
+            ticks = self.ticks
+            contended = self.contended_resizes
+        if last is not None:
+            last["age_s"] = round(now - last.pop("t_monotonic"), 3)
+        ex = self.pool_executor
+        return {
+            "last_decision": last,
+            "targets": {"shards": self.syncer.num_shards,
+                        "executor_pool": ex.pool_size if ex else None},
+            "cooldown_remaining_s": {
+                "shards": self._shards_act.cooldown_remaining(now),
+                "executor_pool": self._pool_act.cooldown_remaining(now),
+            },
+            "signals": {"shard_depth": self.w_depth.state(),
+                        "reconcile_latency_s": self.w_latency.state(),
+                        "backlog_per_thread": self.w_backlog.state(),
+                        "quantum_latency_s": self.w_quantum.state()},
+            "ticks": ticks,
+            "contended_resizes": contended,
+        }
+
+    def scale_events(self) -> List[Dict[str, Any]]:
+        """Chronological copy of the recent decision history (benchmarks)."""
+        with self._state_lock:
+            return [dict(d) for d in self.decisions]

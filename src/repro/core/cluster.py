@@ -9,6 +9,7 @@ benchmarks.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import threading
 import time
@@ -16,6 +17,7 @@ from typing import Any, Callable, Dict, List, Optional
 
 from .agent import MockProvider, NodeAgent, Provider, VnAgent
 from .apiserver import APIServer, TenantControlPlane
+from .autoscaler import Autoscaler, ScalingPolicy
 from .executor import CooperativeExecutor
 from .objects import VirtualClusterCR, WorkUnit, WorkUnitSpec
 from .router import MeshRouter
@@ -35,6 +37,13 @@ class VirtualClusterFramework:
     count stays O(pool size) no matter how many tenants register.
     ``executor_mode=False`` is the legacy blocking-thread fallback
     (one thread per informer/worker/scan loop).
+
+    ``autoscale=True`` adds the closed-loop :class:`Autoscaler` as a sixth
+    controller: it grows/shrinks the downward shard fleet
+    (``Syncer.resize_shards``) from fair-queue depth and reconcile latency,
+    and resizes the cooperative executor pool from ready-backlog and
+    quantum-latency signals, within ``autoscale_policy`` bounds. With
+    ``autoscale=False`` (default) the fleet stays exactly as configured.
     """
 
     def __init__(self, *, num_nodes: int = 4, chips_per_node: int = 8,
@@ -48,7 +57,10 @@ class VirtualClusterFramework:
                  syncer_shards: int = 1,
                  downward_batch: int = 1,
                  executor_mode: bool = True,
-                 executor_pool: int = 8):
+                 executor_pool: int = 8,
+                 autoscale: bool = False,
+                 autoscale_policy: Optional[ScalingPolicy] = None,
+                 autoscale_interval: float = 0.5):
         self.executor = (CooperativeExecutor(executor_pool, name="vc-exec")
                          if executor_mode else None)
         self.manager = ControllerManager(executor=self.executor)
@@ -86,6 +98,26 @@ class VirtualClusterFramework:
         self.manager.add(*self.syncer.controllers)
         self.syncer.manager = self.manager   # resize_shards stays in sync
         self.manager.add(self.operator)
+        # closed-loop autoscaler: sixth controller on the shared runtime.
+        # Watches fair-queue depth / reconcile latency / executor backlog
+        # and actuates resize_shards + executor.resize. Off by default:
+        # autoscale=False keeps the fleet exactly as configured above.
+        self.autoscaler: Optional[Autoscaler] = None
+        if autoscale:
+            # copy before widening: the caller's policy object stays pristine
+            # (it may be shared across frameworks)
+            policy = dataclasses.replace(autoscale_policy or ScalingPolicy())
+            # widen the bounds to include the configured starting sizes so
+            # the loop never finds itself outside its own [min, max] box
+            policy.min_shards = min(policy.min_shards, syncer_shards)
+            policy.max_shards = max(policy.max_shards, syncer_shards)
+            if self.executor is not None:
+                policy.min_pool = min(policy.min_pool, executor_pool)
+                policy.max_pool = max(policy.max_pool, executor_pool)
+            self.autoscaler = Autoscaler(self.syncer, self.executor,
+                                         policy=policy,
+                                         interval=autoscale_interval)
+            self.manager.add(self.autoscaler)
         self._started = False
         self._metrics_server: Optional[Any] = None
         self._metrics_thread: Optional[threading.Thread] = None
@@ -107,8 +139,12 @@ class VirtualClusterFramework:
         short-lived daemon thread per request). Routes:
 
         - ``/`` or ``/metrics`` — ``MetricsRegistry.snapshot()`` (counters,
-          summaries, gauges — including the executor gauges);
-        - ``/healthz`` — per-controller health map, 503 if any is unhealthy.
+          summaries, gauges — including the executor and autoscaler gauges);
+        - ``/healthz`` — ``{"controllers": <per-controller health map>,
+          "autoscaler": <loop state or null>}``, 503 if any controller is
+          unhealthy. The autoscaler state (last decision, current targets,
+          cooldown remaining, signal windows) makes a wedged control loop
+          visible from outside the process.
 
         Returns the bound port (pass ``port=0`` for an ephemeral one).
         """
@@ -125,7 +161,9 @@ class VirtualClusterFramework:
                 elif self.path == "/healthz":
                     health = fw.healthy()
                     code = 200 if all(health.values()) else 503
-                    payload = health
+                    payload = {"controllers": health,
+                               "autoscaler": (fw.autoscaler.state()
+                                              if fw.autoscaler else None)}
                 else:
                     code, payload = 404, {"error": f"no route {self.path}"}
                 body = json.dumps(payload, default=str).encode()
@@ -156,6 +194,11 @@ class VirtualClusterFramework:
             self._metrics_server.server_close()
             self._metrics_server = None
             self._metrics_thread = None
+        # the scaling loop dies first: shards it added registered with the
+        # manager AFTER it, so reverse-order stop would tear them down while
+        # a live tick could still resize (and restart) them
+        if self.autoscaler is not None:
+            self.autoscaler.stop()
         self.manager.stop()
         self.super_api.close()
 

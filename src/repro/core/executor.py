@@ -118,13 +118,15 @@ class Task:
 
 
 class CooperativeExecutor:
-    """Fixed pool of OS threads multiplexing :class:`Task` quanta.
+    """Bounded pool of OS threads multiplexing :class:`Task` quanta.
 
     All pool threads share one condition variable guarding the ready deque
     and the timer heap; a sleeping thread bounds its wait by the earliest
     timer deadline, so due timers fire without a dedicated timer thread.
     ``start()`` is idempotent and ``shutdown()`` + ``start()`` restarts with
-    fresh threads (controller-manager restart).
+    fresh threads (controller-manager restart). The pool is **live-resizable**
+    (:meth:`resize`): grow spawns threads, shrink retires them at quantum
+    boundaries via poison quanta — the autoscaler's vertical actuator.
     """
 
     def __init__(self, pool_size: int = 8, name: str = "coop"):
@@ -134,12 +136,16 @@ class CooperativeExecutor:
         self._ready: Deque[Task] = deque()
         self._timers: List[Tuple[float, int, Task]] = []
         self._seq = itertools.count()
+        self._thread_seq = itertools.count()
         self._tasks: Set[Task] = set()
         self._threads: List[threading.Thread] = []
+        self._retire = 0          # poison quanta owed to surplus threads
         self._stop = False
         # metrics (read via gauges; int updates under _cv)
         self.quanta_total = 0
+        self.quanta_seconds = 0.0
         self.task_errors = 0
+        self.resizes = 0
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -160,18 +166,55 @@ class CooperativeExecutor:
             if self._threads and not self._stop:
                 return
             self._stop = False
+            self._retire = 0
             for i in range(self.pool_size - len(self._threads)):
-                t = threading.Thread(
-                    target=self._worker_loop,
-                    name=f"{self.name}-pool-{len(self._threads)}", daemon=True)
-                t.start()
-                self._threads.append(t)
+                self._spawn_thread_locked()
+
+    def _spawn_thread_locked(self) -> None:
+        t = threading.Thread(
+            target=self._worker_loop,
+            name=f"{self.name}-pool-{next(self._thread_seq)}", daemon=True)
+        t.start()
+        self._threads.append(t)
+
+    def resize(self, n: int) -> int:
+        """Live-resize the pool to ``n`` threads; returns the previous size.
+
+        Grow spawns threads immediately. Shrink is drain-and-retire via
+        *poison quanta*: surplus threads are owed a retire token and exit at
+        their next quantum boundary (never mid-quantum), so no task state is
+        lost and parked tasks keep their wakers. Never joins — safe to call
+        FROM a pool thread (the autoscaler tick runs on the pool; the caller
+        itself may retire once its current quantum ends). Idempotent; a
+        stopped executor just records the new size for the next start().
+        """
+        n = max(1, int(n))
+        with self._cv:
+            prev = self.pool_size
+            self.pool_size = n
+            if n != prev:
+                self.resizes += 1
+            if self._stop or not self._threads:
+                return prev       # start() spawns to pool_size
+            effective = len(self._threads) - self._retire
+            if n > effective:
+                reclaim = min(self._retire, n - effective)
+                self._retire -= reclaim       # un-poison pending retires
+                for _ in range(n - effective - reclaim):
+                    self._spawn_thread_locked()
+            elif n < effective:
+                self._retire += effective - n
+                self._cv.notify_all()         # sleepers must see the poison
+            return prev
 
     def shutdown(self, timeout: float = 5.0) -> None:
         """Stop the pool. Idle/ready tasks are finished immediately; a task
         mid-quantum completes its quantum on its (daemon) thread."""
         with self._cv:
             self._stop = True
+            # threads exit via the _stop check without consuming pending
+            # poison; clear it so thread_count() can't go negative
+            self._retire = 0
             for task in list(self._tasks):
                 task._cancelled = True
                 if task._state != Task._RUNNING:
@@ -237,6 +280,12 @@ class CooperativeExecutor:
         with self._cv:
             return len(self._tasks)
 
+    def thread_count(self) -> int:
+        """Live pool threads, retiring ones excluded (converges to
+        ``pool_size`` after a resize)."""
+        with self._cv:
+            return len(self._threads) - self._retire
+
     # -- pool --------------------------------------------------------------
 
     def _worker_loop(self) -> None:
@@ -245,6 +294,18 @@ class CooperativeExecutor:
             with self._cv:
                 while task is None:
                     if self._stop:
+                        return
+                    if self._retire > 0:
+                        # poison quantum: retire this thread. Hand any wake
+                        # we may have absorbed to a surviving sleeper so a
+                        # shrink can never strand a ready task.
+                        self._retire -= 1
+                        try:
+                            self._threads.remove(threading.current_thread())
+                        except ValueError:
+                            pass
+                        if self._ready:
+                            self._cv.notify()
                         return
                     now = time.monotonic()
                     while self._timers and self._timers[0][0] <= now:
@@ -264,6 +325,7 @@ class CooperativeExecutor:
             self._run_quantum(task)
 
     def _run_quantum(self, task: Task) -> None:
+        t0 = time.monotonic()
         try:
             result = task.fn()
             failed = False
@@ -272,6 +334,7 @@ class CooperativeExecutor:
             failed = True
         with self._cv:
             self.quanta_total += 1
+            self.quanta_seconds += time.monotonic() - t0
             if failed:
                 self.task_errors += 1
             if task._cancelled or result is Task.DONE:

@@ -516,11 +516,15 @@ class ControllerManager:
         ex = self.executor
         m = self.metrics
         m.register_gauge("executor_pool_size", lambda: ex.pool_size)
+        m.register_gauge("executor_threads", ex.thread_count)
         m.register_gauge("executor_ready_backlog", ex.ready_backlog)
         m.register_gauge("executor_timer_depth", ex.timer_depth)
         m.register_gauge("executor_tasks", ex.task_count)
         m.register_gauge("executor_quanta_total", lambda: ex.quanta_total)
+        m.register_gauge("executor_quanta_seconds_total",
+                         lambda: ex.quanta_seconds)
         m.register_gauge("executor_task_errors", lambda: ex.task_errors)
+        m.register_gauge("executor_resizes_total", lambda: ex.resizes)
 
     def add(self, *controllers: Controller) -> None:
         with self._lock:

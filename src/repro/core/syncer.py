@@ -453,7 +453,8 @@ class Syncer:
 
     # --------------------------------------------------------------- resizing
 
-    def resize_shards(self, n: int) -> Dict[str, int]:
+    def resize_shards(self, n: int, *,
+                      block: bool = True) -> Optional[Dict[str, int]]:
         """Live-resize the downward shard fleet to ``n`` shards.
 
         The consistent-hash ring guarantees only ~1/N of the tenants change
@@ -463,55 +464,70 @@ class Syncer:
         destination, and its informers are handed over WITHOUT stopping their
         reflectors. Returns ``{tenant: new_shard_id}`` for the movers.
 
+        Concurrent callers (autoscaler tick vs. operator call) serialize on
+        the resize lock and the call is idempotent — a resize to the current
+        count is a no-op ``{}``, and the loser of a race simply re-resizes
+        from whatever fleet the winner left. ``block=False`` (the autoscaler
+        path, which runs ON a pool thread and must never park behind an
+        operator's in-flight resize or registration) returns ``None``
+        without resizing when the lock is contended.
+
         When the syncer's controllers are owned by a ControllerManager
         (``self.manager``, wired by ``VirtualClusterFramework``), shards
         added/removed here are also added/removed there, so the manager's
         health map and stop cover the resized fleet.
         """
         n = max(1, int(n))
-        with self._resize_lock:
-            if n == self.num_shards:
-                return {}
-            registry = self.up_controller.metrics
-            running = any(c.running for c in self.shard_controllers)
-            # new shards match the existing per-shard worker count so the
-            # fleet stays uniform (growing the fleet grows total capacity;
-            # sizing new shards to downward_workers // n would leave old
-            # shards with several times the workers of their peers)
-            per_shard = self.shard_controllers[0].workers
-            while len(self.shard_controllers) < n:
-                i = len(self.shard_controllers)
-                c = _DownwardShard(self, i, workers=per_shard,
-                                   fair=self.fair_queuing,
-                                   batch_size=self.downward_batch)
-                c.metrics = registry
-                c.executor = self.executor
-                self.shard_controllers.append(c)
-                self.controllers.append(c)
-                if running:
-                    c.start()   # must run before tenants route onto it
+        if not self._resize_lock.acquire(blocking=block):
+            return None
+        try:
+            return self._resize_shards_locked(n)
+        finally:
+            self._resize_lock.release()
+
+    def _resize_shards_locked(self, n: int) -> Dict[str, int]:
+        if n == self.num_shards:
+            return {}
+        registry = self.up_controller.metrics
+        running = any(c.running for c in self.shard_controllers)
+        # new shards match the existing per-shard worker count so the
+        # fleet stays uniform (growing the fleet grows total capacity;
+        # sizing new shards to downward_workers // n would leave old
+        # shards with several times the workers of their peers)
+        per_shard = self.shard_controllers[0].workers
+        while len(self.shard_controllers) < n:
+            i = len(self.shard_controllers)
+            c = _DownwardShard(self, i, workers=per_shard,
+                               fair=self.fair_queuing,
+                               batch_size=self.downward_batch)
+            c.metrics = registry
+            c.executor = self.executor
+            self.shard_controllers.append(c)
+            self.controllers.append(c)
+            if running:
+                c.start()   # must run before tenants route onto it
+            if self.manager is not None:
+                self.manager.add(c)   # start() above is idempotent
+        new_ring = ShardRing(n, self.ring_vnodes)
+        with self._tenants_lock:
+            regs = list(self.tenants.values())
+        moved: Dict[str, int] = {}
+        for reg in regs:
+            target = new_ring.shard_for(reg.uid)
+            if target == reg.shard.shard_id:
+                continue
+            self._migrate_tenant(reg, self.shard_controllers[target])
+            moved[reg.plane.name] = target
+        self.ring = new_ring
+        self.num_shards = n
+        if len(self.shard_controllers) > n:   # shrink: now-empty shards
+            for c in self.shard_controllers[n:]:
+                c.stop()
+                self.controllers.remove(c)
                 if self.manager is not None:
-                    self.manager.add(c)   # start() above is idempotent
-            new_ring = ShardRing(n, self.ring_vnodes)
-            with self._tenants_lock:
-                regs = list(self.tenants.values())
-            moved: Dict[str, int] = {}
-            for reg in regs:
-                target = new_ring.shard_for(reg.uid)
-                if target == reg.shard.shard_id:
-                    continue
-                self._migrate_tenant(reg, self.shard_controllers[target])
-                moved[reg.plane.name] = target
-            self.ring = new_ring
-            self.num_shards = n
-            if len(self.shard_controllers) > n:   # shrink: now-empty shards
-                for c in self.shard_controllers[n:]:
-                    c.stop()
-                    self.controllers.remove(c)
-                    if self.manager is not None:
-                        self.manager.remove(c)
-                del self.shard_controllers[n:]
-            return moved
+                    self.manager.remove(c)
+            del self.shard_controllers[n:]
+        return moved
 
     def _migrate_tenant(self, reg: TenantRegistration,
                         new_shard: _DownwardShard) -> None:

@@ -96,6 +96,132 @@ def test_task_errors_do_not_kill_the_pool(ex):
     assert wait_for(lambda: ok == [1])
 
 
+# ------------------------------------------------------------- live resize
+
+def test_resize_grow_under_load_adds_threads_and_drains():
+    """Growing mid-burst: new threads join the drain and every queued
+    quantum still runs exactly once."""
+    ex = CooperativeExecutor(pool_size=1, name="grow")
+    ex.start()
+    try:
+        done = []
+        lock = threading.Lock()
+
+        def work(i):
+            def fn():
+                time.sleep(0.002)
+                with lock:
+                    done.append(i)
+                return Task.DONE
+            return fn
+
+        for i in range(100):
+            ex.spawn(work(i), name=f"w{i}")
+        assert ex.resize(6) == 1
+        assert ex.pool_size == 6
+        assert wait_for(lambda: ex.thread_count() == 6)
+        assert wait_for(lambda: len(done) == 100, timeout=10.0)
+        assert sorted(done) == list(range(100))
+    finally:
+        ex.shutdown()
+
+
+def test_resize_shrink_with_parked_tasks_loses_no_wakes():
+    """Shrink while tasks are parked on wakers: every later wake must still
+    run a quantum — retiring threads hand stranded wakes to survivors."""
+    ex = CooperativeExecutor(pool_size=6, name="shrink")
+    ex.start()
+    try:
+        runs = [0] * 40
+        lock = threading.Lock()
+
+        def parked(i):
+            def fn():
+                with lock:
+                    runs[i] += 1
+                return Task.WAIT
+            return fn
+
+        tasks = [ex.spawn(parked(i), name=f"p{i}") for i in range(40)]
+        assert wait_for(lambda: sum(runs) == 40)     # first quantum each
+        ex.resize(1)
+        # retire is lazy (quantum-boundary poison): surplus threads exit on
+        # their next wake; the burst below both exercises the wakes and
+        # flushes the poison
+        for t in tasks:
+            t.wake()
+        assert wait_for(lambda: sum(runs) == 80, timeout=10.0)
+        assert all(r == 2 for r in runs)
+        assert wait_for(lambda: ex.thread_count() == 1)
+        # the survivor still serves fresh wakes
+        for t in tasks:
+            t.wake()
+        assert wait_for(lambda: sum(runs) == 120, timeout=10.0)
+    finally:
+        ex.shutdown()
+
+
+def test_resize_to_one_from_pool_thread_no_self_deadlock():
+    """The autoscaler tick runs ON the pool: a task shrinking the pool to 1
+    (possibly retiring its own thread) must not deadlock the executor."""
+    ex = CooperativeExecutor(pool_size=4, name="self-shrink")
+    ex.start()
+    try:
+        shrunk = threading.Event()
+
+        def shrink():
+            ex.resize(1)
+            shrunk.set()
+            return Task.DONE
+
+        ex.spawn(shrink, name="shrinker")
+        assert shrunk.wait(5.0)
+        assert wait_for(lambda: ex.thread_count() == 1)
+        after = []
+        ex.spawn(lambda: after.append(1) or Task.DONE, name="after")
+        assert wait_for(lambda: after == [1])        # survivor still runs
+        # and grow again, from the single remaining thread
+        regrown = threading.Event()
+
+        def grow():
+            ex.resize(3)
+            regrown.set()
+            return Task.DONE
+
+        ex.spawn(grow, name="grower")
+        assert regrown.wait(5.0)
+        assert wait_for(lambda: ex.thread_count() == 3)
+    finally:
+        ex.shutdown()
+
+
+def test_shutdown_with_pending_retire_keeps_thread_count_sane():
+    """Threads exiting via the stop flag never consume poison quanta;
+    shutdown must clear them so thread_count()/executor_threads can't go
+    negative between shutdown and the next start."""
+    ex = CooperativeExecutor(pool_size=6, name="pending-retire")
+    ex.start()
+    ex.resize(2)            # 4 poison quanta possibly still pending...
+    ex.shutdown()           # ...when the stop flag empties the pool
+    assert ex.thread_count() == 0
+    ex.start()              # restart honors the resized pool_size
+    try:
+        assert wait_for(lambda: ex.thread_count() == 2)
+    finally:
+        ex.shutdown()
+
+
+def test_resize_when_stopped_applies_at_next_start():
+    ex = CooperativeExecutor(pool_size=2, name="stopped")
+    assert ex.resize(5) == 2          # records the size, spawns nothing
+    assert ex.thread_count() == 0
+    ex.start()
+    try:
+        assert wait_for(lambda: ex.thread_count() == 5)
+    finally:
+        ex.shutdown()
+
+
 class Recorder(Controller):
     def __init__(self, name, queue=None, delay=0.0, **kw):
         super().__init__(name, queue=queue or WorkQueue(name), **kw)
@@ -208,7 +334,8 @@ def _syncer_rig(tenants, ex, shards=1, batch=1):
 def test_thread_count_bounded_with_64_tenants():
     """The acceptance bound: 64 tenants x 5 informers each would be 300+
     threads in legacy mode; on the executor, OS thread count stays within
-    pool + 8 regardless."""
+    the LIVE pool size + 8 — the bound tracks the dynamic pool through
+    resizes in both directions, not the construction-time constant."""
     pool = 8
     base = threading.active_count()
     ex = CooperativeExecutor(pool_size=pool, name="dense")
@@ -216,8 +343,8 @@ def test_thread_count_bounded_with_64_tenants():
     try:
         assert len(syncer.tenants) == 64
         assert ex.task_count() > 300          # informer pumps + workers
-        assert threading.active_count() <= pool + 8
-        assert threading.active_count() - base <= pool + 2
+        assert threading.active_count() <= ex.pool_size + 8
+        assert threading.active_count() - base <= ex.pool_size + 2
         # and the control plane actually works at that density
         for p in planes[:8]:
             ns = Namespace()
@@ -226,6 +353,16 @@ def test_thread_count_bounded_with_64_tenants():
             p.api.create(_mk_unit("u0"))
         assert wait_for(
             lambda: super_api.store.count("WorkUnit") >= 8, timeout=15.0)
+        # the bound follows the pool through an autoscaler-style resize:
+        # grow to 16 and back down to 4, still O(pool), never O(tenants)
+        ex.resize(16)
+        assert wait_for(lambda: ex.thread_count() == 16)
+        assert threading.active_count() - base <= ex.pool_size + 2
+        ex.resize(4)
+        assert wait_for(
+            lambda: threading.active_count() - base <= ex.pool_size + 2,
+            timeout=15.0)
+        assert ex.pool_size == 4
     finally:
         syncer.stop()
         ex.shutdown()
@@ -295,7 +432,8 @@ def test_serve_metrics_http_endpoint():
         assert "executor_timer_depth" in snap["gauges"]
         health = json.load(urllib.request.urlopen(
             f"http://127.0.0.1:{port}/healthz", timeout=5))
-        assert health and all(health.values())
+        assert health["controllers"] and all(health["controllers"].values())
+        assert health["autoscaler"] is None   # autoscale off by default
         with pytest.raises(urllib.error.HTTPError):
             urllib.request.urlopen(f"http://127.0.0.1:{port}/nope", timeout=5)
 
