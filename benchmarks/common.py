@@ -12,7 +12,7 @@ import statistics
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 from repro.core import VirtualClusterFramework, Namespace, WorkUnit
 
@@ -80,8 +80,9 @@ def syncer_metrics_summary(fw: VirtualClusterFramework) -> Dict[str, float]:
     out["downward_retries"] = down_retries
     out["downward_reconcile_mean_ms"] = (
         lat_sum / lat_count * 1e3 if lat_count else 0.0)
-    out["upward_reconciles"] = snap["counters"].get(
-        "reconcile_total{controller=syncer-uws}", 0.0)
+    out["upward_reconciles"] = sum(
+        val for key, val in snap["counters"].items()
+        if key.startswith("reconcile_total{controller=syncer-uws"))
     out["scheduler_reconciles"] = snap["counters"].get(
         "reconcile_total{controller=scheduler}", 0.0)
     return out

@@ -6,7 +6,6 @@ from __future__ import annotations
 
 import json
 import os
-import sys
 
 
 def fmt_bytes(b):

@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import sys
 import time
 
 from . import (fig7_latency, fig8_breakdown, fig9_throughput, fig10_overhead,

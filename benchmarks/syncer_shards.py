@@ -11,11 +11,19 @@ Measures downward-sync throughput of a standalone Syncer at shard counts
 - ``churn``   — a create/update/delete mix per tenant against a pre-synced
   population (exercises all three batched write paths at once).
 
-A fourth, executor-only ``autoscale`` scenario drives the closed-loop
-autoscaler through a burst ramp: starting from 1 shard / 2 pool threads, the
-fleet must grow (shards and executor threads) during the waves, converge
-every created object, and shrink back to its floors after idle cooldown.
-``--smoke`` asserts all three (the CI gate for the scaling loop).
+Two executor-only scenarios cover the UPWARD axis:
+
+- ``status_storm`` — pre-synced units, then every tenant's super copies
+  flap status rapidly while a recorder emits deduplicated Events per flap;
+  the clock stops when every tenant plane shows the final phase AND the
+  final event counts. Run once on the per-item FIFO baseline
+  (``upward_shards=1, batch_upward=False``) and swept across coalesced
+  shard counts; ``--smoke`` gates coalesced >= 1.2x per-item.
+- ``autoscale`` — the closed-loop ramp: starting from 1 shard / 1 upward
+  shard / 2 pool threads, create waves then a status storm must grow all
+  THREE actuators (downward shards, upward shards, executor threads),
+  converge everything, and shrink back to the floors after idle cooldown.
+  ``--smoke`` asserts all of it (the CI gate for the scaling loop).
 
 The total downward worker count is held constant across configurations, so
 each sweep isolates the effect of per-shard queues + same-tenant batch
@@ -45,8 +53,9 @@ import threading
 import time
 from typing import Callable, Dict, List, Optional
 
-from repro.core import (APIServer, Autoscaler, CooperativeExecutor, Namespace,
-                        ScalingPolicy, Syncer, TenantControlPlane, WorkUnit)
+from repro.core import (APIServer, Autoscaler, CooperativeExecutor,
+                        EventRecorder, Namespace, ScalingPolicy, Syncer,
+                        TenantControlPlane, WorkUnit)
 
 OUT_PATH = "BENCH_syncer_shards.json"
 UPDATED_CHIPS = 123        # spec marker the update/churn waits look for
@@ -107,9 +116,12 @@ def _rig(shards: int, batch: int, tenants: int, downward_workers: int,
         # count (+ a little headroom for the upward workers), and every
         # informer/worker/scan multiplexes onto it
         executor = CooperativeExecutor(downward_workers + 4, name="bench")
+    # upward pinned to one shard: this rig isolates the DOWNWARD sweep
+    # (the status_storm rig sweeps the upward axis)
     syncer = Syncer(super_api, downward_workers=downward_workers,
                     upward_workers=4, scan_interval=0.0,
-                    shards=shards, downward_batch=batch, executor=executor)
+                    shards=shards, downward_batch=batch, upward_shards=1,
+                    executor=executor)
     planes = [TenantControlPlane(f"t{i:03d}") for i in range(tenants)]
     for i, p in enumerate(planes):
         syncer.register_tenant(p, f"uid-{i:03d}")
@@ -287,25 +299,198 @@ SCENARIOS = {
 }
 
 
+def _run_status_storm(upward_shards, batch_upward, tenants, per_tenant,
+                      flaps, upward_workers=32) -> Dict:
+    """Upward-axis scale point: drain a pre-staged status storm.
+
+    Setup (untimed): both sides of every tenant are populated directly —
+    tenant planes hold the units, the super cluster holds the projected
+    copies — then the super copies flap status ``flaps`` times each while a
+    recorder emits per-flap Events (compressed to one object per unit by
+    count/lastTimestamp dedup). The TIMED phase starts the syncer cold: the
+    super informer replay floods the upward queues with every unit + event
+    key at once (the UWS-queue-at-depth regime of the paper's Fig.8), and
+    the clock stops when every tenant plane shows the final phase and the
+    final event counts. Pre-staging keeps the measurement on the upward
+    pipeline itself — a live-writer storm is bottlenecked by the (GIL-
+    serialized) super-store writes and measures the submitter, not the
+    syncer.
+
+    ``upward_shards=1, batch_upward=False`` with unfair queuing is the
+    per-item FIFO baseline (the seed's shared upward queue); coalesced
+    configs run sharded WRR with batched ``update_status_batch`` writes.
+    The TOTAL upward worker budget is held constant across configs (the
+    seed's own scaling knob — its default is 100 on one FIFO; 32 here keeps
+    the rig pool benchmark-sized), so the sweep isolates queue + batching
+    architecture, and the shared FIFO's worker-contention collapse is part
+    of what it measures. Executor mode only (the default architecture this
+    scale point tracks). ``ops`` counts the storm's logical writes (status
+    flaps + event records); both configs absorb the same storm, so the
+    ratio isolates the pipeline.
+    """
+    super_api = APIServer("super")
+    executor = CooperativeExecutor(8 + upward_workers, name="bench-storm")
+    syncer = Syncer(super_api, downward_workers=8,
+                    upward_workers=upward_workers,
+                    fair_queuing=batch_upward,   # baseline = true shared FIFO
+                    scan_interval=0.0, shards=1, downward_batch=4,
+                    upward_shards=upward_shards, batch_upward=batch_upward,
+                    executor=executor)
+    planes = [TenantControlPlane(f"t{i:03d}") for i in range(tenants)]
+    for i, p in enumerate(planes):
+        syncer.register_tenant(p, f"uid-{i:03d}")
+    try:
+        # -- untimed pre-staging (syncer not running yet) ------------------
+        recorder = EventRecorder(super_api, "storm-bench", host="bench")
+        prefixes = {p.name: syncer.tenants[p.name].prefix for p in planes}
+
+        def stage(plane):
+            ns = Namespace()
+            ns.metadata.name = "bench"
+            plane.api.create(ns)
+            super_ns = f"{prefixes[plane.name]}-bench"
+            sns = Namespace()
+            sns.metadata.name = super_ns
+            super_api.create(sns)
+            for j in range(per_tenant):
+                name = f"u{j:05d}"
+                plane.api.create(_mk_unit(name))
+                proj = _mk_unit(name)
+                proj.metadata.namespace = super_ns
+                super_api.create(proj)
+            for j in range(per_tenant):
+                name = f"u{j:05d}"
+                for f in range(flaps):
+                    phase = "Ready" if f == flaps - 1 else "Running"
+                    super_api.update_status(
+                        "WorkUnit", super_ns, name,
+                        lambda u, ph=phase: setattr(u.status, "phase", ph))
+                    recorder.record("WorkUnit", super_ns, name, "Flap",
+                                    f"flap {f}")
+
+        _fanout(planes, stage)
+
+        def converged(plane):
+            # cheap predicate peek (no deepcopies): final phase on every
+            # unit AND the final compressed count on every event
+            store = plane.api.store
+            ready = events = 0
+            with store._lock:
+                for (k, ns, _), o in store._objects.items():
+                    if ns != "bench":
+                        continue
+                    if k == "WorkUnit" and o.status.phase == "Ready":
+                        ready += 1
+                    elif k == "Event" and o.count >= flaps:
+                        events += 1
+            return ready >= per_tenant and events >= per_tenant
+
+        gc.collect()
+        gc.disable()
+        # -- timed: cold start -> replay floods the queues -> drain --------
+        t0 = time.monotonic()
+        syncer.start()
+        _wait(lambda: all(converged(p) for p in planes))
+        elapsed = time.monotonic() - t0
+        ops = tenants * per_tenant * flaps * 2
+        coalesced = syncer.upward.coalesced_total()
+        return {
+            "scenario": "status_storm", "mode": "executor",
+            "upward_shards": upward_shards, "batch_upward": batch_upward,
+            "tenants": tenants, "per_tenant": per_tenant, "flaps": flaps,
+            "ops": ops, "upward_workers": upward_workers,
+            "elapsed_s": elapsed,
+            "throughput_per_s": ops / elapsed if elapsed else 0.0,
+            "coalesced_keys": coalesced,
+            "upward_syncs": syncer.metrics.upward_syncs,
+            "name": (f"syncer_shards/executor/status_storm/"
+                     f"us{upward_shards}_"
+                     f"{'coalesced' if batch_upward else 'per_item'}"),
+        }
+    finally:
+        gc.enable()
+        syncer.stop()
+        executor.shutdown()
+        super_api.close()
+
+
+def _run_status_storm_sweep(smoke: bool, full: bool) -> Dict:
+    """Per-item FIFO baseline vs coalesced+batched across an upward shard
+    sweep. Repeats are interleaved per config (machine drift dilutes
+    evenly) and each config keeps its BEST repeat: the drain is a fixed
+    amount of Python work, so scheduler noise is strictly one-sided — the
+    best repeat is the least-perturbed measurement, exactly what the
+    per-config comparison needs. Medians are recorded alongside."""
+    if smoke:
+        tenants, per_tenant, flaps = 8, 100, 6
+        shard_counts, repeats = [4], 4
+    else:
+        tenants, per_tenant, flaps = (16, 200, 8) if full else (16, 120, 8)
+        shard_counts, repeats = [1, 2, 4, 8], 4
+    base_samples: List[Dict] = []
+    sweep_samples: Dict[int, List[Dict]] = {n: [] for n in shard_counts}
+    for _ in range(repeats):            # interleaved: drift dilutes evenly
+        base_samples.append(
+            _run_status_storm(1, False, tenants, per_tenant, flaps))
+        for n in shard_counts:
+            sweep_samples[n].append(
+                _run_status_storm(n, True, tenants, per_tenant, flaps))
+
+    def _best(recs: List[Dict]) -> Dict:
+        rec = dict(max(recs, key=lambda r: r["throughput_per_s"]))
+        rec["repeats"] = len(recs)
+        rec["throughput_median_per_s"] = statistics.median(
+            r["throughput_per_s"] for r in recs)
+        return rec
+
+    baseline = _best(base_samples)
+    sweep = [_best(sweep_samples[n]) for n in shard_counts]
+    base_tp = baseline["throughput_per_s"]
+    best = max(sweep, key=lambda r: r["throughput_per_s"])
+    out = {
+        "baseline_per_item": baseline,
+        "sweep": sweep,
+        "best": {"name": best["name"],
+                 "throughput_per_s": best["throughput_per_s"],
+                 "speedup_vs_per_item": (
+                     best["throughput_per_s"] / base_tp
+                     if base_tp else 0.0)},
+    }
+    print(f"  [executor] status_storm baseline (per-item FIFO): "
+          f"best {base_tp:.0f} ops/s "
+          f"(median {baseline['throughput_median_per_s']:.0f})", flush=True)
+    for rec in sweep:
+        print(f"  [executor] status_storm us={rec['upward_shards']} "
+              f"coalesced: best {rec['throughput_per_s']:.0f} ops/s "
+              f"({rec['throughput_per_s'] / max(1e-9, base_tp):.2f}x, "
+              f"median {rec['throughput_median_per_s']:.0f})", flush=True)
+    return out
+
+
 def _run_autoscale(tenants: int, per_tenant: int, waves: int = 3,
                    idle_timeout: float = 30.0) -> Dict:
     """Closed-loop load ramp: burst waves against a minimal fleet, prove the
-    autoscaler grows shards AND executor threads during the burst and
-    shrinks both back to their floors after idle cooldown, with no lost
-    keys (every created tenant object converges to the super cluster).
+    autoscaler grows downward shards AND executor threads during the create
+    waves, grows UPWARD shards during a status storm, converges everything
+    (created objects downward, final phases upward into every tenant
+    plane), and shrinks all three actuators back to their floors after idle
+    cooldown — no lost keys anywhere.
 
     Executor mode only — the vertical actuator needs a pool to size. The
-    fleet starts at 1 shard / 2 pool threads; the policy's fast ticks and
-    short cooldowns are benchmark-scale (the in-process control plane
-    reconciles in microseconds, so seconds-scale production cooldowns would
-    just mean watching paint dry)."""
+    fleet starts at 1 shard / 1 upward shard / 2 pool threads; the policy's
+    fast ticks and short cooldowns are benchmark-scale (the in-process
+    control plane reconciles in microseconds, so seconds-scale production
+    cooldowns would just mean watching paint dry)."""
     super_api = APIServer("super")
     executor = CooperativeExecutor(2, name="bench-as")
     syncer = Syncer(super_api, downward_workers=8, upward_workers=4,
                     scan_interval=0.0, shards=1, downward_batch=4,
-                    executor=executor)
+                    upward_shards=1, batch_upward=True, executor=executor)
     policy = ScalingPolicy(min_shards=1, max_shards=8, shard_up_depth=16.0,
-                           shard_down_depth=1.0, min_pool=2, max_pool=16,
+                           shard_down_depth=1.0,
+                           min_upward_shards=1, max_upward_shards=8,
+                           upward_up_depth=16.0, upward_down_depth=1.0,
+                           min_pool=2, max_pool=16,
                            pool_up_backlog=2.0, pool_down_backlog=0.25,
                            hysteresis=2, up_cooldown_s=0.1,
                            down_cooldown_s=0.5, window_s=1.5)
@@ -331,13 +516,41 @@ def _run_autoscale(tenants: int, per_tenant: int, waves: int = 3,
             time.sleep(0.05)      # ramp, not one monolithic burst
         _wait(lambda: super_api.store.count("WorkUnit") >= total)
         burst_s = time.monotonic() - t0
+        # upward phase: status storm over the whole population drives the
+        # third actuator (flap Running -> final Ready per unit)
+        prefixes = {p.name: syncer.tenants[p.name].prefix for p in planes}
+        units_per_tenant = waves * per_tenant
+        tu0 = time.monotonic()
+
+        def storm(plane):
+            ns = f"{prefixes[plane.name]}-bench"
+            for j in range(units_per_tenant):
+                for phase in ("Running", "Pending", "Ready"):
+                    super_api.update_status(
+                        "WorkUnit", ns, f"u{j:05d}",
+                        lambda u, ph=phase: setattr(u.status, "phase", ph))
+
+        _fanout(planes, storm)
+
+        def upward_converged(plane):
+            units = plane.api.list("WorkUnit", "bench")
+            return (len(units) >= units_per_tenant
+                    and all(u.status.phase == "Ready" for u in units))
+
+        _wait(lambda: all(upward_converged(p) for p in planes))
+        upward_s = time.monotonic() - tu0
+        upward_ops = total * 3
         events = scaler.scale_events()
         peak_shards = max([d["to"] for d in events
                            if d["actuator"] == "shards"] + [1])
+        peak_upward = max([d["to"] for d in events
+                           if d["actuator"] == "upward_shards"] + [1])
         peak_pool = max([d["to"] for d in events
                          if d["actuator"] == "executor_pool"] + [2])
-        # idle cooldown: both actuators must return to their floors
+        # idle cooldown: all three actuators must return to their floors
         _wait(lambda: (syncer.num_shards == policy.min_shards
+                       and syncer.num_upward_shards
+                       == policy.min_upward_shards
                        and executor.pool_size == policy.min_pool),
               timeout=idle_timeout)
         events = scaler.scale_events()
@@ -347,17 +560,27 @@ def _run_autoscale(tenants: int, per_tenant: int, waves: int = 3,
             "tenants": tenants, "per_tenant": per_tenant, "waves": waves,
             "ops": total, "elapsed_s": burst_s,
             "throughput_per_s": total / burst_s if burst_s else 0.0,
-            "converged": super_api.store.count("WorkUnit") >= total,
+            "upward_ops": upward_ops, "upward_elapsed_s": upward_s,
+            "upward_throughput_per_s": (upward_ops / upward_s
+                                        if upward_s else 0.0),
+            "converged": (super_api.store.count("WorkUnit") >= total
+                          and all(upward_converged(p) for p in planes)),
             "scale_ups": sum(1 for d in events if d["direction"] == "up"),
             "scale_downs": sum(1 for d in events if d["direction"] == "down"),
             "shard_ups": sum(1 for d in events if d["actuator"] == "shards"
                              and d["direction"] == "up"),
+            "upward_ups": sum(1 for d in events
+                              if d["actuator"] == "upward_shards"
+                              and d["direction"] == "up"),
             "pool_ups": sum(1 for d in events
                             if d["actuator"] == "executor_pool"
                             and d["direction"] == "up"),
-            "peak_shards": peak_shards, "peak_pool": peak_pool,
+            "peak_shards": peak_shards, "peak_upward": peak_upward,
+            "peak_pool": peak_pool,
             "final_shards": syncer.num_shards,
+            "final_upward": syncer.num_upward_shards,
             "final_pool": executor.pool_size,
+            "weight_retunes": scaler.state()["weight_retunes"],
             "contended_resizes": scaler.state()["contended_resizes"],
             "events": [{k: v for k, v in d.items() if k != "t_monotonic"}
                        for d in events],
@@ -495,6 +718,16 @@ def run(full: bool = False, smoke: bool = False,
         for scenario, ratio in record["executor_vs_threads"].items():
             print(f"  executor/threads {scenario}: {ratio:.2f}x", flush=True)
     if "executor" in modes:
+        # upward axis: per-item FIFO baseline vs coalesced+batched sweep
+        storm = _run_status_storm_sweep(smoke, full)
+        record["status_storm"] = storm
+        all_recs.append(storm["baseline_per_item"])
+        all_recs.extend(storm["sweep"])
+        if smoke:
+            # CI gate: coalesced+batched upward must beat per-item FIFO
+            ratio = storm["best"]["speedup_vs_per_item"]
+            assert ratio >= 1.2, (
+                f"coalesced upward only {ratio:.2f}x per-item (< 1.2x)")
         # closed-loop ramp: executor mode only (needs a pool to size)
         a_tenants, a_per = (6, 120) if smoke else ((16, 300) if full
                                                    else (8, 200))
@@ -502,17 +735,23 @@ def run(full: bool = False, smoke: bool = False,
         record["autoscale"] = arec
         all_recs.append(arec)
         print(f"  [executor] autoscale: {arec['scale_ups']} ups "
-              f"({arec['shard_ups']} shard / {arec['pool_ups']} pool), "
-              f"{arec['scale_downs']} downs, peak {arec['peak_shards']} "
-              f"shards / {arec['peak_pool']} pool, final "
-              f"{arec['final_shards']}/{arec['final_pool']}, "
+              f"({arec['shard_ups']} shard / {arec['upward_ups']} upward / "
+              f"{arec['pool_ups']} pool), "
+              f"{arec['scale_downs']} downs, peak {arec['peak_shards']}/"
+              f"{arec['peak_upward']}/{arec['peak_pool']} "
+              f"(shards/upward/pool), final "
+              f"{arec['final_shards']}/{arec['final_upward']}/"
+              f"{arec['final_pool']}, "
               f"converged={arec['converged']}", flush=True)
         if smoke:
-            # CI gate: the fleet must have scaled up during the ramp and
-            # returned to its floors, losing nothing on the way
+            # CI gate: all three actuators must have scaled up during the
+            # ramp and returned to their floors, losing nothing on the way
             assert arec["shard_ups"] >= 1, "autoscaler never grew the fleet"
+            assert arec["upward_ups"] >= 1, \
+                "autoscaler never grew the upward fleet"
             assert arec["converged"], "autoscale ramp lost tenant objects"
-            assert arec["final_shards"] == 1 and arec["final_pool"] == 2, \
+            assert (arec["final_shards"] == 1 and arec["final_upward"] == 1
+                    and arec["final_pool"] == 2), \
                 "fleet did not shrink back after idle cooldown"
     _append_history(out_path, record,
                     "latest_smoke" if smoke else "latest")

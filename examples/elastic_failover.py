@@ -8,7 +8,6 @@ vNode semantics preserved).
     PYTHONPATH=src python examples/elastic_failover.py
 """
 import shutil
-import time
 
 import jax
 

@@ -54,6 +54,19 @@ def main():
                                "default", "train-job")
         print("acme logs via vn-agent:", log.strip())
 
+        # tenant-visible Events: the node agents record WorkUnit phase
+        # transitions (and node heartbeats) as deduplicated Events in the
+        # super cluster; the upward pipeline syncs each tenant's events —
+        # dedup counts included — into its own control plane, so this is
+        # the tenant's "kubectl get events"
+        deadline = time.monotonic() + 5.0
+        while not acme.api.list("Event", "default") \
+                and time.monotonic() < deadline:
+            time.sleep(0.05)      # the upward sync is asynchronous
+        for ev in acme.api.list("Event", "default"):
+            print(f"[acme] event {ev.reason} x{ev.count} "
+                  f"{ev.involved_kind}/{ev.involved_name}: {ev.message}")
+
         # tenant deletion cascades: super copies and vNodes are GC'd
         acme.api.delete("WorkUnit", "default", "train-job")
         time.sleep(0.5)

@@ -14,7 +14,6 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.ckpt import CheckpointManager
 from repro.configs import get_config, reduced

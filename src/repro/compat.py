@@ -16,7 +16,7 @@ All sharding/model code should import these from here rather than touching
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Optional, Sequence
 
 import jax
 

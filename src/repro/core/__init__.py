@@ -6,16 +6,19 @@ from .cluster import VirtualClusterFramework
 from .executor import CooperativeExecutor, Task
 from .fairqueue import FairWorkQueue
 from .informer import Informer, InformerCache
-from .objects import (KINDS, ConfigMap, Namespace, Node, Secret, Service,
-                      VirtualClusterCR, VirtualNode, WorkUnit, WorkUnitSpec)
+from .objects import (KINDS, ConfigMap, Event, Namespace, Node, Secret,
+                      Service, VirtualClusterCR, VirtualNode, WorkUnit,
+                      WorkUnitSpec)
+from .ring import ShardRing, shard_for
 from .router import IsolationViolation, MeshRouter
 from .runtime import (Controller, ControllerManager, MetricsRegistry,
                       RetryLater)
 from .scheduler import SuperScheduler
 from .store import (ADDED, DELETED, MODIFIED, AlreadyExistsError,
                     ConflictError, NotFoundError, ObjectStore)
-from .syncer import ShardRing, Syncer, ns_prefix, shard_for
+from .syncer import Syncer, ns_prefix
 from .tenant_operator import TenantOperator
+from .upward import EventRecorder, UpwardPipeline, UpwardShard
 from .vnode import VNodeManager
 from .workqueue import DelayingQueue, RateLimiter, WorkQueue
 
@@ -27,10 +30,11 @@ __all__ = [
     "FairWorkQueue", "WorkQueue", "DelayingQueue", "RateLimiter",
     "Informer", "InformerCache", "ObjectStore", "Syncer", "ns_prefix",
     "shard_for", "ShardRing",
+    "EventRecorder", "UpwardPipeline", "UpwardShard",
     "SuperScheduler", "TenantOperator", "VNodeManager", "MeshRouter",
     "IsolationViolation", "NodeAgent", "VnAgent", "Provider", "MockProvider",
     "CallableProvider", "WorkUnit", "WorkUnitSpec", "Service", "Secret",
     "ConfigMap", "Namespace", "Node", "VirtualNode", "VirtualClusterCR",
-    "KINDS", "ADDED", "MODIFIED", "DELETED", "ConflictError",
+    "Event", "KINDS", "ADDED", "MODIFIED", "DELETED", "ConflictError",
     "AlreadyExistsError", "NotFoundError",
 ]

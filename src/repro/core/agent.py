@@ -26,6 +26,7 @@ from .apiserver import APIServer
 from .objects import Node, NodeStatus, WorkUnit
 from .runtime import Controller, RetryLater
 from .store import ADDED, MODIFIED, NotFoundError
+from .upward import EventRecorder
 from .workqueue import WorkQueue
 
 
@@ -101,7 +102,8 @@ class NodeAgent(Controller):
                  chip_ids: Optional[List[int]] = None,
                  provider: Optional[Provider] = None,
                  router: Optional[Any] = None,
-                 heartbeat_interval: float = 5.0):
+                 heartbeat_interval: float = 5.0,
+                 record_events: bool = True):
         super().__init__(f"agent-{node_name}",
                          queue=WorkQueue(f"agent-{node_name}"), workers=1,
                          scan_interval=heartbeat_interval,
@@ -113,6 +115,13 @@ class NodeAgent(Controller):
         self.provider = provider or MockProvider()
         self.router = router
         self.heartbeat_interval = heartbeat_interval
+        # kubelet-style event recording: WorkUnit phase transitions and node
+        # heartbeats become deduplicated Events in the super cluster, synced
+        # upward so tenants can list them (count/lastTimestamp compression
+        # keeps the periodic heartbeat at ONE stored object per node)
+        self.events: Optional[EventRecorder] = (
+            EventRecorder(api, f"node-agent/{node_name}", host=node_name)
+            if record_events else None)
         self.unit_informer = self.add_informer(api, "WorkUnit",
                                                handler=self._on_unit,
                                                name=f"kubelet:{node_name}")
@@ -179,6 +188,9 @@ class NodeAgent(Controller):
         except Exception as e:  # pragma: no cover - defensive
             self._set_phase(unit, "Failed", str(e))
 
+    _PHASE_REASONS = {"Running": "Started", "Ready": "Ready",
+                      "Failed": "Failed"}
+
     def _set_phase(self, unit: WorkUnit, phase: str, msg: str = "") -> None:
         def mutate(u: WorkUnit) -> None:
             u.status.phase = phase
@@ -189,7 +201,13 @@ class NodeAgent(Controller):
             self.api.update_status("WorkUnit", unit.metadata.namespace,
                                    unit.metadata.name, mutate)
         except NotFoundError:
-            pass
+            return
+        if self.events is not None:
+            self.events.record(
+                "WorkUnit", unit.metadata.namespace, unit.metadata.name,
+                self._PHASE_REASONS.get(phase, phase),
+                msg or f"{phase} on {self.node_name}",
+                type="Warning" if phase == "Failed" else "Normal")
 
     # -- heartbeat (rides the runtime's periodic scan) ---------------------------
 
@@ -199,6 +217,10 @@ class NodeAgent(Controller):
             self.api.update_status("Node", "", self.node_name, _beat(t0))
         except NotFoundError:
             pass
+        if self.events is not None:
+            # cluster-scoped, compresses to one object (count++) per node
+            self.events.record("Node", "", self.node_name, "Heartbeat",
+                               f"kubelet {self.node_name} heartbeat")
         return 0
 
 

@@ -108,6 +108,15 @@ class APIClient:
                       mutate: Callable[[Any], None]) -> Any:
         return self._req(lambda: self.store.update_status(kind, namespace, name, mutate))
 
+    def update_status_batch(self, updates: List[Tuple[str, str, str,
+                                                      Callable[[Any], None]]]
+                            ) -> Tuple[List[Any], List[Tuple[str, str, str]]]:
+        """Batched status RMW: one request, ``len(updates)`` rate-limit
+        tokens. Returns ``(updated, missing)`` (see
+        ``ObjectStore.update_status_many``)."""
+        return self._req(lambda: self.store.update_status_many(updates),
+                         tokens=max(1, len(updates)))
+
     def delete(self, kind: str, namespace: str, name: str) -> Any:
         return self._req(lambda: self.store.delete(kind, namespace, name))
 

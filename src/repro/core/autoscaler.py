@@ -5,10 +5,14 @@ tenant control planes, which only pays off when the *control plane itself*
 tracks tenant load instead of being provisioned for peak. This module closes
 the loop over the two elastic axes the framework already exposes:
 
-- **horizontal** — the downward syncer fleet: per-shard fair-queue depth and
-  reconcile latency drive :meth:`Syncer.resize_shards(n)
+- **horizontal (downward)** — the downward syncer fleet: per-shard
+  fair-queue depth and reconcile latency drive :meth:`Syncer.resize_shards(n)
   <repro.core.syncer.Syncer.resize_shards>` (consistent-hash ring, ~1/N
   tenant migration per step);
+- **horizontal (upward)** — the upward status/event fleet: upward-queue
+  depth and upward sync latency drive :meth:`Syncer.resize_upward_shards(n)
+  <repro.core.syncer.Syncer.resize_upward_shards>` (same ring mechanics;
+  the tenant-visible axis, so it gets its own thresholds and actuator);
 - **vertical** — the shared cooperative executor: ready-task backlog per
   thread and quantum latency drive :meth:`CooperativeExecutor.resize(n)
   <repro.core.executor.CooperativeExecutor.resize>` (grow spawns threads,
@@ -16,17 +20,18 @@ the loop over the two elastic axes the framework already exposes:
 
 Signal flow::
 
-    MetricsRegistry gauges/summaries          (queue depth, reconcile
-              │                                latency, ready backlog,
+    MetricsRegistry gauges/summaries          (down/up queue depth, down/up
+              │                                sync latency, ready backlog,
               ▼                                quantum latency)
-        SignalWindow × 4                      (sliding horizon: EWMA +
+        SignalWindow × 6                      (sliding horizon: EWMA +
               │                                percentile aggregation)
               ▼
         ScalingPolicy                         (thresholds, hysteresis,
               │                                cooldowns, min/max bounds)
               ▼
-    ┌─ Syncer.resize_shards(n, block=False)  (never parks a pool thread
-    └─ CooperativeExecutor.resize(n)          behind an operator resize)
+    ┌─ Syncer.resize_shards(n, block=False)        (never parks a pool
+    ├─ Syncer.resize_upward_shards(n, block=False)  thread behind an
+    └─ CooperativeExecutor.resize(n)                operator resize)
 
 The :class:`Autoscaler` is an ordinary queue-less :class:`Controller` whose
 periodic scan is the control tick, so it runs as a cooperative task on the
@@ -36,6 +41,13 @@ health/metrics/lifecycle for free. Decisions are exported as counters
 window aggregates as gauges, and :meth:`Autoscaler.state` feeds ``/healthz``
 so a wedged control loop is visible (last decision, current targets,
 cooldown remaining).
+
+The tick also hosts **per-tenant WRR weight autotuning**
+(``autotune_weights``): each fair queue's per-tenant wait means feed back
+into its live WRR weights — a tenant waiting longer than its queue's
+average gets proportionally more credit — bounded to [0.5x, 4x] of the
+tenant's configured weight, so autotuning can smooth latency for heavy-but-
+compliant tenants without ever overriding operator intent wholesale.
 
 Scale-up is multiplicative (default ×2: bursts are met in O(log max) ticks)
 and scale-down is halving gated by a *longer* cooldown and a hysteresis
@@ -126,6 +138,12 @@ class ScalingPolicy:
     shard_up_depth: float = 32.0       # p90 of max per-shard queue depth
     shard_down_depth: float = 2.0
     shard_up_latency_s: float = 0.25   # windowed mean reconcile latency
+    # horizontal: upward (status/event) shard fleet
+    min_upward_shards: int = 1
+    max_upward_shards: int = 8
+    upward_up_depth: float = 32.0      # p90 of max per-upward-shard depth
+    upward_down_depth: float = 2.0
+    upward_up_latency_s: float = 0.25  # windowed mean upward sync latency
     # vertical: cooperative executor pool
     min_pool: int = 2
     max_pool: int = 32
@@ -140,9 +158,17 @@ class ScalingPolicy:
     # signal windows
     window_s: float = 30.0
     ewma_alpha: float = 0.3
+    # per-tenant WRR weight autotuning (runs on the tick; factors bound the
+    # retuned weight relative to the tenant's CONFIGURED weight)
+    autotune_weights: bool = True
+    autotune_min_factor: float = 0.5
+    autotune_max_factor: float = 4.0
 
     def clamp_shards(self, n: int) -> int:
         return max(self.min_shards, min(self.max_shards, n))
+
+    def clamp_upward(self, n: int) -> int:
+        return max(self.min_upward_shards, min(self.max_upward_shards, n))
 
     def clamp_pool(self, n: int) -> int:
         return max(self.min_pool, min(self.max_pool, n))
@@ -235,10 +261,14 @@ class Autoscaler(Controller):
         p = self.policy
         self.w_depth = SignalWindow(p.window_s, p.ewma_alpha)
         self.w_latency = SignalWindow(p.window_s, p.ewma_alpha)
+        self.w_up_depth = SignalWindow(p.window_s, p.ewma_alpha)
+        self.w_up_latency = SignalWindow(p.window_s, p.ewma_alpha)
         self.w_backlog = SignalWindow(p.window_s, p.ewma_alpha)
         self.w_quantum = SignalWindow(p.window_s, p.ewma_alpha)
         self._shards_act = _Actuator("shards", p, p.clamp_shards)
+        self._upward_act = _Actuator("upward_shards", p, p.clamp_upward)
         self._pool_act = _Actuator("executor_pool", p, p.clamp_pool)
+        self.weight_retunes = 0
         # cumulative (sum, count) per shard-controller NAME: the registry
         # keeps a retired shard's summary and a re-grown shard reuses its
         # name, so per-name baselines survive fleet resizes (a fleet-wide
@@ -256,12 +286,17 @@ class Autoscaler(Controller):
         m = self.metrics
         m.register_gauge("autoscaler_target_shards",
                          lambda: self.syncer.num_shards)
+        m.register_gauge("autoscaler_target_upward_shards",
+                         lambda: self.syncer.num_upward_shards)
         if self.pool_executor is not None:
             m.register_gauge("autoscaler_target_pool",
                              lambda: self.pool_executor.pool_size)
         m.register_gauge("autoscaler_shard_depth_p90",
                          lambda: self.w_depth.percentile(0.9))
         m.register_gauge("autoscaler_reconcile_latency_s", self.w_latency.ewma)
+        m.register_gauge("autoscaler_upward_depth_p90",
+                         lambda: self.w_up_depth.percentile(0.9))
+        m.register_gauge("autoscaler_upward_latency_s", self.w_up_latency.ewma)
         m.register_gauge("autoscaler_backlog_per_thread_p90",
                          lambda: self.w_backlog.percentile(0.9))
         m.register_gauge("autoscaler_quantum_latency_s", self.w_quantum.ewma)
@@ -276,10 +311,26 @@ class Autoscaler(Controller):
     def tick(self, now: Optional[float] = None) -> int:
         now = time.monotonic() if now is None else now
         self._sample(now)
-        actions = self._evaluate_shards(now) + self._evaluate_pool(now)
+        actions = (self._evaluate_shards(now) + self._evaluate_upward(now)
+                   + self._evaluate_pool(now))
+        self._autotune_weights()
         with self._state_lock:
             self.ticks += 1
         return actions
+
+    def _windowed_latency(self, controllers: List[Any]) -> float:
+        """Windowed mean reconcile latency across ``controllers`` from the
+        cumulative summaries: delta(sum)/delta(count) since the last tick.
+        Zero when idle, so the latency window decays and permits shrink."""
+        reg = self.syncer.up_controller.metrics
+        dsum = dcount = 0.0
+        for c in controllers:
+            s = reg.summary("reconcile_seconds", controller=c.name)
+            psum, pcount = self._prev_reconcile.get(c.name, (0.0, 0.0))
+            dsum += s["sum"] - psum
+            dcount += s["count"] - pcount
+            self._prev_reconcile[c.name] = (s["sum"], s["count"])
+        return dsum / dcount if dcount > 0 else 0.0
 
     def _sample(self, now: float) -> None:
         # hot-shard depth: the max per-shard fair-queue depth is the signal
@@ -288,19 +339,12 @@ class Autoscaler(Controller):
         shards = list(self.syncer.shard_controllers)
         depth = max((len(c.queue) for c in shards), default=0)
         self.w_depth.observe(depth, now)
-        # windowed mean reconcile latency from the cumulative summaries:
-        # delta(sum)/delta(count) since the previous tick
-        reg = self.syncer.up_controller.metrics
-        dsum = dcount = 0.0
-        for c in shards:
-            s = reg.summary("reconcile_seconds", controller=c.name)
-            psum, pcount = self._prev_reconcile.get(c.name, (0.0, 0.0))
-            dsum += s["sum"] - psum
-            dcount += s["count"] - pcount
-            self._prev_reconcile[c.name] = (s["sum"], s["count"])
-        # no reconciles this tick = an idle fleet: observe zero so the
-        # latency window decays and permits shrink
-        self.w_latency.observe(dsum / dcount if dcount > 0 else 0.0, now)
+        self.w_latency.observe(self._windowed_latency(shards), now)
+        # same two signals on the upward axis (its own shard fleet)
+        ushards = list(self.syncer.upward.controllers)
+        udepth = max((len(c.queue) for c in ushards), default=0)
+        self.w_up_depth.observe(udepth, now)
+        self.w_up_latency.observe(self._windowed_latency(ushards), now)
         ex = self.pool_executor
         if ex is not None:
             self.w_backlog.observe(
@@ -336,6 +380,33 @@ class Autoscaler(Controller):
                      extra={"tenants_moved": len(moved)})
         return 1
 
+    def _evaluate_upward(self, now: float) -> int:
+        """The third actuator: upward fleet sizing from upward-queue depth
+        and upward sync latency (the tenant-visible axis)."""
+        p = self.policy
+        depth_p90 = self.w_up_depth.percentile(0.9)
+        lat = self.w_up_latency.ewma()
+        up = depth_p90 > p.upward_up_depth or lat > p.upward_up_latency_s
+        down = (depth_p90 <= p.upward_down_depth
+                and lat <= p.upward_up_latency_s / 2)
+        cur = self.syncer.num_upward_shards
+        target = self._upward_act.decide(cur, up, down, now)
+        if target is None:
+            return 0
+        moved = self.syncer.resize_upward_shards(target, block=False)
+        if moved is None:
+            # operator call in flight: keep streaks, retry next tick
+            with self._state_lock:
+                self.contended_resizes += 1
+            self.metrics.inc("autoscaler_resize_contended",
+                             controller=self.name)
+            return 0
+        self._commit("upward_shards", cur, target, now,
+                     reason=(f"upward_depth_p90={depth_p90:.1f} "
+                             f"upward_latency={lat * 1e3:.1f}ms"),
+                     extra={"tenants_moved": len(moved)})
+        return 1
+
     def _evaluate_pool(self, now: float) -> int:
         ex = self.pool_executor
         if ex is None:
@@ -356,9 +427,57 @@ class Autoscaler(Controller):
                              f"quantum={quantum * 1e3:.2f}ms"))
         return 1
 
+    def _autotune_weights(self) -> int:
+        """Feed each fair queue's fresh per-tenant wait metrics back into
+        its live WRR weights, bounded to [min_factor, max_factor] x the
+        tenant's configured weight. Returns the number of weights changed.
+
+        The boost factor is the tenant's wait excess *demand-normalized* by
+        its throughput share: ``(wait / overall_wait) * (fair_n / n)``. A
+        queue-flooding tenant's long waits are self-inflicted and come with
+        a proportionally large sample count, so the two ratios cancel and
+        the flooder earns NO boost — only genuinely under-served tenants
+        (long waits at modest throughput) are raised, preserving the
+        Fig.11 isolation story the fair queue exists for."""
+        p = self.policy
+        if not p.autotune_weights:
+            return 0
+        sy = self.syncer
+        changed = 0
+        queues = ([c.queue for c in sy.shard_controllers]
+                  + [c.queue for c in sy.upward.controllers])
+        for q in queues:
+            if not getattr(q, "fair", False):
+                continue
+            stats = q.tenant_wait_stats()
+            if len(stats) < 2:       # one tenant: nothing to rebalance
+                continue
+            overall = sum(m for _, m in stats.values()) / len(stats)
+            fair_n = sum(n for n, _ in stats.values()) / len(stats)
+            if overall <= 0 or fair_n <= 0:
+                continue
+            for tenant, (n, mean_wait) in stats.items():
+                reg = sy.tenants.get(tenant)     # GIL-atomic dict read
+                if reg is None:
+                    continue
+                base = max(1, int(reg.plane.weight))
+                factor = (mean_wait / overall) * (fair_n / max(1, n))
+                factor = min(p.autotune_max_factor,
+                             max(p.autotune_min_factor, factor))
+                if q.set_weight(tenant, round(base * factor)):
+                    changed += 1
+        if changed:
+            with self._state_lock:
+                self.weight_retunes += changed
+            self.metrics.inc("autoscaler_weight_retunes", float(changed),
+                             controller=self.name)
+        return changed
+
     def _commit(self, actuator: str, cur: int, target: int, now: float,
                 reason: str, extra: Optional[Dict[str, Any]] = None) -> None:
-        act = self._shards_act if actuator == "shards" else self._pool_act
+        act = {"shards": self._shards_act,
+               "upward_shards": self._upward_act,
+               "executor_pool": self._pool_act}[actuator]
         act.committed(now)
         direction = "up" if target > cur else "down"
         decision = {"actuator": actuator, "from": cur, "to": target,
@@ -381,23 +500,29 @@ class Autoscaler(Controller):
             last = dict(self.decisions[-1]) if self.decisions else None
             ticks = self.ticks
             contended = self.contended_resizes
+            retunes = self.weight_retunes
         if last is not None:
             last["age_s"] = round(now - last.pop("t_monotonic"), 3)
         ex = self.pool_executor
         return {
             "last_decision": last,
             "targets": {"shards": self.syncer.num_shards,
+                        "upward_shards": self.syncer.num_upward_shards,
                         "executor_pool": ex.pool_size if ex else None},
             "cooldown_remaining_s": {
                 "shards": self._shards_act.cooldown_remaining(now),
+                "upward_shards": self._upward_act.cooldown_remaining(now),
                 "executor_pool": self._pool_act.cooldown_remaining(now),
             },
             "signals": {"shard_depth": self.w_depth.state(),
                         "reconcile_latency_s": self.w_latency.state(),
+                        "upward_depth": self.w_up_depth.state(),
+                        "upward_latency_s": self.w_up_latency.state(),
                         "backlog_per_thread": self.w_backlog.state(),
                         "quantum_latency_s": self.w_quantum.state()},
             "ticks": ticks,
             "contended_resizes": contended,
+            "weight_retunes": retunes,
         }
 
     def scale_events(self) -> List[Dict[str, Any]]:

@@ -38,12 +38,21 @@ class VirtualClusterFramework:
     ``executor_mode=False`` is the legacy blocking-thread fallback
     (one thread per informer/worker/scan loop).
 
+    The upward status/event path mirrors the downward one: tenant-hash
+    upward shards (``upward_shards``, default = ``syncer_shards``) with
+    per-object latest-wins coalescing and batched tenant-plane writes
+    (``batch_upward``, on by default), plus kubelet-style Events recorded by
+    the node agents (``record_events``) and synced into tenant planes with
+    their dedup counts.
+
     ``autoscale=True`` adds the closed-loop :class:`Autoscaler` as a sixth
     controller: it grows/shrinks the downward shard fleet
     (``Syncer.resize_shards``) from fair-queue depth and reconcile latency,
-    and resizes the cooperative executor pool from ready-backlog and
-    quantum-latency signals, within ``autoscale_policy`` bounds. With
-    ``autoscale=False`` (default) the fleet stays exactly as configured.
+    the upward fleet (``Syncer.resize_upward_shards``) from upward-queue
+    depth and upward sync latency, and resizes the cooperative executor
+    pool from ready-backlog and quantum-latency signals, within
+    ``autoscale_policy`` bounds. With ``autoscale=False`` (default) the
+    fleet stays exactly as configured.
     """
 
     def __init__(self, *, num_nodes: int = 4, chips_per_node: int = 8,
@@ -56,6 +65,10 @@ class VirtualClusterFramework:
                  grpc_latency_ms: float = 0.0,
                  syncer_shards: int = 1,
                  downward_batch: int = 1,
+                 upward_shards: Optional[int] = None,
+                 batch_upward: bool = True,
+                 upward_batch: int = 16,
+                 record_events: bool = True,
                  executor_mode: bool = True,
                  executor_pool: int = 8,
                  autoscale: bool = False,
@@ -77,7 +90,8 @@ class VirtualClusterFramework:
             self.agents[name] = NodeAgent(
                 self.super_api, name, chips=chips_per_node, chip_ids=chip_ids,
                 provider=provider, router=self.router,
-                heartbeat_interval=heartbeat_interval)
+                heartbeat_interval=heartbeat_interval,
+                record_events=record_events)
         self.vn_agent = VnAgent(self.super_api, self.agents)
         self.scheduler = SuperScheduler(self.super_api,
                                         parallel_scorers=parallel_scorers)
@@ -88,6 +102,10 @@ class VirtualClusterFramework:
                              scan_interval=scan_interval,
                              shards=syncer_shards,
                              downward_batch=downward_batch,
+                             upward_shards=upward_shards,
+                             batch_upward=batch_upward,
+                             upward_batch=upward_batch,
+                             record_events=record_events,
                              executor=self.executor)
         self.operator = TenantOperator(self.super_api, self.syncer,
                                        vn_agents=[self.vn_agent])
@@ -111,6 +129,11 @@ class VirtualClusterFramework:
             # the loop never finds itself outside its own [min, max] box
             policy.min_shards = min(policy.min_shards, syncer_shards)
             policy.max_shards = max(policy.max_shards, syncer_shards)
+            start_upward = self.syncer.num_upward_shards
+            policy.min_upward_shards = min(policy.min_upward_shards,
+                                           start_upward)
+            policy.max_upward_shards = max(policy.max_upward_shards,
+                                           start_upward)
             if self.executor is not None:
                 policy.min_pool = min(policy.min_pool, executor_pool)
                 policy.max_pool = max(policy.max_pool, executor_pool)

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Callable, Dict, Hashable, List, Optional, Tuple
+from typing import Dict, Hashable, List, Optional, Tuple
 
 from .workqueue import WakerSubscriptions
 
@@ -63,6 +63,36 @@ class FairWorkQueue(WakerSubscriptions):
         with self._lock:
             self._weights[tenant] = max(1, int(weight))
             self._subs.setdefault(tenant, _SubQueue())
+
+    def set_weight(self, tenant: str, weight: int) -> bool:
+        """Retune a registered tenant's WRR weight live (autotuning feeds
+        per-tenant wait metrics back here). Takes effect at the tenant's
+        next credit refill. Returns True when the weight actually changed."""
+        weight = max(1, int(weight))
+        with self._lock:
+            if (tenant not in self._weights
+                    or self._weights[tenant] == weight):
+                return False
+            self._weights[tenant] = weight
+            return True
+
+    # safety bound on retained wait samples per tenant: benchmarks read
+    # per_tenant_wait between phases (well under this), and the autotuning
+    # consumer drains it — the cap only guards deployments running neither
+    _WAIT_SAMPLES_CAP = 65_536
+
+    def tenant_wait_stats(self) -> Dict[str, Tuple[int, float]]:
+        """Drain and aggregate the per-tenant wait samples recorded since
+        the last call: ``{tenant: (n_samples, mean_wait_s)}``. Draining (not
+        cursoring) keeps the sample lists bounded for a periodic consumer
+        like the autoscaler's autotune tick."""
+        out: Dict[str, Tuple[int, float]] = {}
+        with self._lock:
+            for tenant, samples in self.per_tenant_wait.items():
+                if samples:
+                    out[tenant] = (len(samples), sum(samples) / len(samples))
+            self.per_tenant_wait = {}
+        return out
 
     def drain_tenant(self, tenant: str) -> List[Hashable]:
         """Atomically remove and return every pending key of one tenant
@@ -203,27 +233,40 @@ class FairWorkQueue(WakerSubscriptions):
         t0 = self._enqueue_time.pop(item, None)
         if t0 is not None:
             wait = time.monotonic() - t0
-            self.per_tenant_wait.setdefault(item[0], []).append(wait)
+            samples = self.per_tenant_wait.setdefault(item[0], [])
+            samples.append(wait)
+            if len(samples) > self._WAIT_SAMPLES_CAP:   # unconsumed: bound it
+                del samples[:self._WAIT_SAMPLES_CAP // 2]
 
     def done(self, item: Item) -> None:
         with self._cv:
-            self._processing.discard(item)
-            if item in self._dirty:
-                # re-add (it was modified while being processed)
-                tenant, key = item
-                self._enqueue_time.setdefault(item, time.monotonic())
-                if not self.fair:
-                    self._fifo.append(item)
-                    depth = len(self._fifo)
-                else:
-                    sub = self._subs.setdefault(tenant, _SubQueue())
-                    sub.items.append(key)
-                    depth = len(sub.items)
-                    if tenant not in self._active:
-                        sub.credit = self._weights.get(tenant, 1)
-                        self._active.append(tenant)
-                self._cv.notify()
-                self._notify_waker(depth)
+            self._done_locked(item)
+
+    def done_batch(self, items: List[Item]) -> None:
+        """Batch :meth:`done`: ONE lock round for a whole dequeued batch
+        (a coalescing consumer otherwise pays a queue lock per item)."""
+        with self._cv:
+            for item in items:
+                self._done_locked(item)
+
+    def _done_locked(self, item: Item) -> None:
+        self._processing.discard(item)
+        if item in self._dirty:
+            # re-add (it was modified while being processed)
+            tenant, key = item
+            self._enqueue_time.setdefault(item, time.monotonic())
+            if not self.fair:
+                self._fifo.append(item)
+                depth = len(self._fifo)
+            else:
+                sub = self._subs.setdefault(tenant, _SubQueue())
+                sub.items.append(key)
+                depth = len(sub.items)
+                if tenant not in self._active:
+                    sub.credit = self._weights.get(tenant, 1)
+                    self._active.append(tenant)
+            self._cv.notify()
+            self._notify_waker(depth)
 
     # -- weighted round robin -----------------------------------------------------
 

@@ -23,8 +23,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from .apiserver import APIServer
 from .executor import CooperativeExecutor, Task
-from .objects import deepcopy_obj
-from .store import ADDED, DELETED, MODIFIED
+from .store import ADDED, DELETED
 
 Handler = Callable[[str, Any], None]   # (event_type, object)
 

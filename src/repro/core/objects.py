@@ -156,6 +156,32 @@ class Service:
 
 
 @dataclass
+class Event:
+    """Kubernetes-style Event with count/lastTimestamp compression.
+
+    Repeated occurrences of the same (involved object, reason, component)
+    tuple are folded into ONE object whose ``count`` increments and whose
+    ``last_timestamp`` advances (kubelet event-aggregation semantics), so a
+    heartbeat or a flapping WorkUnit costs one stored object, not one per
+    occurrence. Recorded by :class:`~repro.core.upward.EventRecorder`;
+    synced upward so tenants can list their own events.
+    """
+    kind = "Event"
+    metadata: ObjectMeta = field(default_factory=lambda: ObjectMeta(""))
+    involved_kind: str = ""
+    involved_namespace: str = ""
+    involved_name: str = ""
+    reason: str = ""
+    message: str = ""
+    type: str = "Normal"                 # Normal | Warning
+    source_component: str = ""
+    source_host: str = ""
+    count: int = 1
+    first_timestamp: float = 0.0
+    last_timestamp: float = 0.0
+
+
+@dataclass
 class Secret:
     kind = "Secret"
     metadata: ObjectMeta = field(default_factory=lambda: ObjectMeta(""))
@@ -179,11 +205,13 @@ KINDS = {
     "Service": Service,
     "Secret": Secret,
     "ConfigMap": ConfigMap,
+    "Event": Event,
 }
 
 # Paper §III-C: the syncer populates only resources used in Pod provision.
 SYNCED_KINDS_DOWNWARD = ["Namespace", "Secret", "ConfigMap", "WorkUnit", "Service"]
-SYNCED_KINDS_UPWARD = ["WorkUnit", "Service"]
+# Upward: super status (and Events) projected back into tenant planes.
+SYNCED_KINDS_UPWARD = ["WorkUnit", "Service", "Event"]
 
 
 def obj_kind(obj: Any) -> str:
@@ -207,3 +235,26 @@ def deepcopy_obj(obj: Any):
     if isinstance(obj, list):
         return [deepcopy_obj(v) for v in obj]
     return obj
+
+
+def spec_equal(a: Any, b: Any) -> bool:
+    """Two-side desired-state comparison (downward sync / scan)."""
+    if obj_kind(a) != obj_kind(b):
+        return False
+    if hasattr(a, "spec"):
+        return a.spec == b.spec
+    if hasattr(a, "data"):
+        return a.data == b.data
+    if obj_kind(a) == "Service":
+        return a.selector == b.selector and a.ports == b.ports
+    return True
+
+
+def status_equal(a: Any, b: Any, ignore_node: bool = False) -> bool:
+    """WorkUnit status comparison (upward sync / scan)."""
+    if ignore_node:
+        a, b = deepcopy_obj(a), deepcopy_obj(b)
+        a.node = b.node = ""
+    return (a.phase == b.phase and a.node == b.node
+            and {c.type: c.status for c in a.conditions}
+            == {c.type: c.status for c in b.conditions})

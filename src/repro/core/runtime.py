@@ -84,6 +84,19 @@ class MetricsRegistry:
             s[1] += 1
             s[2] = max(s[2], value)
 
+    def observe_n(self, name: str, value: float, n: int = 1,
+                  **labels: Any) -> None:
+        """``n`` observations of ``value`` in ONE lock round (batch-path
+        accounting: per-item summary semantics without per-item locking)."""
+        if n <= 0:
+            return
+        key = self._key(name, labels)
+        with self._lock:
+            s = self._summaries.setdefault(key, [0.0, 0.0, 0.0])
+            s[0] += value * n
+            s[1] += n
+            s[2] = max(s[2], value)
+
     def register_gauge(self, name: str, fn: Callable[[], float],
                        **labels: Any) -> None:
         key = self._key(name, labels)

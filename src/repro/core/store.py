@@ -11,7 +11,7 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from .objects import deepcopy_obj, new_uid, obj_key
 
@@ -141,7 +141,7 @@ class ObjectStore:
             stored.metadata.creation_timestamp = (
                 stored.metadata.creation_timestamp or time.time())
             self._objects[key] = stored
-            self._notify(WatchEvent(ADDED, deepcopy_obj(stored), self._rv))
+            self._notify_stored(ADDED, stored, self._rv)
             return deepcopy_obj(stored)
 
     def create_many(self, objs: List[Any]) -> Tuple[List[Any], List[Any]]:
@@ -166,7 +166,7 @@ class ObjectStore:
                 stored.metadata.creation_timestamp = (
                     stored.metadata.creation_timestamp or time.time())
                 self._objects[key] = stored
-                self._notify(WatchEvent(ADDED, deepcopy_obj(stored), self._rv))
+                self._notify_stored(ADDED, stored, self._rv)
                 created.append(deepcopy_obj(stored))
         return created, conflicted
 
@@ -193,7 +193,7 @@ class ObjectStore:
             stored.metadata.creation_timestamp = cur.metadata.creation_timestamp
             stored.metadata.resource_version = self._rv
             self._objects[key] = stored
-            self._notify(WatchEvent(MODIFIED, deepcopy_obj(stored), self._rv))
+            self._notify_stored(MODIFIED, stored, self._rv)
             return deepcopy_obj(stored)
 
     def update_status(self, kind: str, namespace: str, name: str,
@@ -208,7 +208,7 @@ class ObjectStore:
             self._rv += 1
             stored.metadata.resource_version = self._rv
             self._objects[(kind, namespace, name)] = stored
-            self._notify(WatchEvent(MODIFIED, deepcopy_obj(stored), self._rv))
+            self._notify_stored(MODIFIED, stored, self._rv)
             return deepcopy_obj(stored)
 
     def delete(self, kind: str, namespace: str, name: str) -> Any:
@@ -217,7 +217,7 @@ class ObjectStore:
             if obj is None:
                 raise NotFoundError(f"{kind} {namespace}/{name} not found")
             self._rv += 1
-            self._notify(WatchEvent(DELETED, deepcopy_obj(obj), self._rv))
+            self._notify_stored(DELETED, obj, self._rv)
             return deepcopy_obj(obj)
 
     def update_many(self, objs: List[Any], *, force: bool = False
@@ -247,9 +247,42 @@ class ObjectStore:
                 stored.metadata.creation_timestamp = cur.metadata.creation_timestamp
                 stored.metadata.resource_version = self._rv
                 self._objects[key] = stored
-                self._notify(WatchEvent(MODIFIED, deepcopy_obj(stored), self._rv))
+                self._notify_stored(MODIFIED, stored, self._rv)
                 updated.append(deepcopy_obj(stored))
         return updated, conflicted
+
+    def update_status_many(self, updates: List[Tuple[str, str, str,
+                                                     Callable[[Any], None]]]
+                           ) -> Tuple[List[Tuple[str, str, str]],
+                                      List[Tuple[str, str, str]]]:
+        """Batched status read-modify-write under ONE lock round.
+
+        ``updates`` are ``(kind, namespace, name, mutate)`` tuples; each
+        ``mutate`` runs against a copy of the stored object, exactly like
+        :meth:`update_status`. Returns ``(updated, missing)`` — both KEY
+        lists, not object copies: the keys rewritten, and the keys that
+        were not found (reported, not raised) so a coalescing caller can
+        create-or-retry just the losers. Skipping the per-object return
+        copies is deliberate — a status-storm batch would otherwise pay a
+        full deepcopy per write for results nobody reads.
+        """
+        updated: List[Tuple[str, str, str]] = []
+        missing: List[Tuple[str, str, str]] = []
+        with self._lock:
+            for kind, namespace, name, mutate in updates:
+                key = (kind, namespace, name)
+                cur = self._objects.get(key)
+                if cur is None:
+                    missing.append(key)
+                    continue
+                stored = deepcopy_obj(cur)
+                mutate(stored)
+                self._rv += 1
+                stored.metadata.resource_version = self._rv
+                self._objects[key] = stored
+                self._notify_stored(MODIFIED, stored, self._rv)
+                updated.append(key)
+        return updated, missing
 
     def delete_many(self, keys: List[Tuple[str, str, str]]
                     ) -> Tuple[List[Any], List[Tuple[str, str, str]]]:
@@ -268,7 +301,7 @@ class ObjectStore:
                     missing.append(key)
                     continue
                 self._rv += 1
-                self._notify(WatchEvent(DELETED, deepcopy_obj(obj), self._rv))
+                self._notify_stored(DELETED, obj, self._rv)
                 deleted.append(deepcopy_obj(obj))
         return deleted, missing
 
@@ -310,10 +343,16 @@ class ObjectStore:
             w = self.watch(kind, namespace)
             return snapshot, w
 
-    def _notify(self, ev: WatchEvent) -> None:
-        kind = type(ev.object).kind
-        ns = ev.object.metadata.namespace
+    def _notify_stored(self, ev_type: str, stored: Any, rv: int) -> None:
+        """Fan a write out to matching watches. The event copy of the
+        just-stored object is made LAZILY — only once a live watch actually
+        matches — so a kind nobody watches (e.g. Events on a tenant plane)
+        costs zero deepcopies per write. All watchers share one event
+        object, as they always have."""
+        kind = type(stored).kind
+        ns = stored.metadata.namespace
         dead = []
+        ev: Optional[WatchEvent] = None
         for w in self._watches:
             if w.closed:
                 dead.append(w)
@@ -322,6 +361,8 @@ class ObjectStore:
                 continue
             if w.namespace is not None and w.namespace != ns:
                 continue
+            if ev is None:
+                ev = WatchEvent(ev_type, deepcopy_obj(stored), rv)
             w._push(ev)
         for w in dead:
             self._watches.remove(w)

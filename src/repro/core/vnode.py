@@ -6,7 +6,10 @@ unlike virtual-kubelet's single aggregate node. The syncer:
 - creates a vNode in the tenant plane when a tenant WorkUnit binds to a
   physical node;
 - broadcasts physical node heartbeats to all tenant vNodes;
-- tracks WorkUnit<->vNode bindings and garbage-collects vNodes with none.
+- tracks WorkUnit<->vNode bindings and garbage-collects vNodes with none;
+- records tenant-visible Events on vNode appearance/GC (the tenant-side
+  half of the event story — these never need upward sync since they are
+  written straight into the tenant plane).
 """
 from __future__ import annotations
 
@@ -15,18 +18,27 @@ from typing import TYPE_CHECKING, Dict, Set, Tuple
 
 from .objects import Node, VirtualNode
 from .store import AlreadyExistsError, NotFoundError
+from .upward import EventRecorder
 
 if TYPE_CHECKING:
     from .apiserver import TenantControlPlane
 
 
 class VNodeManager:
-    def __init__(self):
+    def __init__(self, record_events: bool = True):
         self._lock = threading.Lock()
         # (tenant, vnode_name) -> set of (namespace, unit_name) bindings
         self._bindings: Dict[Tuple[str, str], Set[Tuple[str, str]]] = {}
+        self.record_events = record_events
         self.gc_count = 0
         self.heartbeats_broadcast = 0
+
+    def _record(self, plane: "TenantControlPlane", vname: str, reason: str,
+                message: str) -> None:
+        if not self.record_events:
+            return
+        EventRecorder(plane.api, "vnode-manager").record(
+            "VirtualNode", "", vname, reason, message)
 
     def bind(self, tenant_plane: "TenantControlPlane", node: Node,
              unit_ns: str, unit_name: str) -> str:
@@ -46,6 +58,8 @@ class VNodeManager:
                 tenant_plane.api.create(vn)
             except AlreadyExistsError:
                 pass
+            self._record(tenant_plane, vname, "VNodeBound",
+                         f"vNode {vname} appeared for {unit_ns}/{unit_name}")
         return vname
 
     def unbind(self, tenant_plane: "TenantControlPlane", unit_ns: str,
@@ -67,6 +81,8 @@ class VNodeManager:
                 self.gc_count += 1
             except NotFoundError:
                 pass
+            self._record(tenant_plane, vname, "VNodeGC",
+                         f"vNode {vname} released (no bound WorkUnits)")
 
     def broadcast_heartbeat(self, tenants: Dict[str, "TenantControlPlane"],
                             node: Node) -> None:

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Any, Callable, Dict, Hashable, List, Optional, Tuple
+from typing import Any, Callable, Dict, Hashable, List, Optional
 
 
 class WakerSubscriptions:
@@ -159,6 +159,12 @@ class RateLimiter:
     def forget(self, key: Hashable) -> None:
         with self._lock:
             self._fail.pop(key, None)
+
+    def forget_many(self, keys: List[Hashable]) -> None:
+        """Batch :meth:`forget`: one lock round for a whole batch."""
+        with self._lock:
+            for key in keys:
+                self._fail.pop(key, None)
 
     def retries(self, key: Hashable) -> int:
         with self._lock:

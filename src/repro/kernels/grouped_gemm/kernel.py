@@ -12,8 +12,6 @@ SMEM) drives the W index map.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

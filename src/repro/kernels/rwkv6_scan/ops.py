@@ -13,7 +13,6 @@ stays inside fp32 exp range.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

@@ -17,7 +17,6 @@ if "_DRYRUN_NO_FLAGS" not in os.environ:
                                os.environ.get("_DRYRUN_DEVICES", "512")).strip()
 
 import argparse
-import functools
 import json
 import sys
 import time
@@ -29,7 +28,7 @@ import jax.numpy as jnp
 
 from ..configs import cells, get_config, get_shape
 from ..models.config import ModelConfig, ShapeConfig
-from ..roofline.analysis import (Roofline, model_flops_for, parse_collectives)
+from ..roofline.analysis import Roofline, model_flops_for
 from ..sharding.api import use_rules
 from ..sharding.planner import plan_for, serve_shardings, train_shardings
 from ..training import OptimizerConfig, make_decode_step, make_prefill_step, \

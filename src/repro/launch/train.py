@@ -11,12 +11,9 @@ Production mode (--dry-run): lowers/compiles the sharded step for the
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 
 def main(argv=None) -> int:

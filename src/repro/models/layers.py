@@ -7,7 +7,6 @@ the same tree structure — see repro.sharding.api).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -10,7 +10,7 @@ exact per-step oracle in ref). Decode carries (shift_tm, shift_cm, wkv_state).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

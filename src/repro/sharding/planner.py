@@ -25,12 +25,10 @@ param axis additionally sharded over data), since fp32 AdamW state for the
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..models import cache_axes as model_cache_axes

@@ -11,8 +11,7 @@ mean-reduced over pods with int8 + error feedback (training/grad_compress).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +22,7 @@ from ..models import decode_step as model_decode_step
 from ..models import loss_fn as model_loss_fn
 from ..models import prefill as model_prefill
 from ..models.config import ModelConfig
-from .grad_compress import _quantize, init_error_state
+from .grad_compress import init_error_state
 from .optimizer import OptimizerConfig, adamw_update, init_opt_state
 
 

@@ -198,10 +198,13 @@ def test_autoscaler_state_reports_decisions_targets_cooldowns():
     try:
         st = scaler.state()
         assert st["last_decision"] is None
-        assert st["targets"] == {"shards": 1, "executor_pool": 2}
-        assert set(st["cooldown_remaining_s"]) == {"shards", "executor_pool"}
+        assert st["targets"] == {"shards": 1, "upward_shards": 1,
+                                 "executor_pool": 2}
+        assert set(st["cooldown_remaining_s"]) == {"shards", "upward_shards",
+                                                   "executor_pool"}
         assert wait_for(lambda: scaler.state()["ticks"] >= 3)
         assert set(st["signals"]) == {"shard_depth", "reconcile_latency_s",
+                                      "upward_depth", "upward_latency_s",
                                       "backlog_per_thread",
                                       "quantum_latency_s"}
         # force a decision and check it surfaces
@@ -244,10 +247,152 @@ def test_autoscaler_without_executor_scales_shards_only():
             d["actuator"] == "shards" and d["direction"] == "up"
             for d in scaler.scale_events()), timeout=20.0)
         assert scaler.state()["targets"]["executor_pool"] is None
-        assert all(d["actuator"] == "shards" for d in scaler.scale_events())
+        # no pool to size: only the two shard-fleet actuators may fire
+        assert all(d["actuator"] in ("shards", "upward_shards")
+                   for d in scaler.scale_events())
     finally:
         scaler.stop()
         syncer.stop()
+        super_api.close()
+
+
+# ------------------------------------------- third actuator: upward fleet
+
+
+def test_upward_actuator_grows_on_status_storm_and_shrinks_idle():
+    """The third actuator: a status storm (rapid super-side flaps) must grow
+    the UPWARD shard fleet, every tenant must converge to the final status,
+    and idle cooldown must shrink the fleet back to its floor."""
+    ex = CooperativeExecutor(pool_size=4, name="as-up-test")
+    super_api = APIServer("super")
+    syncer = Syncer(super_api, downward_workers=4, upward_workers=4,
+                    scan_interval=0.0, shards=1, downward_batch=4,
+                    upward_shards=1, batch_upward=True, executor=ex)
+    planes = [TenantControlPlane(f"t{i:02d}") for i in range(6)]
+    for i, p in enumerate(planes):
+        syncer.register_tenant(p, f"uid-{i:02d}")
+    syncer.start()
+    policy = ScalingPolicy(min_upward_shards=1, max_upward_shards=4,
+                           upward_up_depth=8.0, upward_down_depth=1.0,
+                           hysteresis=2, up_cooldown_s=0.1,
+                           down_cooldown_s=0.4, window_s=1.5,
+                           # keep the other actuators parked so the test
+                           # isolates the upward loop
+                           shard_up_depth=1e9, min_pool=4, max_pool=4,
+                           pool_up_backlog=1e9)
+    scaler = Autoscaler(syncer, ex, policy=policy, interval=0.05)
+    scaler.start()
+    try:
+        per_tenant = 120
+        for p in planes:
+            ns = Namespace()
+            ns.metadata.name = "bench"
+            p.api.create(ns)
+        threads = [threading.Thread(
+            target=lambda p=p: [p.api.create(_mk_unit(f"u{j:04d}"))
+                                for j in range(per_tenant)])
+            for p in planes]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        total = len(planes) * per_tenant
+        assert wait_for(
+            lambda: super_api.store.count("WorkUnit") >= total, timeout=60.0)
+        prefixes = {p.name: syncer.tenants[p.name].prefix for p in planes}
+
+        def storm(p):
+            ns = f"{prefixes[p.name]}-bench"
+            for j in range(per_tenant):
+                for phase in ("Running", "Ready"):
+                    super_api.update_status(
+                        "WorkUnit", ns, f"u{j:04d}",
+                        lambda u, ph=phase: setattr(u.status, "phase", ph))
+        threads = [threading.Thread(target=storm, args=(p,)) for p in planes]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+
+        def converged(p):
+            units = p.api.list("WorkUnit", "bench")
+            return (len(units) >= per_tenant
+                    and all(u.status.phase == "Ready" for u in units))
+        assert wait_for(lambda: all(converged(p) for p in planes),
+                        timeout=60.0)
+        ups = [d for d in scaler.scale_events()
+               if d["actuator"] == "upward_shards" and d["direction"] == "up"]
+        assert ups, "upward actuator never grew the fleet"
+        # idle cooldown: the upward fleet returns to its floor
+        assert wait_for(lambda: syncer.num_upward_shards == 1, timeout=30.0)
+        reg = syncer.up_controller.metrics
+        assert reg.counter("autoscaler_scale_total", controller="autoscaler",
+                           actuator="upward_shards", direction="up") >= 1
+    finally:
+        scaler.stop()
+        syncer.stop()
+        ex.shutdown()
+        super_api.close()
+
+
+# ------------------------------------------- WRR weight autotune (satellite)
+
+
+def test_weight_autotune_boosts_waiting_tenant_within_bounds():
+    """Per-tenant wait metrics feed back into live WRR weights, bounded to
+    [0.5x, 4x] of the configured weight."""
+    ex, super_api, syncer, planes = _rig(tenants=2)
+    scaler = Autoscaler(syncer, ex, policy=_fast_policy(), interval=3600)
+    try:
+        q = syncer.shard_controllers[0].queue
+        slow, fastt = planes[0].name, planes[1].name
+        # synthetic wait samples: tenant 0 waits 8x longer than tenant 1
+        # at EQUAL throughput (same sample count) -> genuinely under-served
+        q.per_tenant_wait.setdefault(slow, []).extend([0.8] * 10)
+        q.per_tenant_wait.setdefault(fastt, []).extend([0.1] * 10)
+        changed = scaler._autotune_weights()
+        assert changed >= 1
+        base = syncer.tenants[slow].plane.weight
+        # slow tenant boosted, but never past 4x its configured weight
+        assert q._weights[slow] > base
+        assert q._weights[slow] <= 4 * base
+        # fast tenant floored at 0.5x (rounds to >= 1)
+        assert q._weights[fastt] >= max(1, round(0.5 * base))
+        # samples were drained: a second tick with no new waits is a no-op
+        assert not q.per_tenant_wait
+        assert scaler._autotune_weights() == 0
+        # autotune off: weights stay wherever they are
+        scaler.policy.autotune_weights = False
+        q.per_tenant_wait.setdefault(slow, []).extend([9.9] * 5)
+        assert scaler._autotune_weights() == 0
+    finally:
+        syncer.stop()
+        ex.shutdown()
+        super_api.close()
+
+
+def test_weight_autotune_does_not_reward_queue_flooder():
+    """A flooding tenant's long waits are self-inflicted (and come with a
+    proportionally large sample count): demand normalization cancels the
+    wait excess, so the flooder gains no weight over a quiet tenant."""
+    ex, super_api, syncer, planes = _rig(tenants=2)
+    scaler = Autoscaler(syncer, ex, policy=_fast_policy(), interval=3600)
+    try:
+        q = syncer.shard_controllers[0].queue
+        flooder, quiet = planes[0].name, planes[1].name
+        base = syncer.tenants[flooder].plane.weight
+        # flooder: 8x the throughput AND 8x the wait (self-inflicted)
+        q.per_tenant_wait.setdefault(flooder, []).extend([0.8] * 80)
+        q.per_tenant_wait.setdefault(quiet, []).extend([0.1] * 10)
+        scaler._autotune_weights()
+        # wait/overall (~1.78x) is cancelled by its count share (~0.56x):
+        # no boost beyond the configured weight
+        assert q._weights[flooder] <= base
+        # and the quiet tenant is not starved below its floor
+        assert q._weights[quiet] >= max(1, round(0.5 * base))
+    finally:
+        syncer.stop()
+        ex.shutdown()
         super_api.close()
 
 

@@ -8,7 +8,6 @@ executes an actual train step on the reduced model — the full VirtualCluster
 import time
 
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.configs import REGISTRY, reduced

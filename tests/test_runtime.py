@@ -4,7 +4,6 @@ partition stability."""
 import threading
 import time
 
-import pytest
 
 from repro.core import (APIServer, Controller, ControllerManager,
                         FairWorkQueue, MetricsRegistry, NotFoundError, Syncer,

@@ -4,7 +4,7 @@ import time
 
 import pytest
 
-from repro.core import (APIServer, IsolationViolation, MeshRouter, Namespace,
+from repro.core import (APIServer, IsolationViolation, MeshRouter,
                         Node, NodeAgent, Service, SuperScheduler, WorkUnit)
 from repro.core.objects import NodeStatus
 

@@ -5,7 +5,7 @@ import time
 
 import pytest
 
-from repro.core import (APIServer, Namespace, ShardRing, Syncer,
+from repro.core import (APIServer, ShardRing, Syncer,
                         TenantControlPlane, WorkUnit, shard_for)
 
 

@@ -1,7 +1,5 @@
 """Sharding planner: strategy selection, divisibility fallbacks, spec
 generation (no devices needed — uses an abstract mesh)."""
-import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import abstract_mesh

@@ -17,6 +17,47 @@ def mk_unit(name, ns="default"):
     return u
 
 
+# ---------------------------------------------------------- update_status_many
+
+def test_update_status_many_applies_mutations_and_reports_missing():
+    s = ObjectStore()
+    for n in ("a", "b"):
+        s.create(mk_unit(n))
+
+    def set_phase(phase):
+        return lambda u: setattr(u.status, "phase", phase)
+
+    rv0 = s.resource_version
+    updated, missing = s.update_status_many([
+        ("WorkUnit", "default", "a", set_phase("Running")),
+        ("WorkUnit", "default", "b", set_phase("Ready")),
+        ("WorkUnit", "default", "ghost", set_phase("Ready")),
+    ])
+    # applied/missing are reported as KEYS (no per-object return copies)
+    assert updated == [("WorkUnit", "default", "a"),
+                       ("WorkUnit", "default", "b")]
+    assert missing == [("WorkUnit", "default", "ghost")]
+    assert s.get("WorkUnit", "default", "a").status.phase == "Running"
+    assert s.get("WorkUnit", "default", "b").status.phase == "Ready"
+    # one version bump per applied update (one lock round, etcd-txn analogue)
+    assert s.resource_version == rv0 + 2
+
+
+def test_update_status_many_emits_watch_events_and_copies():
+    s = ObjectStore()
+    s.create(mk_unit("a"))
+    _, w = s.list_and_watch("WorkUnit")
+    updated, missing = s.update_status_many(
+        [("WorkUnit", "default", "a",
+          lambda u: setattr(u.status, "phase", "Ready"))])
+    assert missing == [] and len(updated) == 1
+    ev = w.next(timeout=1.0)
+    assert ev.type == MODIFIED and ev.object.status.phase == "Ready"
+    # watch events carry copies: mutating them never touches the store
+    ev.object.status.phase = "Hacked"
+    assert s.get("WorkUnit", "default", "a").status.phase == "Ready"
+
+
 # ----------------------------------------------------------------- update_many
 
 def test_update_many_applies_all_and_bumps_versions():

@@ -4,7 +4,7 @@ import time
 
 import pytest
 
-from repro.core import (APIServer, Namespace, NotFoundError, Secret, Service,
+from repro.core import (APIServer, Namespace, Secret, Service,
                         Syncer, TenantControlPlane, WorkUnit, ns_prefix)
 
 

@@ -1,0 +1,127 @@
+"""VnAgent (paper Fig.4 (3)): TLS-credential-hash tenant identification,
+tenant->super namespace translation on logs/exec, rejection of unknown
+credentials — plus the VNodeManager's tenant-visible lifecycle events."""
+import hashlib
+
+import pytest
+
+from repro.core import (APIServer, MockProvider, Node, NodeAgent, NotFoundError,
+                        TenantControlPlane, VNodeManager, VnAgent, ns_prefix)
+
+
+class RecordingProvider(MockProvider):
+    """Captures the super-cluster unit keys the proxy hands the provider."""
+
+    def __init__(self):
+        super().__init__()
+        self.log_keys = []
+        self.exec_keys = []
+
+    def logs(self, unit_key):
+        self.log_keys.append(unit_key)
+        return f"logs for {unit_key}"
+
+    def exec(self, unit_key, cmd):
+        self.exec_keys.append((unit_key, cmd))
+        return f"$ {cmd} @ {unit_key}"
+
+
+@pytest.fixture
+def rig():
+    super_api = APIServer("super")
+    provider = RecordingProvider()
+    agent = NodeAgent(super_api, "node-0", provider=provider,
+                      record_events=False)
+    vn = VnAgent(super_api, {"node-0": agent})
+    plane = TenantControlPlane("acme")
+    prefix = ns_prefix("acme", "uid-1")
+    vn.register_tenant(plane.api.credential, prefix)
+    yield super_api, vn, plane, prefix, provider
+    super_api.close()
+
+
+def test_credential_hash_identifies_tenant(rig):
+    super_api, vn, plane, prefix, provider = rig
+    # the proxy stores only the sha256 hash, never the raw credential —
+    # and it matches the apiserver's own credential_hash identity
+    h = hashlib.sha256(plane.api.credential.encode()).hexdigest()[:16]
+    assert h == plane.api.credential_hash
+    assert vn._tenants == {h: prefix}
+    out = vn.logs(plane.api.credential, "node-0", "default", "job")
+    assert out == f"logs for {prefix}-default/job"
+    assert vn.proxied == 1
+
+
+def test_logs_and_exec_translate_tenant_namespace(rig):
+    """Tenant namespaces are rewritten to the super-cluster prefix before
+    reaching the kubelet provider (tenants never see super namespaces)."""
+    super_api, vn, plane, prefix, provider = rig
+    vn.logs(plane.api.credential, "node-0", "ns-a", "u1")
+    vn.exec(plane.api.credential, "node-0", "ns-b", "u2", "nvidia-smi")
+    assert provider.log_keys == [f"{prefix}-ns-a/u1"]
+    assert provider.exec_keys == [(f"{prefix}-ns-b/u2", "nvidia-smi")]
+    assert vn.proxied == 2
+
+
+def test_unknown_credential_rejected(rig):
+    super_api, vn, plane, prefix, provider = rig
+    stranger = TenantControlPlane("mallory")
+    with pytest.raises(PermissionError):
+        vn.logs(stranger.api.credential, "node-0", "default", "job")
+    with pytest.raises(PermissionError):
+        vn.exec(stranger.api.credential, "node-0", "default", "job", "id")
+    # nothing reached the provider, nothing was counted
+    assert provider.log_keys == [] and provider.exec_keys == []
+    assert vn.proxied == 0
+    stranger.close()
+
+
+def test_two_tenants_resolve_to_their_own_prefixes(rig):
+    super_api, vn, plane, prefix, provider = rig
+    other = TenantControlPlane("globex")
+    other_prefix = ns_prefix("globex", "uid-2")
+    vn.register_tenant(other.api.credential, other_prefix)
+    vn.logs(plane.api.credential, "node-0", "default", "job")
+    vn.logs(other.api.credential, "node-0", "default", "job")
+    assert provider.log_keys == [f"{prefix}-default/job",
+                                 f"{other_prefix}-default/job"]
+    other.close()
+
+
+def test_unknown_node_raises_not_found(rig):
+    super_api, vn, plane, prefix, provider = rig
+    with pytest.raises(NotFoundError):
+        vn.logs(plane.api.credential, "node-404", "default", "job")
+
+
+# --------------------------------------------- vNode lifecycle events (vnode.py)
+
+def test_vnode_bind_and_gc_record_tenant_visible_events():
+    plane = TenantControlPlane("acme")
+    vm = VNodeManager()
+    node = Node()
+    node.metadata.name = "node-0"
+    vm.bind(plane, node, "default", "job")
+    events = plane.api.list("Event")
+    assert any(e.reason == "VNodeBound" and e.involved_name == "node-0"
+               for e in events)
+    # re-binding the same vNode is not a fresh appearance: count stays 1
+    vm.bind(plane, node, "default", "job2")
+    bound = [e for e in plane.api.list("Event") if e.reason == "VNodeBound"]
+    assert len(bound) == 1 and bound[0].count == 1
+    vm.unbind(plane, "default", "job")
+    vm.unbind(plane, "default", "job2")     # last binding gone -> GC + event
+    events = plane.api.list("Event")
+    assert any(e.reason == "VNodeGC" for e in events)
+    assert plane.api.list("VirtualNode") == []
+    plane.close()
+
+
+def test_vnode_events_can_be_disabled():
+    plane = TenantControlPlane("acme")
+    vm = VNodeManager(record_events=False)
+    node = Node()
+    node.metadata.name = "node-0"
+    vm.bind(plane, node, "default", "job")
+    assert plane.api.list("Event") == []
+    plane.close()

@@ -61,7 +61,6 @@ def test_rate_limiter_backoff_and_forget():
 
 
 def test_delaying_queue():
-    import time
     q = DelayingQueue()
     q.add_after("x", 0.05)
     assert q.get(timeout=0.01) is None
