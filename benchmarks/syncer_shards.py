@@ -11,6 +11,19 @@ Measures downward-sync throughput of a standalone Syncer at shard counts
 - ``churn``   — a create/update/delete mix per tenant against a pre-synced
   population (exercises all three batched write paths at once).
 
+A store-axis scenario covers the READ path (ObjectStore v2):
+
+- ``scale_wall`` — one super store populated with O(100k) WorkUnits across
+  a 512–1024-tenant (namespace) sweep. Per tenant count it measures: cold
+  informer start (paged zero-copy LIST) vs the pre-v2 full-copy-under-lock
+  LIST; writer throughput while a concurrent cold LIST runs (snapshot
+  reads must not block writers) vs a no-LIST baseline and vs the legacy
+  lock-holding LIST; and an induced watch-channel overflow (slow consumer,
+  small buffer) that must recover by RESUMING from the backlog ring with
+  zero events lost or duplicated. Per-phase deepcopy counts and RSS are
+  recorded; ``--smoke`` gates cold speedup >= 2x, writer ratio >= 0.8,
+  zero event loss, and sub-linear memory growth across the tenant sweep.
+
 Two executor-only scenarios cover the UPWARD axis:
 
 - ``status_storm`` — pre-synced units, then every tenant's super copies
@@ -54,8 +67,9 @@ import time
 from typing import Callable, Dict, List, Optional
 
 from repro.core import (APIServer, Autoscaler, CooperativeExecutor,
-                        EventRecorder, Namespace, ScalingPolicy, Syncer,
-                        TenantControlPlane, WorkUnit)
+                        EventRecorder, Informer, InformerCache, Namespace,
+                        ScalingPolicy, Syncer, TenantControlPlane, WorkUnit)
+from repro.core.objects import deepcopy_count, deepcopy_obj
 
 OUT_PATH = "BENCH_syncer_shards.json"
 UPDATED_CHIPS = 123        # spec marker the update/churn waits look for
@@ -71,6 +85,31 @@ def _git_sha() -> str:
         ).stdout.strip() or "unknown"
     except Exception:
         return "unknown"
+
+
+def _rss_kb() -> int:
+    """Current resident set size in KiB (VmRSS; ru_maxrss fallback)."""
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmRSS:"):
+                    return int(line.split()[1])
+    except OSError:
+        pass
+    try:
+        import resource
+        return int(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss)
+    except Exception:
+        return 0
+
+
+def _peak_rss_kb() -> int:
+    """Process-lifetime peak RSS in KiB (ru_maxrss on Linux)."""
+    try:
+        import resource
+        return int(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss)
+    except Exception:
+        return 0
 
 
 def _mk_unit(name: str) -> WorkUnit:
@@ -177,6 +216,7 @@ def _run_create(shards, batch, tenants, per_tenant, downward_workers=20,
         total = tenants * per_tenant
         gc.collect()
         gc.disable()
+        dc0 = deepcopy_count()
         t0 = time.monotonic()
 
         def submit(plane):
@@ -193,6 +233,7 @@ def _run_create(shards, batch, tenants, per_tenant, downward_workers=20,
             "ops": total, "downward_workers": downward_workers,
             "submit_s": submit_s, "elapsed_s": elapsed,
             "throughput_per_s": total / elapsed if elapsed else 0.0,
+            "deepcopies": deepcopy_count() - dc0, "rss_kb": _rss_kb(),
         })
     finally:
         gc.enable()
@@ -213,6 +254,7 @@ def _run_update(shards, batch, tenants, per_tenant, downward_workers=20,
         _wait(lambda: super_api.store.count("WorkUnit") >= total)
         time.sleep(0.1)   # let super informer caches settle on the creates
         batch_base = _reset_phase_stats(syncer)
+        dc0 = deepcopy_count()
         t0 = time.monotonic()
 
         def submit(plane):
@@ -232,6 +274,7 @@ def _run_update(shards, batch, tenants, per_tenant, downward_workers=20,
             "ops": total, "downward_workers": downward_workers,
             "submit_s": submit_s, "elapsed_s": elapsed,
             "throughput_per_s": total / elapsed if elapsed else 0.0,
+            "deepcopies": deepcopy_count() - dc0, "rss_kb": _rss_kb(),
         }, batch_base)
     finally:
         gc.enable()
@@ -255,6 +298,7 @@ def _run_churn(shards, batch, tenants, per_tenant, downward_workers=20,
         _wait(lambda: super_api.store.count("WorkUnit") >= base)
         time.sleep(0.1)
         batch_base = _reset_phase_stats(syncer)
+        dc0 = deepcopy_count()
         t0 = time.monotonic()
 
         def submit(plane):
@@ -283,6 +327,7 @@ def _run_churn(shards, batch, tenants, per_tenant, downward_workers=20,
             "ops": ops, "downward_workers": downward_workers,
             "submit_s": submit_s, "elapsed_s": elapsed,
             "throughput_per_s": ops / elapsed if elapsed else 0.0,
+            "deepcopies": deepcopy_count() - dc0, "rss_kb": _rss_kb(),
         }, batch_base)
     finally:
         gc.enable()
@@ -387,6 +432,7 @@ def _run_status_storm(upward_shards, batch_upward, tenants, per_tenant,
 
         gc.collect()
         gc.disable()
+        dc0 = deepcopy_count()
         # -- timed: cold start -> replay floods the queues -> drain --------
         t0 = time.monotonic()
         syncer.start()
@@ -401,6 +447,7 @@ def _run_status_storm(upward_shards, batch_upward, tenants, per_tenant,
             "ops": ops, "upward_workers": upward_workers,
             "elapsed_s": elapsed,
             "throughput_per_s": ops / elapsed if elapsed else 0.0,
+            "deepcopies": deepcopy_count() - dc0, "rss_kb": _rss_kb(),
             "coalesced_keys": coalesced,
             "upward_syncs": syncer.metrics.upward_syncs,
             "name": (f"syncer_shards/executor/status_storm/"
@@ -593,6 +640,279 @@ def _run_autoscale(tenants: int, per_tenant: int, waves: int = 3,
         super_api.close()
 
 
+def _legacy_cold_list(store, kind: str) -> List:
+    """The seed's cold LIST: deepcopy every object of the kind while HOLDING
+    the store write lock (what ``ObjectStore.list`` did before the snapshot
+    read path). Kept as the benchmark contrast for ``scale_wall``."""
+    with store._lock:
+        return [deepcopy_obj(o) for (k, _, _), o in store._objects.items()
+                if k == kind]
+
+
+def _cache_from(objs: List) -> InformerCache:
+    """Build an informer cache from a list snapshot (the consumer-side half
+    of a cold sync, identical for both LIST variants)."""
+    cache = InformerCache()
+    for o in objs:
+        cache._apply("ADDED", o)
+    return cache
+
+
+def _paged_reader(api: APIServer) -> Callable[[], None]:
+    """Exactly three back-to-back v2 cold syncs (paged zero-copy LIST +
+    cache build). A fixed count, not a loop-until-stopped: under the GIL a
+    free-running reader thread would claim ~half the interpreter regardless
+    of locking, and the writer ratio would measure CPU sharing, not lock
+    contention. Three syncs bound the reader's CPU share; the writer phase
+    is sized to outlast them."""
+    def go() -> None:
+        for _ in range(3):
+            objs, _rv = api.list_all_pages("WorkUnit", copy=False)
+            _cache_from(objs)
+    return go
+
+
+def _legacy_reader(store) -> Callable[[], None]:
+    """Three cold syncs via the pre-v2 deepcopy-under-lock LIST."""
+    def go() -> None:
+        for _ in range(3):
+            _cache_from(_legacy_cold_list(store, "WorkUnit"))
+    return go
+
+
+def _writer_phase(api, keys: List, ops: int,
+                  reader: Optional[Callable[[], None]] = None,
+                  batch: int = 256) -> float:
+    """Time ``ops`` status writes (``update_status_batch`` chunks), with an
+    optional concurrent reader thread. Returns the writer's elapsed time."""
+    th = None
+    if reader is not None:
+        th = threading.Thread(target=reader)
+    nkeys = len(keys)
+    t0 = time.monotonic()
+    if th is not None:
+        th.start()
+    i = 0
+    while i < ops:
+        chunk = []
+        for j in range(min(batch, ops - i)):
+            kind, ns, name = keys[(i + j) % nkeys]
+            chunk.append((kind, ns, name,
+                          lambda u: setattr(u.status, "phase", "Ready")))
+        api.update_status_batch(chunk)
+        i += len(chunk)
+    elapsed = time.monotonic() - t0
+    if th is not None:
+        th.join()
+    return elapsed
+
+
+def _overflow_phase(super_api: APIServer, keys: List,
+                    writes: int = 4096, watch_buffer: int = 256) -> Dict:
+    """Induce a watch-channel overflow under a slow consumer and prove the
+    informer recovers by RESUMING from the store's backlog ring — zero
+    events lost, zero duplicated, no relist. Exactly-once accounting keys
+    on (type, namespace, name, object_rv) triples above the pre-storm rv
+    (DELETED events carry the object's final rv, so raw rvs would
+    double-count; there are no deletes here but the discipline is kept)."""
+    store = super_api.store
+    rv0 = store.resource_version
+    seen: set = set()
+    dups = [0]
+    slow = threading.Event()
+    slow.set()
+
+    def handler(ev_type: str, obj) -> None:
+        rv = obj.metadata.resource_version
+        if rv <= rv0:
+            return                    # initial-sync replay, not the storm
+        trip = (ev_type, obj.metadata.namespace, obj.metadata.name, rv)
+        if trip in seen:
+            dups[0] += 1
+        seen.add(trip)
+        if slow.is_set():
+            time.sleep(0.0005)        # slow consumer: forces the overflow
+
+    inf = Informer(super_api.client("overflow-informer"), "WorkUnit",
+                   name="overflow", watch_buffer=watch_buffer)
+    inf.add_handler(handler)
+    inf.start()
+    assert inf.wait_for_cache_sync(timeout=600.0)
+    relist0, resume0 = inf.relist_count, inf.resume_count
+    writer = super_api.client("overflow-writer")
+    nkeys = len(keys)
+    t0 = time.monotonic()
+    i = 0
+    while i < writes:
+        chunk = []
+        for j in range(min(256, writes - i)):
+            kind, ns, name = keys[(i + j) % nkeys]
+            chunk.append((kind, ns, name,
+                          lambda u: setattr(u.status, "phase", "Storm")))
+        writer.update_status_batch(chunk)
+        i += len(chunk)
+    slow.clear()                      # storm submitted: let the drain race
+    target = store.resource_version
+    _wait(lambda: inf.last_seen_rv >= target, timeout=600.0)
+    try:
+        # last_seen_rv advances just before dispatch; give the final
+        # handler calls a bounded beat. A genuine loss times out here and
+        # is REPORTED (and smoke-gated) below rather than hanging the run.
+        _wait(lambda: len(seen) >= writes, timeout=5.0)
+    except TimeoutError:
+        pass
+    elapsed = time.monotonic() - t0
+    inf.stop()
+    return {
+        "writes": writes, "watch_buffer": watch_buffer,
+        "events_seen": len(seen),
+        "events_lost": max(0, writes - len(seen)),
+        "events_duplicated": dups[0],
+        "resumes": inf.resume_count - resume0,
+        "relists": inf.relist_count - relist0,
+        "elapsed_s": elapsed,
+    }
+
+
+def _run_scale_wall(tenants: int, total_objects: int, repeats: int = 3,
+                    write_ops: int = 8192) -> Dict:
+    """One store-axis scale point: a single super store holding
+    ``total_objects`` WorkUnits across ``tenants`` namespaces.
+
+    Interleaved per repeat: (a) cold informer start on the v2 path (paged
+    ``copy=False`` LIST — zero deepcopies) vs the seed's deepcopy-under-
+    lock LIST; (b) writer throughput alone vs with a concurrent cold
+    reader on each LIST variant (snapshot reads must cost the writer <20%;
+    the legacy contrast shows the lock convoy). Then one overflow-recovery
+    phase (:func:`_overflow_phase`). The API server gets an effectively
+    unlimited token bucket so the phases measure the store, not the rate
+    limiter."""
+    super_api = APIServer("superstore", qps=5e6, burst=5_000_000)
+    try:
+        per = max(1, total_objects // tenants)
+        gc.collect()
+        t0 = time.monotonic()
+        keys: List = []
+        batch: List[WorkUnit] = []
+        for t in range(tenants):
+            ns = f"t{t:04d}"
+            for j in range(per):
+                name = f"u{j:05d}"
+                u = WorkUnit()
+                u.metadata.name = name
+                u.metadata.namespace = ns
+                batch.append(u)
+                keys.append(("WorkUnit", ns, name))
+                if len(batch) >= 4096:
+                    super_api.create_batch(batch)
+                    batch = []
+        if batch:
+            super_api.create_batch(batch)
+        populate_s = time.monotonic() - t0
+        gc.collect()
+        rss_populate = _rss_kb()
+        store = super_api.store
+        writer = super_api.client("writer")
+        reader_api = super_api.client("reader")
+        cold_v2: List[float] = []
+        cold_legacy: List[float] = []
+        dc_v2: List[int] = []
+        dc_legacy: List[int] = []
+        w_base: List[float] = []
+        w_paged: List[float] = []
+        w_legacy: List[float] = []
+        gc.disable()
+        try:
+            for _ in range(repeats):      # interleaved: drift dilutes evenly
+                d0 = deepcopy_count()
+                t0 = time.monotonic()
+                inf = Informer(super_api.client("cold-informer"), "WorkUnit",
+                               name="cold")
+                inf.start()
+                assert inf.wait_for_cache_sync(timeout=600.0)
+                cold_v2.append(time.monotonic() - t0)
+                dc_v2.append(deepcopy_count() - d0)
+                n_synced = len(inf.cache)
+                inf.stop()
+                assert n_synced >= len(keys)
+                d0 = deepcopy_count()
+                t0 = time.monotonic()
+                _cache_from(_legacy_cold_list(store, "WorkUnit"))
+                cold_legacy.append(time.monotonic() - t0)
+                dc_legacy.append(deepcopy_count() - d0)
+                gc.collect()              # drop the legacy copies now
+                w_base.append(_writer_phase(writer, keys, write_ops))
+                w_paged.append(_writer_phase(
+                    writer, keys, write_ops, reader=_paged_reader(reader_api)))
+                w_legacy.append(_writer_phase(
+                    writer, keys, write_ops, reader=_legacy_reader(store)))
+        finally:
+            gc.enable()
+        overflow = _overflow_phase(super_api, keys)
+        med = statistics.median
+        return {
+            "name": f"syncer_shards/store/scale_wall/t{tenants}",
+            "scenario": "scale_wall",
+            "tenants": tenants, "objects": len(keys),
+            "repeats": repeats, "write_ops": write_ops,
+            "populate_s": populate_s,
+            "rss_after_populate_kb": rss_populate,
+            "cold_v2_median_s": med(cold_v2),
+            "cold_legacy_median_s": med(cold_legacy),
+            "cold_speedup_median": med(cold_legacy) / max(1e-9, med(cold_v2)),
+            "cold_v2_deepcopies": int(med(dc_v2)),
+            "cold_legacy_deepcopies": int(med(dc_legacy)),
+            "writer_base_median_s": med(w_base),
+            "writer_with_paged_list_median_s": med(w_paged),
+            "writer_with_legacy_list_median_s": med(w_legacy),
+            "writer_ratio_paged": med(w_base) / max(1e-9, med(w_paged)),
+            "writer_ratio_legacy": med(w_base) / max(1e-9, med(w_legacy)),
+            "overflow": overflow,
+        }
+    finally:
+        super_api.close()
+
+
+def _run_scale_wall_sweep(smoke: bool, full: bool) -> Dict:
+    """Tenant sweep at FIXED total object count: per-object cost must not
+    scale with tenant count, so RSS after populate across the sweep gates
+    sub-linear memory growth (the per-tenant-copy failure mode)."""
+    # write_ops = 2x the object count: the writer phase must outlast the
+    # reader's three fixed cold syncs by enough that GIL time-sharing with
+    # the reader thread (unavoidable for any in-process reader, locked or
+    # not) stays a minor term and the ratio measures lock blocking
+    if smoke:
+        tenant_sweep, total = [128, 256], 16_384
+    elif full:
+        tenant_sweep, total = [512, 1024], 102_400
+    else:
+        tenant_sweep, total = [256, 512], 51_200
+    write_ops = 2 * total
+    points = [_run_scale_wall(t, total, repeats=3, write_ops=write_ops)
+              for t in tenant_sweep]
+    rss = [p["rss_after_populate_kb"] for p in points]
+    growth = rss[-1] / max(1.0, rss[0])
+    for p in points:
+        print(f"  [store] scale_wall t={p['tenants']} "
+              f"({p['objects']} objs): cold v2 "
+              f"{p['cold_v2_median_s'] * 1e3:.0f}ms vs legacy "
+              f"{p['cold_legacy_median_s'] * 1e3:.0f}ms "
+              f"({p['cold_speedup_median']:.2f}x, "
+              f"{p['cold_v2_deepcopies']} vs "
+              f"{p['cold_legacy_deepcopies']} deepcopies), writer ratio "
+              f"paged {p['writer_ratio_paged']:.2f} (legacy "
+              f"{p['writer_ratio_legacy']:.2f}), overflow "
+              f"lost={p['overflow']['events_lost']} "
+              f"dup={p['overflow']['events_duplicated']} "
+              f"resumes={p['overflow']['resumes']} "
+              f"relists={p['overflow']['relists']}", flush=True)
+    print(f"  [store] scale_wall rss growth across tenant sweep: "
+          f"{growth:.2f}x", flush=True)
+    return {"tenant_sweep": tenant_sweep, "total_objects": total,
+            "write_ops": write_ops, "points": points,
+            "rss_growth_factor": growth}
+
+
 def _append_history(out_path: str, record: Dict, latest_key: str) -> None:
     """Append one run record to a tracked history file (never overwrite);
     shared by every bench that keeps an append-only series.
@@ -753,6 +1073,34 @@ def run(full: bool = False, smoke: bool = False,
             assert (arec["final_shards"] == 1 and arec["final_upward"] == 1
                     and arec["final_pool"] == 2), \
                 "fleet did not shrink back after idle cooldown"
+    # store read-path axis: the ObjectStore v2 scale wall (mode-independent)
+    wall = _run_scale_wall_sweep(smoke, full)
+    record["scale_wall"] = wall
+    all_recs.extend(wall["points"])
+    if smoke:
+        # CI gates for the v2 read path
+        for p in wall["points"]:
+            t = p["tenants"]
+            assert p["cold_speedup_median"] >= 2.0, (
+                f"t={t}: cold informer only "
+                f"{p['cold_speedup_median']:.2f}x vs legacy LIST (< 2x)")
+            assert p["writer_ratio_paged"] >= 0.8, (
+                f"t={t}: concurrent cold LIST cost the writer "
+                f"{(1 - p['writer_ratio_paged']) * 100:.0f}% (> 20%)")
+            o = p["overflow"]
+            assert o["events_lost"] == 0, (
+                f"t={t}: overflow recovery lost {o['events_lost']} events")
+            assert o["events_duplicated"] == 0, (
+                f"t={t}: overflow recovery duplicated "
+                f"{o['events_duplicated']} events")
+            assert o["resumes"] >= 1 and o["relists"] == 0, (
+                f"t={t}: overflow recovered by relist, not resume "
+                f"(resumes={o['resumes']}, relists={o['relists']})")
+        assert wall["rss_growth_factor"] < 1.75, (
+            f"memory grew {wall['rss_growth_factor']:.2f}x across the "
+            f"tenant sweep at fixed object count (super-linear in tenants)")
+    record["peak_rss_kb"] = _peak_rss_kb()
+    record["deepcopies_total"] = deepcopy_count()
     _append_history(out_path, record,
                     "latest_smoke" if smoke else "latest")
     print(f"  appended run record to {out_path}", flush=True)

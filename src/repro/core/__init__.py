@@ -14,8 +14,9 @@ from .router import IsolationViolation, MeshRouter
 from .runtime import (Controller, ControllerManager, MetricsRegistry,
                       RetryLater)
 from .scheduler import SuperScheduler
-from .store import (ADDED, DELETED, MODIFIED, AlreadyExistsError,
-                    ConflictError, NotFoundError, ObjectStore)
+from .store import (ADDED, BOOKMARK, DELETED, MODIFIED, AlreadyExistsError,
+                    ConflictError, ContinueToken, NotFoundError, ObjectStore,
+                    ResourceVersionExpired)
 from .syncer import Syncer, ns_prefix
 from .tenant_operator import TenantOperator
 from .upward import EventRecorder, UpwardPipeline, UpwardShard
@@ -35,6 +36,7 @@ __all__ = [
     "IsolationViolation", "NodeAgent", "VnAgent", "Provider", "MockProvider",
     "CallableProvider", "WorkUnit", "WorkUnitSpec", "Service", "Secret",
     "ConfigMap", "Namespace", "Node", "VirtualNode", "VirtualClusterCR",
-    "Event", "KINDS", "ADDED", "MODIFIED", "DELETED", "ConflictError",
-    "AlreadyExistsError", "NotFoundError",
+    "Event", "KINDS", "ADDED", "MODIFIED", "DELETED", "BOOKMARK",
+    "ConflictError", "AlreadyExistsError", "NotFoundError",
+    "ContinueToken", "ResourceVersionExpired",
 ]

@@ -304,7 +304,8 @@ class VirtualClusterFramework:
         t0 = time.monotonic()
         deadline = t0 + timeout
         while time.monotonic() < deadline:
-            units = plane.api.list("WorkUnit", namespace)
+            # read-only poll: shared refs, no deepcopy of the whole namespace
+            units = plane.api.list("WorkUnit", namespace, copy=False)
             ready = sum(1 for u in units if u.status.phase == "Ready")
             if ready >= count:
                 return time.monotonic() - t0

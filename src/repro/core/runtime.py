@@ -275,6 +275,26 @@ class Controller:
         for inf in informers:
             inf.wait_for_cache_sync()
         self.on_start()
+        # aggregate informer accounting (cache memory budget, evict/resync,
+        # relist-vs-resume) — one gauge set per controller, not per informer,
+        # so a 1k-tenant fleet doesn't register 25k gauges
+        def _inf_sum(attr_of: Callable[[Informer], float]) -> Callable[[], float]:
+            return lambda: sum(attr_of(i) for i in tuple(self._informers))
+        self.metrics.register_gauge(
+            "informer_cache_nbytes",
+            _inf_sum(lambda i: i.cache.nbytes_estimate()), controller=self.name)
+        self.metrics.register_gauge(
+            "informer_cache_evictions",
+            _inf_sum(lambda i: i.cache.evict_count), controller=self.name)
+        self.metrics.register_gauge(
+            "informer_cache_resyncs",
+            _inf_sum(lambda i: i.cache.resync_count), controller=self.name)
+        self.metrics.register_gauge(
+            "informer_relists",
+            _inf_sum(lambda i: i.relist_count), controller=self.name)
+        self.metrics.register_gauge(
+            "informer_resumes",
+            _inf_sum(lambda i: i.resume_count), controller=self.name)
         if self.queue is not None:
             reopen = getattr(self.queue, "reopen", None)
             if reopen is not None:

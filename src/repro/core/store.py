@@ -1,21 +1,62 @@
-"""Versioned, watchable object store — the etcd analogue.
+"""Versioned, watchable object store — the etcd analogue (v2).
 
 Semantics modelled on etcd + the k8s apiserver storage layer:
 - a single monotonically increasing resourceVersion counter per store;
 - optimistic concurrency: update() with a stale resourceVersion conflicts;
 - watches deliver ADDED/MODIFIED/DELETED events in version order;
 - reads return copies (mutating a returned object never mutates the store).
+
+v2 rebuilds the READ path for the O(1k)-tenant / O(100k)-object regime:
+
+- **Per-kind indexes.** Objects are indexed by kind and by (kind,
+  namespace), so ``list``/``count`` touch only the requested kind instead
+  of scanning every object in the store. ``count`` is O(1) (a dict ``len``).
+- **Copy-on-write snapshot LIST.** Stored objects are never mutated in
+  place — every write installs a fresh copy — so a LIST only needs the
+  write lock long enough to grab an immutable per-(kind, ns) snapshot
+  tuple (pointer copies, cached until the next write to that kind).
+  The public API still returns deepcopies, but they are made OUTSIDE the
+  lock; trusted in-process consumers (reflectors, the anti-entropy scan)
+  pass ``copy=False`` and get the shared refs with a read-only contract —
+  exactly client-go's informer-cache discipline.
+- **Paged LIST.** ``list_page(kind, ns, limit=, continue_token=)`` returns
+  ``(page, continue_token, rv)`` k8s-style. The continue token pins the
+  snapshot the first page was served from, so pagination is perfectly
+  consistent at one resourceVersion and costs no server-side retention
+  bookkeeping — dropping the token releases the snapshot.
+- **Resumable watches.** Every event is appended to a bounded per-kind
+  backlog ring; ``watch(kind, from_rv=...)`` replays the ring from a known
+  resourceVersion instead of forcing a cold relist, raising
+  :class:`ResourceVersionExpired` (the 410 Gone analogue) only when the
+  ring has evicted events past ``from_rv``. Periodic BOOKMARK events
+  (amortized: every ``bookmark_every`` writes) advance idle watchers'
+  resume points so a quiet informer's rv does not fall out of the ring.
+- **Indexed watch fan-out.** Watch registration is keyed by
+  ``(kind, namespace)``; a write notifies only the matching watchers
+  instead of linearly scanning every watch in the store, and dead watches
+  unregister themselves from the index on close/overflow.
+- **Zero-copy events (opt-in).** Stored objects are immutable-in-place,
+  so a ``watch(..., copy=False)`` stream carries the stored object itself
+  — a write costs ZERO deepcopies no matter how many such watchers exist.
+  Default watches keep the v1 contract (events carry copies, one lazy
+  shared copy per write); the backlog ring always holds raw refs, so an
+  unwatched write never copies at all.
 """
 from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from collections import deque
+from dataclasses import dataclass, field
+from typing import (Any, Callable, Deque, Dict, List, Optional, Tuple)
 
 from .objects import deepcopy_obj, new_uid, obj_key
 
 ADDED, MODIFIED, DELETED = "ADDED", "MODIFIED", "DELETED"
+# rv checkpoint for idle watchers; carries no object (k8s bookmark analogue)
+BOOKMARK = "BOOKMARK"
+
+Key = Tuple[str, str, str]             # (kind, namespace, name)
 
 
 class ConflictError(Exception):
@@ -30,11 +71,26 @@ class NotFoundError(Exception):
     pass
 
 
+class ResourceVersionExpired(Exception):
+    """The backlog ring no longer covers ``from_rv`` (410 Gone analogue):
+    the client must fall back to a full relist."""
+
+
 @dataclass
 class WatchEvent:
-    type: str              # ADDED | MODIFIED | DELETED
-    object: Any
+    type: str              # ADDED | MODIFIED | DELETED | BOOKMARK
+    object: Any            # None for BOOKMARK; READ-ONLY shared ref otherwise
     resource_version: int
+
+
+@dataclass
+class ContinueToken:
+    """Opaque pagination cursor: pins the snapshot the first page was served
+    from, so every page of one LIST is consistent at ``rv``. Dropping the
+    token releases the snapshot — no server-side retention to expire."""
+    rv: int
+    _snap: Tuple[Any, ...] = field(repr=False)
+    _pos: int = 0
 
 
 class _Watch:
@@ -43,33 +99,51 @@ class _Watch:
     Two consumption modes: the blocking :meth:`next` (reflector threads) and
     the non-blocking :meth:`poll` + :meth:`set_waker` pair (cooperative
     informer pumps — the waker fires on every push and on close, so an idle
-    pump parks no thread)."""
+    pump parks no thread). Event objects are shared with the store and every
+    other watcher: READ-ONLY by contract."""
 
-    def __init__(self, kind: str, namespace: Optional[str], maxlen: int = 100_000):
+    def __init__(self, kind: str, namespace: Optional[str],
+                 maxlen: int = 100_000,
+                 unregister: Optional[Callable[["_Watch"], None]] = None,
+                 copy_events: bool = True):
         self.kind = kind
         self.namespace = namespace
-        self._events: List[WatchEvent] = []
+        # True: events carry deepcopies (safe to mutate). False: events
+        # share the stored object — READ-ONLY contract, zero copy cost.
+        self.copy_events = copy_events
+        self._events: Deque[WatchEvent] = deque()
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
         self._closed = False
+        self._overflowed = False
         self._maxlen = maxlen
         self._waker: Optional[Callable[[], None]] = None
-        self.overflowed = False
+        self._unregister = unregister
+        # rv of the newest event pushed (bookmarks included); read by the
+        # store's bookmark sweep to skip watchers that are already current
+        self.last_pushed_rv = 0
 
-    def _push(self, ev: WatchEvent) -> None:
+    def _push(self, ev: WatchEvent) -> bool:
+        """Append one event; returns False once the stream is closed or just
+        overflowed (the store drops dead watches from its index on False)."""
         with self._cv:
             if self._closed:
-                return
+                return False
             if len(self._events) >= self._maxlen:
-                # etcd watch-channel overflow: client must relist.
-                self.overflowed = True
+                # etcd watch-channel overflow: the client must resume from
+                # its last seen rv (backlog ring) or relist.
+                self._overflowed = True
                 self._closed = True
             else:
                 self._events.append(ev)
+                self.last_pushed_rv = max(self.last_pushed_rv,
+                                          ev.resource_version)
             self._cv.notify_all()
             waker = self._waker
+            accepted = not self._closed
         if waker is not None:
             waker()
+        return accepted
 
     def next(self, timeout: Optional[float] = None) -> Optional[WatchEvent]:
         deadline = None if timeout is None else time.monotonic() + timeout
@@ -83,7 +157,7 @@ class _Watch:
                     return None  # timed out
                 self._cv.wait(remaining)
             if self._events:
-                return self._events.pop(0)
+                return self._events.popleft()
             return None  # closed
 
     def poll(self) -> Optional[WatchEvent]:
@@ -91,7 +165,7 @@ class _Watch:
         :attr:`closed` to tell "idle" from "stream over")."""
         with self._cv:
             if self._events:
-                return self._events.pop(0)
+                return self._events.popleft()
             return None
 
     def set_waker(self, waker: Optional[Callable[[], None]]) -> None:
@@ -106,26 +180,86 @@ class _Watch:
 
     def close(self) -> None:
         with self._cv:
+            already = self._closed
             self._closed = True
             self._cv.notify_all()
             waker = self._waker
+        # outside the watch lock: unregister takes the store lock, and the
+        # store's notify path holds its lock while taking ours — same-order
+        # acquisition here would deadlock
+        if not already and self._unregister is not None:
+            self._unregister(self)
         if waker is not None:
             waker()
 
     @property
     def closed(self) -> bool:
-        return self._closed and not self._events
+        with self._cv:
+            return self._closed and not self._events
+
+    @property
+    def overflowed(self) -> bool:
+        with self._cv:
+            return self._overflowed
 
 
 class ObjectStore:
-    """Thread-safe versioned store for API objects."""
+    """Thread-safe versioned store for API objects.
 
-    def __init__(self, name: str = "store"):
+    ``backlog`` bounds the per-kind resumable-watch event ring;
+    ``bookmark_every`` is the write-count interval of the amortized
+    BOOKMARK sweep that keeps idle watchers' resume points fresh."""
+
+    def __init__(self, name: str = "store", *, backlog: int = 8192,
+                 bookmark_every: int = 256):
         self.name = name
         self._lock = threading.RLock()
-        self._objects: Dict[Tuple[str, str, str], Any] = {}
+        self._objects: Dict[Key, Any] = {}
         self._rv = 0
-        self._watches: List[_Watch] = []
+        # per-kind and per-(kind, namespace) indexes: list/count/page touch
+        # only the requested slice of the keyspace
+        self._by_kind: Dict[str, Dict[Key, Any]] = {}
+        self._by_kind_ns: Dict[Tuple[str, str], Dict[Key, Any]] = {}
+        # immutable snapshot tuples, cached per (kind, ns-or-None) until the
+        # next write to that kind invalidates them
+        self._snapshots: Dict[Tuple[str, Optional[str]],
+                              Tuple[int, Tuple[Any, ...]]] = {}
+        # watch index: (kind, ns-or-None) -> watchers; writes touch only
+        # the two matching buckets instead of every watch in the store
+        self._watches: Dict[Tuple[str, Optional[str]], List[_Watch]] = {}
+        # resumable-watch backlog: per-kind ring of recent events plus the
+        # highest rv ever evicted from it (the resume-coverage boundary)
+        self._backlog_maxlen = max(1, int(backlog))
+        self._backlog: Dict[str, Deque[WatchEvent]] = {}
+        self._evicted_rv: Dict[str, int] = {}
+        self._bookmark_every = max(1, int(bookmark_every))
+        self._writes_since_bookmark = 0
+        self.bookmarks_sent = 0
+
+    # -- index maintenance (call under lock) --------------------------------
+
+    def _index_put(self, key: Key, obj: Any) -> None:
+        kind, ns, _ = key
+        self._objects[key] = obj
+        self._by_kind.setdefault(kind, {})[key] = obj
+        self._by_kind_ns.setdefault((kind, ns), {})[key] = obj
+
+    def _index_pop(self, key: Key) -> Optional[Any]:
+        obj = self._objects.pop(key, None)
+        if obj is None:
+            return None
+        kind, ns, _ = key
+        bucket = self._by_kind.get(kind)
+        if bucket is not None:
+            bucket.pop(key, None)
+            if not bucket:
+                del self._by_kind[kind]
+        nsbucket = self._by_kind_ns.get((kind, ns))
+        if nsbucket is not None:
+            nsbucket.pop(key, None)
+            if not nsbucket:
+                del self._by_kind_ns[(kind, ns)]
+        return obj
 
     # -- CRUD ---------------------------------------------------------------
 
@@ -140,7 +274,7 @@ class ObjectStore:
             stored.metadata.resource_version = self._rv
             stored.metadata.creation_timestamp = (
                 stored.metadata.creation_timestamp or time.time())
-            self._objects[key] = stored
+            self._index_put(key, stored)
             self._notify_stored(ADDED, stored, self._rv)
             return deepcopy_obj(stored)
 
@@ -165,7 +299,7 @@ class ObjectStore:
                 stored.metadata.resource_version = self._rv
                 stored.metadata.creation_timestamp = (
                     stored.metadata.creation_timestamp or time.time())
-                self._objects[key] = stored
+                self._index_put(key, stored)
                 self._notify_stored(ADDED, stored, self._rv)
                 created.append(deepcopy_obj(stored))
         return created, conflicted
@@ -175,7 +309,8 @@ class ObjectStore:
             obj = self._objects.get((kind, namespace, name))
             if obj is None:
                 raise NotFoundError(f"{kind} {namespace}/{name} not found")
-            return deepcopy_obj(obj)
+        # stored objects are immutable in place: copy OUTSIDE the lock
+        return deepcopy_obj(obj)
 
     def update(self, obj: Any, *, force: bool = False) -> Any:
         """Replace an object; conflicts on stale resourceVersion unless force."""
@@ -192,7 +327,7 @@ class ObjectStore:
             stored.metadata.uid = cur.metadata.uid
             stored.metadata.creation_timestamp = cur.metadata.creation_timestamp
             stored.metadata.resource_version = self._rv
-            self._objects[key] = stored
+            self._index_put(key, stored)
             self._notify_stored(MODIFIED, stored, self._rv)
             return deepcopy_obj(stored)
 
@@ -200,20 +335,21 @@ class ObjectStore:
                       mutate: Callable[[Any], None]) -> Any:
         """Read-modify-write with retry under the store lock (status subresource)."""
         with self._lock:
-            cur = self._objects.get((kind, namespace, name))
+            key = (kind, namespace, name)
+            cur = self._objects.get(key)
             if cur is None:
                 raise NotFoundError(f"{kind} {namespace}/{name} not found")
             stored = deepcopy_obj(cur)
             mutate(stored)
             self._rv += 1
             stored.metadata.resource_version = self._rv
-            self._objects[(kind, namespace, name)] = stored
+            self._index_put(key, stored)
             self._notify_stored(MODIFIED, stored, self._rv)
             return deepcopy_obj(stored)
 
     def delete(self, kind: str, namespace: str, name: str) -> Any:
         with self._lock:
-            obj = self._objects.pop((kind, namespace, name), None)
+            obj = self._index_pop((kind, namespace, name))
             if obj is None:
                 raise NotFoundError(f"{kind} {namespace}/{name} not found")
             self._rv += 1
@@ -246,7 +382,7 @@ class ObjectStore:
                 stored.metadata.uid = cur.metadata.uid
                 stored.metadata.creation_timestamp = cur.metadata.creation_timestamp
                 stored.metadata.resource_version = self._rv
-                self._objects[key] = stored
+                self._index_put(key, stored)
                 self._notify_stored(MODIFIED, stored, self._rv)
                 updated.append(deepcopy_obj(stored))
         return updated, conflicted
@@ -279,7 +415,7 @@ class ObjectStore:
                 mutate(stored)
                 self._rv += 1
                 stored.metadata.resource_version = self._rv
-                self._objects[key] = stored
+                self._index_put(key, stored)
                 self._notify_stored(MODIFIED, stored, self._rv)
                 updated.append(key)
         return updated, missing
@@ -296,7 +432,7 @@ class ObjectStore:
         missing: List[Tuple[str, str, str]] = []
         with self._lock:
             for key in keys:
-                obj = self._objects.pop(key, None)
+                obj = self._index_pop(key)
                 if obj is None:
                     missing.append(key)
                     continue
@@ -305,22 +441,71 @@ class ObjectStore:
                 deleted.append(deepcopy_obj(obj))
         return deleted, missing
 
-    def list(self, kind: str, namespace: Optional[str] = None) -> List[Any]:
+    # -- snapshot reads -----------------------------------------------------
+
+    def _snapshot_locked(self, kind: str, namespace: Optional[str]
+                         ) -> Tuple[int, Tuple[Any, ...]]:
+        """Immutable per-(kind, ns) snapshot tuple; cached until the next
+        write to the kind. Building it is pointer copies only. Caller holds
+        the lock; the returned tuple may be used (and copied) outside it."""
+        skey = (kind, namespace)
+        hit = self._snapshots.get(skey)
+        if hit is not None:
+            return hit
+        if namespace is None:
+            bucket = self._by_kind.get(kind)
+        else:
+            bucket = self._by_kind_ns.get((kind, namespace))
+        snap = (self._rv, tuple(bucket.values()) if bucket else ())
+        self._snapshots[skey] = snap
+        return snap
+
+    def list(self, kind: str, namespace: Optional[str] = None, *,
+             copy: bool = True) -> List[Any]:
+        """Snapshot LIST: the lock is held only for the pointer-copy
+        snapshot grab; deepcopies (the expensive part) happen OUTSIDE it,
+        so a 100k-object LIST no longer stalls writers. ``copy=False``
+        returns the shared stored refs — READ-ONLY, for trusted in-process
+        consumers (reflectors, scans) that never mutate API objects."""
         with self._lock:
-            out = []
-            for (k, ns, _), obj in self._objects.items():
-                if k != kind:
-                    continue
-                if namespace is not None and ns != namespace:
-                    continue
-                out.append(deepcopy_obj(obj))
-            return out
+            _, snap = self._snapshot_locked(kind, namespace)
+        if not copy:
+            return list(snap)
+        return [deepcopy_obj(o) for o in snap]
+
+    def list_page(self, kind: str, namespace: Optional[str] = None, *,
+                  limit: int = 500,
+                  continue_token: Optional[ContinueToken] = None,
+                  copy: bool = True
+                  ) -> Tuple[List[Any], Optional[ContinueToken], int]:
+        """Paged LIST with k8s continue semantics.
+
+        Returns ``(page, continue_token, rv)``; a None token means the list
+        is exhausted. All pages of one LIST are served from the snapshot
+        pinned by the first page's token, so the result is consistent at
+        ``rv`` even under concurrent writes — resume a watch with
+        ``watch(kind, ns, from_rv=rv)`` to catch up from there."""
+        limit = max(1, int(limit))
+        if continue_token is None:
+            with self._lock:
+                rv, snap = self._snapshot_locked(kind, namespace)
+            pos = 0
+        else:
+            rv, snap, pos = (continue_token.rv, continue_token._snap,
+                             continue_token._pos)
+        chunk = snap[pos:pos + limit]
+        page = [deepcopy_obj(o) for o in chunk] if copy else list(chunk)
+        nxt = pos + limit
+        token = (ContinueToken(rv, snap, nxt) if nxt < len(snap) else None)
+        return page, token, rv
 
     def count(self, kind: Optional[str] = None) -> int:
+        """O(1): a dict ``len`` on the flat map or the per-kind index."""
         with self._lock:
             if kind is None:
                 return len(self._objects)
-            return sum(1 for (k, _, _) in self._objects if k == kind)
+            bucket = self._by_kind.get(kind)
+            return len(bucket) if bucket is not None else 0
 
     @property
     def resource_version(self) -> int:
@@ -329,46 +514,143 @@ class ObjectStore:
 
     # -- watch --------------------------------------------------------------
 
-    def watch(self, kind: str, namespace: Optional[str] = None) -> _Watch:
+    def watch(self, kind: str, namespace: Optional[str] = None, *,
+              from_rv: Optional[int] = None,
+              buffer: int = 100_000, copy: bool = True) -> _Watch:
+        """Open a watch stream for one kind (optionally one namespace).
+
+        ``from_rv`` resumes from a known resourceVersion: events newer than
+        it are replayed from the per-kind backlog ring atomically with
+        registration, so nothing written between the caller's snapshot and
+        the watch's start is lost. Raises :class:`ResourceVersionExpired`
+        when the ring has evicted events past ``from_rv`` — the caller must
+        relist. ``buffer`` bounds the stream's event buffer (overflow closes
+        the stream with ``overflowed`` set, k8s watch-channel semantics).
+        ``copy=False`` streams the stored objects themselves (READ-ONLY
+        contract) — a write then costs zero deepcopies for this watcher."""
         with self._lock:
-            w = _Watch(kind, namespace)
-            self._watches.append(w)
+            if from_rv is not None and from_rv < self._evicted_rv.get(kind, 0):
+                raise ResourceVersionExpired(
+                    f"{kind} rv {from_rv} evicted from backlog "
+                    f"(oldest resumable: {self._evicted_rv.get(kind, 0)})")
+            w = _Watch(kind, namespace, maxlen=buffer,
+                       unregister=self._unregister_watch, copy_events=copy)
+            if from_rv is not None:
+                for ev in self._backlog.get(kind, ()):
+                    if ev.resource_version <= from_rv:
+                        continue
+                    if (namespace is not None and ev.object is not None
+                            and ev.object.metadata.namespace != namespace):
+                        continue
+                    w._push(ev if not copy else WatchEvent(
+                        ev.type, deepcopy_obj(ev.object), ev.resource_version))
+            self._watches.setdefault((kind, namespace), []).append(w)
             return w
 
-    def list_and_watch(self, kind: str, namespace: Optional[str] = None
-                       ) -> Tuple[List[Any], _Watch]:
-        """Atomic snapshot + watch from that version (reflector primitive)."""
+    def list_and_watch(self, kind: str, namespace: Optional[str] = None, *,
+                       copy: bool = True) -> Tuple[List[Any], _Watch]:
+        """Atomic snapshot + watch from that version (reflector primitive).
+        The deepcopy of the snapshot (when requested) happens outside the
+        lock; only the pointer-copy grab and watch registration are inside.
+        ``copy`` applies to both the snapshot and the watch's event stream."""
         with self._lock:
-            snapshot = self.list(kind, namespace)
-            w = self.watch(kind, namespace)
-            return snapshot, w
+            _, snap = self._snapshot_locked(kind, namespace)
+            w = _Watch(kind, namespace, unregister=self._unregister_watch,
+                       copy_events=copy)
+            self._watches.setdefault((kind, namespace), []).append(w)
+        out = [deepcopy_obj(o) for o in snap] if copy else list(snap)
+        return out, w
+
+    def _unregister_watch(self, w: _Watch) -> None:
+        """Drop a closed watch from the index (called from _Watch.close,
+        outside the watch's own lock)."""
+        with self._lock:
+            bucket = self._watches.get((w.kind, w.namespace))
+            if bucket is not None:
+                try:
+                    bucket.remove(w)
+                except ValueError:
+                    pass
+                if not bucket:
+                    del self._watches[(w.kind, w.namespace)]
 
     def _notify_stored(self, ev_type: str, stored: Any, rv: int) -> None:
-        """Fan a write out to matching watches. The event copy of the
-        just-stored object is made LAZILY — only once a live watch actually
-        matches — so a kind nobody watches (e.g. Events on a tenant plane)
-        costs zero deepcopies per write. All watchers share one event
-        object, as they always have."""
+        """Fan a write out to the matching watch buckets and append it to
+        the kind's backlog ring. The ring and ``copy=False`` watchers get an
+        event sharing the stored object itself — writes install fresh copies
+        and stored objects are never mutated in place, so the shared ref is
+        safe. Copying watchers share ONE lazy deepcopy per write (made only
+        if such a watcher exists), preserving the mutable-event contract."""
         kind = type(stored).kind
         ns = stored.metadata.namespace
-        dead = []
-        ev: Optional[WatchEvent] = None
-        for w in self._watches:
-            if w.closed:
-                dead.append(w)
+        ev = WatchEvent(ev_type, stored, rv)
+        # resumable-watch backlog (kept even with zero watchers: a future
+        # watch(from_rv=...) may resume across this write); raw refs, so an
+        # unwatched write costs zero deepcopies
+        ring = self._backlog.get(kind)
+        if ring is None:
+            ring = self._backlog[kind] = deque()
+        if len(ring) >= self._backlog_maxlen:
+            old = ring.popleft()
+            self._evicted_rv[kind] = old.resource_version
+        ring.append(ev)
+        # snapshot invalidation: this kind's cached tuples are stale now
+        self._snapshots.pop((kind, None), None)
+        self._snapshots.pop((kind, ns), None)
+        # indexed fan-out: only the two matching buckets, dead watches drop
+        # out of the index here (no store-wide linear sweep)
+        ev_copy = None
+        for bkey in ((kind, None), (kind, ns)):
+            bucket = self._watches.get(bkey)
+            if not bucket:
                 continue
-            if w.kind != kind:
-                continue
-            if w.namespace is not None and w.namespace != ns:
-                continue
-            if ev is None:
-                ev = WatchEvent(ev_type, deepcopy_obj(stored), rv)
-            w._push(ev)
-        for w in dead:
-            self._watches.remove(w)
+            dead = None
+            for w in bucket:
+                if w.copy_events:
+                    if ev_copy is None:
+                        ev_copy = WatchEvent(ev_type, deepcopy_obj(stored), rv)
+                    accepted = w._push(ev_copy)
+                else:
+                    accepted = w._push(ev)
+                if not accepted:
+                    if dead is None:
+                        dead = []
+                    dead.append(w)
+            if dead:
+                for w in dead:
+                    bucket.remove(w)
+                if not bucket:
+                    del self._watches[bkey]
+        # amortized BOOKMARK sweep: every bookmark_every writes, lagging
+        # watchers (any kind) get an rv checkpoint so an idle informer's
+        # resume point keeps up with the global rv even when its own kind
+        # sees no traffic
+        self._writes_since_bookmark += 1
+        if self._writes_since_bookmark >= self._bookmark_every:
+            self._writes_since_bookmark = 0
+            self._emit_bookmarks_locked(rv)
+
+    def _emit_bookmarks_locked(self, rv: int) -> None:
+        bm = WatchEvent(BOOKMARK, None, rv)
+        for bucket in list(self._watches.values()):
+            for w in list(bucket):
+                if w.last_pushed_rv < rv:
+                    w._push(bm)
+                    self.bookmarks_sent += 1
+
+    def emit_bookmarks(self) -> int:
+        """Push a BOOKMARK at the current rv to every lagging watcher
+        (callable by a periodic scan for write-idle stores; the write path
+        already does this every ``bookmark_every`` writes)."""
+        with self._lock:
+            before = self.bookmarks_sent
+            self._emit_bookmarks_locked(self._rv)
+            return self.bookmarks_sent - before
 
     def close(self) -> None:
         with self._lock:
-            for w in self._watches:
-                w.close()
+            watches = [w for bucket in self._watches.values()
+                       for w in bucket]
             self._watches.clear()
+        for w in watches:
+            w.close()

@@ -275,8 +275,12 @@ class Syncer:
                  record_events: bool = True,
                  event_ttl: float = 3600.0,
                  ring_vnodes: int = 64,
-                 executor: Optional[Any] = None):
+                 executor: Optional[Any] = None,
+                 informer_cache_budget: Optional[int] = None):
         self.super_api = super_api
+        # per-informer cache byte budget for tenant-side informers (None =
+        # unbounded); evicted keys read through the apiserver on access
+        self.informer_cache_budget = informer_cache_budget
         # shared CooperativeExecutor: informer pumps, workers, and the scan
         # run as tasks on its bounded pool; None = legacy one-thread-per-loop
         self.executor = executor
@@ -392,7 +396,8 @@ class Syncer:
             # entry populated (an unstarted informer just has an unsynced
             # cache, which reconcile treats as "retry later").
             for kind in SYNCED_KINDS_DOWNWARD:
-                inf = Informer(plane.api, kind, name=f"{plane.name}/{kind}")
+                inf = Informer(plane.api, kind, name=f"{plane.name}/{kind}",
+                               cache_budget_bytes=self.informer_cache_budget)
                 inf.add_handler(self._tenant_handler(plane.name, kind))
                 reg.informers[kind] = inf
             for inf in reg.informers.values():
@@ -419,7 +424,9 @@ class Syncer:
         # namespaces, so they are swept here too.
         prefix = reg.prefix + "-"
         for kind in ["Event"] + list(reversed(SYNCED_KINDS_DOWNWARD)):
-            for obj in self.super_api.list(kind):
+            # paged, zero-copy sweep: only metadata is read before delete
+            objs, _rv = self.super_api.list_all_pages(kind, copy=False)
+            for obj in objs:
                 ns = (obj.metadata.name if kind == "Namespace"
                       else obj.metadata.namespace)
                 if ns.startswith(prefix):
@@ -786,10 +793,13 @@ class Syncer:
             if kind == "Namespace":
                 continue
             # ONE super-cluster list per kind per scan (was per tenant,
-            # making the orphan pass O(tenants x super-objects))
+            # making the orphan pass O(tenants x super-objects)); paged +
+            # zero-copy: the scan only COMPARES, so shared refs suffice and
+            # a 100k-object kind is never deepcopied nor held under lock
             super_by_key: Dict[Tuple[str, str], Any] = {}
             orphans_by_tenant: Dict[str, List[Tuple[Any, str]]] = {}
-            for sobj in self.super_api.list(kind):
+            sobjs, _rv = self.super_api.list_all_pages(kind, copy=False)
+            for sobj in sobjs:
                 sns = sobj.metadata.namespace
                 super_by_key[(sns, sobj.metadata.name)] = sobj
                 resolved = self._resolve_super_ns(sns)
@@ -845,8 +855,9 @@ class Syncer:
             apis = [reg.plane.api for reg in self.tenants.values()]
         expired = 0
         for api in [self.super_api] + apis:
+            events, _rv = api.list_all_pages("Event", copy=False)
             stale = [("Event", e.metadata.namespace, e.metadata.name)
-                     for e in api.list("Event")
+                     for e in events
                      if e.last_timestamp < cutoff]
             if stale:
                 deleted, _missing = api.delete_batch(stale)

@@ -1,0 +1,509 @@
+"""ObjectStore v2 scale-wall semantics: per-kind indexes and O(1) count,
+snapshot LIST (consistent pages, writers never blocked), paged LIST with
+continue tokens, resumable watches with backlog replay + BOOKMARKs, the
+(kind, namespace)-indexed watch registry, and informer overflow recovery
+(resume from rv on backlog hit, relist on eviction) with an
+exactly-once/no-loss event accounting under concurrent churn."""
+import threading
+import time
+
+import pytest
+
+from repro.core import (ADDED, BOOKMARK, DELETED, MODIFIED, Informer,
+                        Namespace, NotFoundError, ObjectStore,
+                        ResourceVersionExpired, WorkUnit)
+from repro.core.apiserver import APIServer
+
+
+def mk_unit(name, ns="default"):
+    u = WorkUnit()
+    u.metadata.name = name
+    u.metadata.namespace = ns
+    return u
+
+
+def mk_ns(name):
+    n = Namespace()
+    n.metadata.name = name
+    return n
+
+
+# ---------------------------------------------------------------- indexes
+
+
+def test_list_is_kind_indexed():
+    s = ObjectStore()
+    s.create(mk_unit("a"))
+    s.create(mk_ns("n1"))
+    s.create(mk_unit("b", "ns2"))
+    assert {u.metadata.name for u in s.list("WorkUnit")} == {"a", "b"}
+    assert [n.metadata.name for n in s.list("Namespace")] == ["n1"]
+    assert s.list("Service") == []
+    assert [u.metadata.name for u in s.list("WorkUnit", "ns2")] == ["b"]
+
+
+def test_count_per_kind_and_total():
+    s = ObjectStore()
+    for i in range(5):
+        s.create(mk_unit(f"u{i}"))
+    s.create(mk_ns("n1"))
+    assert s.count("WorkUnit") == 5
+    assert s.count("Namespace") == 1
+    assert s.count("Service") == 0
+    assert s.count() == 6
+    s.delete("WorkUnit", "default", "u0")
+    assert s.count("WorkUnit") == 4 and s.count() == 5
+
+
+def test_index_consistent_after_delete_and_recreate():
+    s = ObjectStore()
+    s.create(mk_unit("a", "ns1"))
+    s.delete("WorkUnit", "ns1", "a")
+    assert s.list("WorkUnit") == [] and s.list("WorkUnit", "ns1") == []
+    s.create(mk_unit("a", "ns1"))
+    assert len(s.list("WorkUnit", "ns1")) == 1
+
+
+# ---------------------------------------------------------- snapshot reads
+
+
+def test_list_nocopy_returns_store_refs():
+    s = ObjectStore()
+    s.create(mk_unit("a"))
+    refs = s.list("WorkUnit", copy=False)
+    copies = s.list("WorkUnit")
+    assert refs[0] is s._objects[("WorkUnit", "default", "a")]
+    assert copies[0] is not refs[0]
+
+
+def test_snapshot_reuse_until_write():
+    s = ObjectStore()
+    s.create(mk_unit("a"))
+    a1 = s.list("WorkUnit", copy=False)
+    a2 = s.list("WorkUnit", copy=False)
+    assert a1 == a2  # same cached snapshot, no rebuild
+    s.create(mk_unit("b"))
+    assert len(s.list("WorkUnit", copy=False)) == 2
+
+
+def test_writes_do_not_mutate_prior_snapshot():
+    s = ObjectStore()
+    s.create(mk_unit("a"))
+    snap = s.list("WorkUnit", copy=False)
+    s.update_status("WorkUnit", "default", "a",
+                    lambda u: setattr(u.status, "phase", "Ready"))
+    # the write installed a FRESH object; the snapshot ref is untouched
+    assert snap[0].status.phase != "Ready"
+    assert s.get("WorkUnit", "default", "a").status.phase == "Ready"
+
+
+# ------------------------------------------------------------- paged LIST
+
+
+def test_list_page_walks_all_objects_once():
+    s = ObjectStore()
+    for i in range(25):
+        s.create(mk_unit(f"u{i:02d}"))
+    seen = []
+    token = None
+    pages = 0
+    while True:
+        page, token, rv = s.list_page("WorkUnit", limit=10,
+                                      continue_token=token)
+        seen.extend(o.metadata.name for o in page)
+        pages += 1
+        if token is None:
+            break
+    assert pages == 3
+    assert sorted(seen) == sorted(f"u{i:02d}" for i in range(25))
+    assert len(seen) == len(set(seen))  # no duplicates
+
+
+def test_list_page_consistent_under_concurrent_writes():
+    s = ObjectStore()
+    for i in range(20):
+        s.create(mk_unit(f"u{i:02d}"))
+    page, token, rv = s.list_page("WorkUnit", limit=7)
+    # churn between pages: deletes, creates, updates
+    s.delete("WorkUnit", "default", "u15")
+    s.create(mk_unit("zzz"))
+    seen = [o.metadata.name for o in page]
+    while token is not None:
+        page, token, rv2 = s.list_page("WorkUnit", limit=7,
+                                       continue_token=token)
+        seen.extend(o.metadata.name for o in page)
+        assert rv2 == rv  # every page reports the pinned snapshot rv
+    # the paged result is exactly the snapshot at the first page's rv
+    assert sorted(seen) == sorted(f"u{i:02d}" for i in range(20))
+
+
+def test_list_page_namespace_scoped():
+    s = ObjectStore()
+    for i in range(6):
+        s.create(mk_unit(f"a{i}", "ns1"))
+        s.create(mk_unit(f"b{i}", "ns2"))
+    page, token, _ = s.list_page("WorkUnit", "ns1", limit=4)
+    rest, token, _ = s.list_page("WorkUnit", "ns1", limit=4,
+                                 continue_token=token)
+    assert token is None
+    names = {o.metadata.name for o in page + rest}
+    assert names == {f"a{i}" for i in range(6)}
+
+
+def test_apiserver_list_all_pages_rv_resumes_watch():
+    api = APIServer("t")
+    for i in range(10):
+        api.create(mk_unit(f"u{i}"))
+    objs, rv = api.list_all_pages("WorkUnit", limit=3)
+    assert len(objs) == 10
+    api.create(mk_unit("after"))
+    w = api.watch("WorkUnit", from_rv=rv)
+    ev = w.next(timeout=1.0)
+    assert ev.type == ADDED and ev.object.metadata.name == "after"
+
+
+# -------------------------------------------------------- resumable watch
+
+
+def test_watch_from_rv_replays_missed_events():
+    s = ObjectStore()
+    s.create(mk_unit("a"))
+    rv0 = s.resource_version
+    s.create(mk_unit("b"))
+    s.update_status("WorkUnit", "default", "a",
+                    lambda u: setattr(u.status, "phase", "Ready"))
+    s.delete("WorkUnit", "default", "b")
+    w = s.watch("WorkUnit", from_rv=rv0)
+    evs = [w.next(timeout=1.0) for _ in range(3)]
+    assert [e.type for e in evs] == [ADDED, MODIFIED, DELETED]
+    assert all(e.resource_version > rv0 for e in evs)
+    # exactly the missed events — nothing more buffered
+    assert w.poll() is None
+
+
+def test_watch_from_rv_namespace_filtered_replay():
+    s = ObjectStore()
+    rv0 = s.resource_version
+    s.create(mk_unit("a", "ns1"))
+    s.create(mk_unit("b", "ns2"))
+    w = s.watch("WorkUnit", "ns1", from_rv=rv0)
+    ev = w.next(timeout=1.0)
+    assert ev.object.metadata.namespace == "ns1"
+    assert w.poll() is None
+
+
+def test_watch_from_rv_expired_raises():
+    s = ObjectStore(backlog=4)
+    for i in range(10):
+        s.create(mk_unit(f"u{i}"))
+    with pytest.raises(ResourceVersionExpired):
+        s.watch("WorkUnit", from_rv=1)
+    # a recent rv is still resumable
+    s.watch("WorkUnit", from_rv=s.resource_version)
+
+
+def test_bookmarks_advance_idle_watchers():
+    s = ObjectStore(bookmark_every=5)
+    w = s.watch("Namespace")   # idle: no Namespace traffic at all
+    for i in range(12):
+        s.create(mk_unit(f"u{i}"))
+    ev = w.next(timeout=1.0)
+    assert ev.type == BOOKMARK and ev.object is None
+    assert ev.resource_version >= 5
+    assert s.bookmarks_sent >= 1
+    # the bookmark rv is a valid resume point even though the ring for
+    # Namespace is empty
+    s.watch("Namespace", from_rv=ev.resource_version)
+
+
+def test_emit_bookmarks_on_idle_store():
+    s = ObjectStore()
+    s.create(mk_unit("a"))
+    w = s.watch("WorkUnit")
+    assert w.next(timeout=0.1) is None  # opened after the write: no events
+    sent = s.emit_bookmarks()
+    assert sent >= 1
+    ev = w.next(timeout=1.0)
+    assert ev.type == BOOKMARK and ev.resource_version == s.resource_version
+
+
+# ----------------------------------------------------- watch index hygiene
+
+
+def test_closed_watch_leaves_index():
+    s = ObjectStore()
+    w1 = s.watch("WorkUnit")
+    w2 = s.watch("WorkUnit", "ns1")
+    assert sum(len(b) for b in s._watches.values()) == 2
+    w1.close()
+    w2.close()
+    assert sum(len(b) for b in s._watches.values()) == 0
+
+
+def test_overflowed_watch_pruned_from_index_on_write():
+    s = ObjectStore()
+    w = s.watch("WorkUnit", buffer=2)
+    for i in range(5):
+        s.create(mk_unit(f"u{i}"))
+    assert w.overflowed
+    # the overflow write already pruned it from the registry
+    assert sum(len(b) for b in s._watches.values()) == 0
+    # buffered events still drain before the stream reads closed
+    drained = 0
+    while w.next(timeout=0.05) is not None:
+        drained += 1
+    assert drained == 2 and w.closed
+
+
+def test_watch_nocopy_shares_stored_object():
+    s = ObjectStore()
+    w_ref = s.watch("WorkUnit", copy=False)
+    w_copy = s.watch("WorkUnit")
+    s.create(mk_unit("a"))
+    ev_ref = w_ref.next(timeout=1.0)
+    ev_copy = w_copy.next(timeout=1.0)
+    stored = s._objects[("WorkUnit", "default", "a")]
+    assert ev_ref.object is stored
+    assert ev_copy.object is not stored
+    # the copying stream keeps the mutable-event contract
+    ev_copy.object.status.phase = "Hacked"
+    assert s.get("WorkUnit", "default", "a").status.phase != "Hacked"
+
+
+def test_snapshot_list_does_not_block_writers():
+    """A slow consumer iterating a snapshot must not hold the store lock."""
+    s = ObjectStore()
+    for i in range(100):
+        s.create(mk_unit(f"u{i}"))
+    snap = s.list("WorkUnit", copy=False)
+    t0 = time.monotonic()
+    done = threading.Event()
+
+    def writer():
+        for i in range(100):
+            s.create(mk_unit(f"w{i}"))
+        done.set()
+
+    threading.Thread(target=writer, daemon=True).start()
+    # "consume" the snapshot slowly while the writer runs
+    for o in snap:
+        assert o.metadata.name.startswith("u")
+    assert done.wait(5.0)
+    assert time.monotonic() - t0 < 5.0
+    assert s.count("WorkUnit") == 200
+
+
+# ------------------------------------------- informer resume vs relist
+
+
+def _churn(api, n, start=0):
+    for i in range(start, start + n):
+        api.create(mk_unit(f"c{i}"))
+        if i % 3 == 0:
+            api.update_status("WorkUnit", "default", f"c{i}",
+                              lambda u: setattr(u.status, "phase", "Ready"))
+        if i % 7 == 0:
+            api.delete("WorkUnit", "default", f"c{i}")
+
+
+def _cache_equals_store(inf, api, timeout=5.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        store_keys = {(o.metadata.namespace, o.metadata.name)
+                      for o in api.list("WorkUnit", copy=False)}
+        if set(inf.cache.keys()) == store_keys:
+            return True
+        time.sleep(0.02)
+    return False
+
+
+def test_informer_resumes_after_overflow_backlog_hit():
+    """Overflow with an ample store backlog: the reflector must RESUME from
+    its last rv (no relist) and converge to exact store state."""
+    api = APIServer("t")
+    inf = Informer(api, "WorkUnit", watch_buffer=32)
+    seen = []
+    slow = threading.Event()
+    # (type, name, object rv) identifies an event uniquely: DELETED carries
+    # the object's FINAL rv (k8s semantics), so raw rvs alone would collide
+    inf.add_handler(lambda t, o: (
+        seen.append((t, o.metadata.name, o.metadata.resource_version)),
+        slow.is_set() and time.sleep(0.001)))
+    inf.start()
+    assert inf.wait_for_cache_sync(5.0)
+    assert inf.relist_count == 1
+    # a gated-slow consumer + a burst far beyond the watch buffer forces
+    # at least one overflow
+    slow.set()
+    _churn(api, 400)
+    slow.clear()
+    assert _cache_equals_store(inf, api)
+    assert inf.resume_count >= 1
+    assert inf.relist_count == 1          # backlog covered: NO relist
+    # no event loss and no duplication: the store emitted exactly one event
+    # per write; the handler must have seen each exactly once
+    assert len(seen) == len(set(seen))
+    assert len(seen) == api.store.resource_version
+    inf.stop()
+
+
+def test_informer_relists_after_backlog_eviction():
+    """Overflow with a tiny store backlog: resume is impossible
+    (ResourceVersionExpired) and the reflector must fall back to a full
+    relist — still converging to exact store state."""
+    api = APIServer("t")
+    api.store._backlog_maxlen = 16       # evict aggressively
+    inf = Informer(api, "WorkUnit", watch_buffer=8)
+    slow = threading.Event()
+    inf.add_handler(lambda t, o: slow.is_set() and time.sleep(0.001))
+    inf.start()
+    assert inf.wait_for_cache_sync(5.0)
+    slow.set()                            # make the consumer lag
+    _churn(api, 300)
+    slow.clear()
+    assert _cache_equals_store(inf, api)
+    assert inf.relist_count >= 2          # at least one forced relist
+    inf.stop()
+
+
+def test_informer_exactly_once_under_concurrent_churn():
+    """Writers churn while the informer repeatedly overflows and resumes:
+    the final cache must equal store state and no rv may be applied twice."""
+    api = APIServer("t")
+    inf = Informer(api, "WorkUnit", watch_buffer=64)
+    applied = []
+    inf.add_handler(lambda t, o: applied.append(
+        (t, o.metadata.name, o.metadata.resource_version)))
+    inf.start()
+    assert inf.wait_for_cache_sync(5.0)
+    threads = [threading.Thread(target=_churn, args=(api, 120, 200 * i))
+               for i in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert _cache_equals_store(inf, api)
+    assert inf.relist_count == 1          # default backlog always covers
+    # (type, name, object rv) is unique per write (DELETED reuses the final
+    # object rv, so the triple — not the rv — is the exactly-once key)
+    assert len(applied) == len(set(applied))
+    assert len(applied) == api.store.resource_version
+    inf.stop()
+
+
+def test_informer_bookmark_advances_resume_point():
+    """An informer on an idle kind must resume (not relist) after its watch
+    dies, because bookmarks kept its rv fresh while OTHER kinds churned."""
+    api = APIServer("t")
+    api.store._bookmark_every = 8
+    api.store._backlog_maxlen = 16
+    inf = Informer(api, "Namespace")
+    inf.start()
+    assert inf.wait_for_cache_sync(5.0)
+    for i in range(100):                  # WorkUnit churn, Namespace idle
+        api.create(mk_unit(f"u{i}"))
+    deadline = time.monotonic() + 5.0
+    while inf.last_seen_rv < 90 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert inf.bookmark_count >= 1
+    assert inf.last_seen_rv >= 90         # far beyond Namespace's last event
+    # kill the watch: reflector reconnects via resume, not relist
+    api.store.close()                     # closes every live watch
+    deadline = time.monotonic() + 5.0
+    while inf.resume_count < 1 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert inf.resume_count >= 1
+    assert inf.relist_count == 1
+    inf.stop()
+
+
+# ------------------------------------------------------ cache budget
+
+
+def test_cache_budget_evicts_and_reads_through():
+    api = APIServer("t")
+    for i in range(50):
+        api.create(mk_unit(f"u{i:02d}"))
+    inf = Informer(api, "WorkUnit", cache_budget_bytes=2048)
+    inf.start()
+    assert inf.wait_for_cache_sync(5.0)
+    cache = inf.cache
+    assert cache.evict_count > 0
+    assert cache.nbytes_estimate() <= 2048
+    # every key is still known and every get still answers correctly
+    assert len(cache) == 50
+    for i in range(50):
+        obj = cache.get("default", f"u{i:02d}")
+        assert obj is not None and obj.metadata.name == f"u{i:02d}"
+    assert cache.resync_count > 0         # some came back via read-through
+    # a truly deleted key answers None even if it was evicted
+    api.delete("WorkUnit", "default", "u00")
+    deadline = time.monotonic() + 5.0
+    while cache.get("default", "u00") is not None \
+            and time.monotonic() < deadline:
+        time.sleep(0.02)
+    assert cache.get("default", "u00") is None
+    inf.stop()
+
+
+def test_cache_budget_nbytes_o1_and_len_semantics():
+    api = APIServer("t")
+    inf = Informer(api, "WorkUnit", cache_budget_bytes=1024)
+    inf.start()
+    assert inf.wait_for_cache_sync(5.0)
+    for i in range(30):
+        api.create(mk_unit(f"u{i}"))
+    deadline = time.monotonic() + 5.0
+    while len(inf.cache) < 30 and time.monotonic() < deadline:
+        time.sleep(0.02)
+    assert len(inf.cache) == 30           # resident + evicted
+    assert inf.cache.nbytes_estimate() <= 1024
+    inf.stop()
+
+
+def test_unbudgeted_cache_unchanged():
+    api = APIServer("t")
+    inf = Informer(api, "WorkUnit")
+    inf.start()
+    assert inf.wait_for_cache_sync(5.0)
+    for i in range(20):
+        api.create(mk_unit(f"u{i}"))
+    deadline = time.monotonic() + 5.0
+    while len(inf.cache) < 20 and time.monotonic() < deadline:
+        time.sleep(0.02)
+    assert inf.cache.evict_count == 0
+    assert len(inf.cache.list()) == 20
+    inf.stop()
+
+
+def test_informer_cache_get_after_eviction_not_found_is_none():
+    cache_api = APIServer("t")
+    cache_api.create(mk_unit("only"))
+    inf = Informer(cache_api, "WorkUnit", cache_budget_bytes=1)
+    inf.start()
+    assert inf.wait_for_cache_sync(5.0)
+    assert inf.cache.get("default", "never-existed") is None
+    inf.stop()
+
+
+def test_informer_metrics_export():
+    from repro.core import MetricsRegistry
+    api = APIServer("t")
+    api.create(mk_unit("a"))
+    inf = Informer(api, "WorkUnit")
+    inf.start()
+    assert inf.wait_for_cache_sync(5.0)
+    m = MetricsRegistry()
+    inf.export_metrics(m, shard="0")
+    gauges = m.snapshot()["gauges"]
+    assert any("informer_cache_nbytes" in k for k in gauges)
+    assert any("informer_relists" in k for k in gauges)
+    key = next(k for k in gauges if "informer_relists" in k)
+    assert gauges[key] == 1.0
+    inf.stop()
+
+
+def test_delete_not_found_still_raises():
+    s = ObjectStore()
+    with pytest.raises(NotFoundError):
+        s.delete("WorkUnit", "default", "nope")
