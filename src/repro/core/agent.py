@@ -25,7 +25,7 @@ from typing import Any, Callable, Dict, List, Optional
 from .apiserver import APIServer
 from .objects import Node, NodeStatus, WorkUnit
 from .runtime import Controller, RetryLater
-from .store import ADDED, MODIFIED, NotFoundError
+from .store import ADDED, AlreadyExistsError, MODIFIED, NotFoundError
 from .upward import EventRecorder
 from .workqueue import WorkQueue
 
@@ -138,7 +138,7 @@ class NodeAgent(Controller):
         node.chip_ids = list(self.chip_ids)
         try:
             self.api.create(node)
-        except Exception:
+        except AlreadyExistsError:
             pass  # re-registration after restart
 
     def on_start(self) -> None:

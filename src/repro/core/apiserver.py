@@ -17,12 +17,15 @@ import threading
 import time
 from typing import Any, Callable, List, Optional, Tuple
 
+from .executor import RetryLater, current_thread_pooled
 from .objects import new_uid
 from .store import ContinueToken, ObjectStore
 
 
-class RateLimited(Exception):
-    pass
+class RateLimited(RetryLater):
+    """Token bucket exhausted. Subclasses :class:`RetryLater`, so any
+    controller already retrying RetryLater backs off instead of crashing
+    when a burst empties its client's bucket on a pool thread."""
 
 
 class TokenBucket:
@@ -46,9 +49,14 @@ class TokenBucket:
                     self._tokens -= n
                     return
                 need = (n - self._tokens) / self.qps
-            if not block:
-                raise RateLimited()
-            time.sleep(need)
+            if not block or current_thread_pooled():
+                # a cooperative pool thread must NEVER park here: stalling
+                # one quantum stalls every task behind it. Raise instead —
+                # RateLimited is a RetryLater, so reconcile loops requeue
+                # the key with backoff and the pool keeps draining.
+                raise RateLimited(
+                    f"bucket empty for {need * 1e3:.1f}ms (qps={self.qps})")
+            time.sleep(need)   # vclint: disable=VCL002 pool threads raise above
 
 
 class APIClient:

@@ -41,6 +41,28 @@ import time
 from collections import deque
 from typing import Any, Callable, Deque, List, Optional, Set, Tuple
 
+from . import sanitize
+
+
+class RetryLater(Exception):
+    """Work cannot make progress *yet* (a gate or precondition is
+    pending). Controllers listing it in ``retry_on`` requeue the key with
+    backoff instead of parking a worker — the cooperative replacement for
+    blocking inside ``reconcile``. Defined here (not runtime.py) so leaf
+    modules like apiserver.py can raise it without importing the
+    controller runtime."""
+
+
+# Marks pool threads so leaf code (e.g. TokenBucket.take) can refuse to
+# block when called from a cooperative quantum without needing a reference
+# to the executor instance.
+_pool_state = threading.local()
+
+
+def current_thread_pooled() -> bool:
+    """True when the calling thread is a CooperativeExecutor pool thread."""
+    return getattr(_pool_state, "active", False)
+
 
 class Task:
     """One cooperatively scheduled unit of work on a :class:`CooperativeExecutor`.
@@ -146,6 +168,11 @@ class CooperativeExecutor:
         self.quanta_seconds = 0.0
         self.task_errors = 0
         self.resizes = 0
+        # REPRO_SANITIZE=1: warn when a quantum hogs its pool thread
+        # (captured at construction; tests build fresh executors)
+        self._sanitize = sanitize.enabled()
+        self._sanitize_quantum_s = sanitize.long_quantum_seconds()
+        self.long_quanta = 0
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -289,6 +316,7 @@ class CooperativeExecutor:
     # -- pool --------------------------------------------------------------
 
     def _worker_loop(self) -> None:
+        _pool_state.active = True
         while True:
             task: Optional[Task] = None
             with self._cv:
@@ -329,12 +357,20 @@ class CooperativeExecutor:
         try:
             result = task.fn()
             failed = False
-        except BaseException:
+        except BaseException:   # vclint: disable=VCL004 counted as task_errors below
             result = Task.WAIT
             failed = True
+        dur = time.monotonic() - t0
+        if self._sanitize and dur > self._sanitize_quantum_s:
+            sanitize.report_long_hold(
+                f"task {task.name!r} quantum ran {dur * 1e3:.0f}ms "
+                f"(> {self._sanitize_quantum_s * 1e3:.0f}ms) on "
+                f"executor {self.name!r}")
         with self._cv:
+            if self._sanitize and dur > self._sanitize_quantum_s:
+                self.long_quanta += 1
             self.quanta_total += 1
-            self.quanta_seconds += time.monotonic() - t0
+            self.quanta_seconds += dur
             if failed:
                 self.task_errors += 1
             if task._cancelled or result is Task.DONE:

@@ -28,13 +28,13 @@ Item = Tuple[str, Hashable]   # (tenant, key)
 class _SubQueue:
     __slots__ = ("items", "credit")
 
-    def __init__(self):
+    def __init__(self) -> None:
         self.items: List[Hashable] = []
         self.credit = 0
 
 
 class FairWorkQueue(WakerSubscriptions):
-    def __init__(self, name: str = "fair", fair: bool = True):
+    def __init__(self, name: str = "fair", fair: bool = True) -> None:
         self.name = name
         self.fair = fair
         self._lock = threading.Lock()
@@ -174,7 +174,7 @@ class FairWorkQueue(WakerSubscriptions):
         with self._cv:
             if not self._wait_for_items(timeout):
                 return None
-            item = self._fifo.pop(0) if not self.fair else self._wrr_pop()
+            item = self._fifo.pop(0) if not self.fair else self._wrr_pop_locked()
             self._mark_dequeued(item)
             return item
 
@@ -201,7 +201,7 @@ class FairWorkQueue(WakerSubscriptions):
                     self._mark_dequeued(item)
                     out.append(item)
                 return out
-            first = self._wrr_pop()
+            first = self._wrr_pop_locked()
             self._mark_dequeued(first)
             out = [first]
             tenant = first[0]
@@ -270,7 +270,7 @@ class FairWorkQueue(WakerSubscriptions):
 
     # -- weighted round robin -----------------------------------------------------
 
-    def _wrr_pop(self) -> Item:
+    def _wrr_pop_locked(self) -> Item:
         """Pop one item using interleaved WRR over active sub-queues.
 
         Each active tenant holds ``credit`` (refilled to its weight per round);

@@ -216,6 +216,8 @@ class Informer:
         self.relist_count = 0
         self.resume_count = 0
         self.bookmark_count = 0
+        self.connect_errors = 0    # failed reflector (re)connect attempts
+        self.handler_errors = 0    # event handlers that raised
 
     def _load_one(self, namespace: str, name: str) -> Optional[Any]:
         """Cache read-through for evicted keys (None = truly not found)."""
@@ -242,6 +244,10 @@ class Informer:
                                lambda: self.relist_count, **labels)
         metrics.register_gauge("informer_resumes",
                                lambda: self.resume_count, **labels)
+        metrics.register_gauge("informer_connect_errors",
+                               lambda: self.connect_errors, **labels)
+        metrics.register_gauge("informer_handler_errors",
+                               lambda: self.handler_errors, **labels)
 
     @property
     def alive(self) -> bool:
@@ -333,7 +339,8 @@ class Informer:
             except ResourceVersionExpired:
                 pass                 # backlog evicted our rv: full relist
             except Exception:
-                return None
+                self.connect_errors += 1   # visible via export_metrics
+                return None          # retried after RELIST_BACKOFF
         try:
             snapshot, rv = self.api.list_all_pages(
                 self.kind, self.namespace, limit=self.page_limit, copy=False)
@@ -343,6 +350,7 @@ class Informer:
         except ResourceVersionExpired:
             return None   # churn outran the backlog between list and watch
         except Exception:
+            self.connect_errors += 1       # visible via export_metrics
             return None
         self.relist_count += 1
         self._replay(snapshot)
@@ -413,4 +421,6 @@ class Informer:
             try:
                 h(ev_type, obj)
             except Exception:
-                pass  # handler errors must not kill the reflector
+                # a broken handler must not kill the reflector, but the
+                # failure has to be visible (export_metrics gauge)
+                self.handler_errors += 1

@@ -233,9 +233,13 @@ def deepcopy_count() -> int:
     return DEEPCOPY_COUNT
 
 
-def _copy(obj: Any):
+def _copy(obj: Any) -> Any:
     if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
-        return type(obj)(**{
+        # REPRO_SANITIZE=1 hands out frozen proxy subclasses; copying one
+        # must thaw back to the real class (proxies forbid __init__'s
+        # setattr, and a copy is by definition mutable again)
+        cls = getattr(type(obj), "__frozen_base__", type(obj))
+        return cls(**{
             f.name: _copy(getattr(obj, f.name))
             for f in dataclasses.fields(obj)
         })
@@ -246,7 +250,7 @@ def _copy(obj: Any):
     return obj
 
 
-def deepcopy_obj(obj: Any):
+def deepcopy_obj(obj: Any) -> Any:
     """Fast structural copy of an API object (dataclass tree)."""
     global DEEPCOPY_COUNT
     DEEPCOPY_COUNT += 1

@@ -19,7 +19,7 @@ from typing import Dict, List, Tuple
 class ShardRing:
     """Consistent-hash ring mapping tenant UIDs to shards."""
 
-    def __init__(self, num_shards: int, vnodes: int = 64):
+    def __init__(self, num_shards: int, vnodes: int = 64) -> None:
         self.num_shards = max(1, int(num_shards))
         self.vnodes = max(1, int(vnodes))
         points: List[Tuple[int, int]] = []

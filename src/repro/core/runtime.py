@@ -35,17 +35,16 @@ from typing import (Any, Callable, Dict, Hashable, List, Optional, Tuple,
                     Type)
 
 from .apiserver import APIServer
-from .executor import CooperativeExecutor, Task
+from .executor import CooperativeExecutor, RetryLater, Task
 from .fairqueue import FairWorkQueue
 from .informer import Informer
 from .workqueue import DelayingQueue, RateLimiter, WorkQueue
 
-
-class RetryLater(Exception):
-    """Reconcile cannot make progress *yet* (a gate or precondition is
-    pending). Controllers listing it in ``retry_on`` requeue the key with
-    backoff instead of parking a worker — the cooperative replacement for
-    blocking inside ``reconcile``."""
+# RetryLater is re-exported here for the existing import surface (agent.py,
+# syncer.py, tests); the class itself moved to executor.py so leaf modules
+# (apiserver.py) can raise it without importing the controller runtime.
+__all__ = ["RetryLater", "MetricsRegistry", "Controller",
+           "ControllerManager"]
 
 
 # --------------------------------------------------------------------- metrics
@@ -63,6 +62,7 @@ class MetricsRegistry:
         self._counters: Dict[str, float] = {}
         self._summaries: Dict[str, List[float]] = {}   # [sum, count, max]
         self._gauges: Dict[str, Callable[[], float]] = {}
+        self.gauge_errors = 0   # snapshot() gauge callables that raised
 
     @staticmethod
     def _key(name: str, labels: Dict[str, Any]) -> str:
@@ -128,6 +128,10 @@ class MetricsRegistry:
             try:
                 out_gauges[key] = float(fn())
             except Exception:
+                # a broken gauge must not break /metrics, but it must be
+                # visible: NaN in the scrape plus an error counter
+                with self._lock:
+                    self.gauge_errors += 1
                 out_gauges[key] = float("nan")
         return {"counters": counters, "summaries": summaries,
                 "gauges": out_gauges}
@@ -503,9 +507,11 @@ class Controller:
             return Task.DONE
         try:
             self.scan_once()
-            self._scan_failing = False
+            with self._lifecycle_lock:   # _scan_failing is lock-guarded
+                self._scan_failing = False
         except Exception:
-            self._scan_failing = True
+            with self._lifecycle_lock:
+                self._scan_failing = True
             self.metrics.inc("scan_errors", controller=self.name)
         return self.scan_interval
 

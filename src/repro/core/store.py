@@ -50,6 +50,7 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import (Any, Callable, Deque, Dict, List, Optional, Tuple)
 
+from . import sanitize
 from .objects import deepcopy_obj, new_uid, obj_key
 
 ADDED, MODIFIED, DELETED = "ADDED", "MODIFIED", "DELETED"
@@ -105,12 +106,15 @@ class _Watch:
     def __init__(self, kind: str, namespace: Optional[str],
                  maxlen: int = 100_000,
                  unregister: Optional[Callable[["_Watch"], None]] = None,
-                 copy_events: bool = True):
+                 copy_events: bool = True, sanitize_events: bool = False):
         self.kind = kind
         self.namespace = namespace
         # True: events carry deepcopies (safe to mutate). False: events
         # share the stored object — READ-ONLY contract, zero copy cost.
         self.copy_events = copy_events
+        # REPRO_SANITIZE=1 + copy_events=False: hand shared refs out as
+        # deep-frozen proxies (set by the owning store at registration)
+        self.sanitize_events = sanitize_events and not copy_events
         self._events: Deque[WatchEvent] = deque()
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
@@ -157,7 +161,7 @@ class _Watch:
                     return None  # timed out
                 self._cv.wait(remaining)
             if self._events:
-                return self._events.popleft()
+                return self._deliver(self._events.popleft())
             return None  # closed
 
     def poll(self) -> Optional[WatchEvent]:
@@ -165,8 +169,16 @@ class _Watch:
         :attr:`closed` to tell "idle" from "stream over")."""
         with self._cv:
             if self._events:
-                return self._events.popleft()
+                return self._deliver(self._events.popleft())
             return None
+
+    def _deliver(self, ev: WatchEvent) -> WatchEvent:
+        """Sanitize hook at the consumer boundary: zero-copy events leave as
+        deep-frozen proxies, so the blamed site is the consumer's poll."""
+        if self.sanitize_events and ev.object is not None:
+            return WatchEvent(ev.type, sanitize.freeze(ev.object),
+                              ev.resource_version)
+        return ev
 
     def set_waker(self, waker: Optional[Callable[[], None]]) -> None:
         """Install an on-ready callback, fired on every push and on close.
@@ -213,7 +225,14 @@ class ObjectStore:
     def __init__(self, name: str = "store", *, backlog: int = 8192,
                  bookmark_every: int = 256):
         self.name = name
-        self._lock = threading.RLock()
+        # REPRO_SANITIZE=1 (captured at construction): copy=False reads
+        # leave as deep-frozen proxies and the store lock gets a hold-time
+        # watchdog. Off: zero-cost, behavior byte-identical.
+        self._sanitize = sanitize.enabled()
+        self._lock: Any = threading.RLock()
+        if self._sanitize:
+            self._lock = sanitize.WatchdogLock(self._lock,
+                                               f"ObjectStore({name})._lock")
         self._objects: Dict[Key, Any] = {}
         self._rv = 0
         # per-kind and per-(kind, namespace) indexes: list/count/page touch
@@ -470,6 +489,8 @@ class ObjectStore:
         with self._lock:
             _, snap = self._snapshot_locked(kind, namespace)
         if not copy:
+            if self._sanitize:
+                return sanitize.freeze_all(snap)
             return list(snap)
         return [deepcopy_obj(o) for o in snap]
 
@@ -494,7 +515,12 @@ class ObjectStore:
             rv, snap, pos = (continue_token.rv, continue_token._snap,
                              continue_token._pos)
         chunk = snap[pos:pos + limit]
-        page = [deepcopy_obj(o) for o in chunk] if copy else list(chunk)
+        if copy:
+            page = [deepcopy_obj(o) for o in chunk]
+        elif self._sanitize:
+            page = sanitize.freeze_all(chunk)
+        else:
+            page = list(chunk)
         nxt = pos + limit
         token = (ContinueToken(rv, snap, nxt) if nxt < len(snap) else None)
         return page, token, rv
@@ -534,7 +560,8 @@ class ObjectStore:
                     f"{kind} rv {from_rv} evicted from backlog "
                     f"(oldest resumable: {self._evicted_rv.get(kind, 0)})")
             w = _Watch(kind, namespace, maxlen=buffer,
-                       unregister=self._unregister_watch, copy_events=copy)
+                       unregister=self._unregister_watch, copy_events=copy,
+                       sanitize_events=self._sanitize)
             if from_rv is not None:
                 for ev in self._backlog.get(kind, ()):
                     if ev.resource_version <= from_rv:
@@ -556,9 +583,14 @@ class ObjectStore:
         with self._lock:
             _, snap = self._snapshot_locked(kind, namespace)
             w = _Watch(kind, namespace, unregister=self._unregister_watch,
-                       copy_events=copy)
+                       copy_events=copy, sanitize_events=self._sanitize)
             self._watches.setdefault((kind, namespace), []).append(w)
-        out = [deepcopy_obj(o) for o in snap] if copy else list(snap)
+        if copy:
+            out = [deepcopy_obj(o) for o in snap]
+        elif self._sanitize:
+            out = sanitize.freeze_all(snap)
+        else:
+            out = list(snap)
         return out, w
 
     def _unregister_watch(self, w: _Watch) -> None:

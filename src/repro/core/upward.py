@@ -176,6 +176,9 @@ class UpwardShard(Controller):
             fast, slow = self.syncer.upward.reconcile_fast(
                 tenant, [key for _, key in items], api=self.api)
         except Exception:
+            # fast path failed as a unit; fall back to per-item reconciles
+            # below, but surface the failure in metrics
+            self.metrics.inc("fast_path_errors", controller=self.name)
             fast, slow = [], [key for _, key in items]
         dur = time.monotonic() - t0
         done = time.time()

@@ -16,7 +16,7 @@ from __future__ import annotations
 import threading
 from typing import TYPE_CHECKING, Dict, Set, Tuple
 
-from .objects import Node, VirtualNode
+from .objects import Node, VirtualNode, deepcopy_obj
 from .store import AlreadyExistsError, NotFoundError
 from .upward import EventRecorder
 
@@ -53,7 +53,9 @@ class VNodeManager:
             vn = VirtualNode()
             vn.metadata.name = vname
             vn.physical_node = node.metadata.name
-            vn.status = node.status
+            # deep copy: ``node`` may be a zero-copy informer-cache ref, and
+            # the vNode must not alias the super cluster's NodeStatus
+            vn.status = deepcopy_obj(node.status)
             try:
                 tenant_plane.api.create(vn)
             except AlreadyExistsError:
@@ -98,7 +100,8 @@ class VNodeManager:
             try:
                 plane.api.update_status(
                     "VirtualNode", "", node.metadata.name,
-                    lambda vn: setattr(vn, "status", node.status))
+                    lambda vn: setattr(vn, "status",
+                                       deepcopy_obj(node.status)))
                 self.heartbeats_broadcast += 1
             except NotFoundError:
                 pass

@@ -34,9 +34,13 @@ class WakerSubscriptions:
 
     _WAKE_STRIDE = 8
 
+    # provided by the concrete queue class mixing this in
+    _cv: threading.Condition
+
     def _init_wakers(self) -> None:
         self._wakers: List[Callable[[], None]] = []
         self._waker_rr = 0
+        self.waker_errors = 0    # waker callbacks that raised
 
     def subscribe(self, waker: Callable[[], None]) -> None:
         with self._cv:
@@ -58,11 +62,13 @@ class WakerSubscriptions:
         try:
             self._wakers[self._waker_rr]()
         except Exception:
-            pass
+            # a dying waker must not block producers; count it so a
+            # wedged consumer is visible in queue metrics
+            self.waker_errors += 1
 
 
 class WorkQueue(WakerSubscriptions):
-    def __init__(self, name: str = "queue"):
+    def __init__(self, name: str = "queue") -> None:
         self.name = name
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
@@ -145,7 +151,7 @@ class WorkQueue(WakerSubscriptions):
 class RateLimiter:
     """Per-key exponential backoff (client-go ItemExponentialFailureRateLimiter)."""
 
-    def __init__(self, base: float = 0.005, cap: float = 1.0):
+    def __init__(self, base: float = 0.005, cap: float = 1.0) -> None:
         self.base, self.cap = base, cap
         self._fail: Dict[Hashable, int] = {}
         self._lock = threading.Lock()
@@ -181,7 +187,7 @@ class DelayingQueue(WorkQueue):
     queue is a no-op, so stray timers can never re-open a drained queue
     (e.g. during ``resize_shards`` or manager stop)."""
 
-    def __init__(self, name: str = "delaying"):
+    def __init__(self, name: str = "delaying") -> None:
         super().__init__(name)
         self._timers: List[threading.Timer] = []
         self._handles: List[Any] = []          # executor timer tasks

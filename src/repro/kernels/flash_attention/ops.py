@@ -372,8 +372,6 @@ def _decode_mha_seq_sharded(q, k_cache, v_cache, lengths, *, rules, seq_axis,
     from jax.sharding import PartitionSpec as P
     mesh = rules.mesh
     B, _, H, D = q.shape
-    KV = k_cache.shape[2]
-    G = H // KV
     bspec = rules.spec(("batch",))
     batch_part = bspec[0] if len(bspec) else None
 
@@ -403,7 +401,6 @@ def decode_mha_ref(q, k_cache, v_cache, lengths, *, window: int = 0,
                    softcap: float = 0.0, scale: Optional[float] = None):
     """Oracle for decode attention via the naive path."""
     B, _, H, D = q.shape
-    L = k_cache.shape[1]
     outs = []
     for b in range(B):
         t = int(lengths[b])

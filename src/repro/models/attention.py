@@ -105,7 +105,6 @@ def attn_apply(p: Dict[str, Any], x: jnp.ndarray, *, cfg: ModelConfig,
                                       impl=impl)
         else:
             # prefill into an empty cache (S tokens at positions [0, S))
-            L = cache["k"].shape[1]
             k_cache = jax.lax.dynamic_update_slice_in_dim(
                 cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
             v_cache = jax.lax.dynamic_update_slice_in_dim(

@@ -1,10 +1,29 @@
-"""Shared test configuration: optional-dependency guards.
+"""Shared test configuration: optional-dependency guards and the
+REPRO_SANITIZE reporting fixture.
 
 ``hypothesis`` is a dev-only dependency (declared in pyproject's ``dev``
 extra). When it is absent, the property-based test modules are skipped at
 collection instead of erroring the whole run.
+
+Setting ``REPRO_SANITIZE=1`` runs the whole suite under the runtime
+sanitizer (``repro.core.sanitize``): every store/executor built by a test
+hands out deep-frozen proxies for ``copy=False`` reads and arms the
+lock-hold watchdog. The session fixture below just surfaces the watchdog
+tally at the end — mutation violations already fail the offending test by
+raising ``ZeroCopyMutationError`` where they happen.
 """
 import importlib.util
+
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _sanitize_session_report():
+    yield
+    from repro.core import sanitize
+    if sanitize.enabled() and sanitize.long_hold_reports:
+        print(f"\n[sanitize] {sanitize.long_hold_reports} long lock-hold/"
+              f"quantum report(s) this session (non-fatal; see stderr)")
 
 HYPOTHESIS_TEST_MODULES = [
     "test_models.py",

@@ -150,7 +150,7 @@ def test_resize_shrink_drains_removed_shards(live_rig):
         p.api.create(mk_unit("a"))
     assert wait_for(
         lambda: super_api.store.count("WorkUnit") == len(planes))
-    moved = syncer.resize_shards(1)
+    syncer.resize_shards(1)
     assert syncer.num_shards == 1
     assert len(syncer.shard_controllers) == 1
     # every tenant must now live on shard 0

@@ -1,0 +1,28 @@
+"""vclint — repo-specific concurrency lint for the control plane.
+
+Five rules prove the three invariants ARCHITECTURE.md documents under
+"Concurrency invariants":
+
+- VCL001 lock-order violations (cycles, store-lock-under-watch-lock)
+- VCL002 blocking calls reachable from cooperative Task bodies
+- VCL003 mutation of zero-copy (``copy=False``) store references
+- VCL004 silent ``except Exception`` swallows
+- VCL005 fields written both under a lock and bare
+
+Run as ``PYTHONPATH=tools python -m vclint src`` from the repo root.
+Deliberate violations live in ``tools/vclint/baseline.txt`` (one
+fingerprint + justification per line); point suppressions use an
+inline ``# vclint: disable=VCL00X <reason>`` pragma.
+"""
+from .engine import Finding, Rule, load_baseline, run
+from .rules_blocking import BlockingCallRule
+from .rules_excepts import SilentExceptRule
+from .rules_locks import LockedElsewhereRule, LockOrderRule
+from .rules_zerocopy import ZeroCopyMutationRule
+
+ALL_RULES = [LockOrderRule, BlockingCallRule, ZeroCopyMutationRule,
+             SilentExceptRule, LockedElsewhereRule]
+
+__all__ = ["Finding", "Rule", "run", "load_baseline", "ALL_RULES",
+           "LockOrderRule", "BlockingCallRule", "ZeroCopyMutationRule",
+           "SilentExceptRule", "LockedElsewhereRule"]

@@ -1,0 +1,37 @@
+"""CLI: ``PYTHONPATH=tools python -m vclint src [--baseline FILE]``."""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from . import ALL_RULES
+from .engine import run
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.txt")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="vclint",
+        description="concurrency lint for the control plane (VCL001-005)")
+    ap.add_argument("roots", nargs="+",
+                    help="files or directories to analyze (e.g. src)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline file of accepted fingerprints "
+                         "(default: tools/vclint/baseline.txt)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report everything, ignoring the baseline")
+    ap.add_argument("--rules", default="",
+                    help="comma-separated rule ids to run (default: all)")
+    ns = ap.parse_args(argv)
+
+    wanted = {r.strip() for r in ns.rules.split(",") if r.strip()}
+    rules = [cls() for cls in ALL_RULES
+             if not wanted or cls.id in wanted]
+    baseline = None if ns.no_baseline else ns.baseline
+    return run(ns.roots, rules, baseline_path=baseline)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,135 @@
+"""vclint rule framework: findings, baseline, pragmas, and the runner.
+
+A Finding's *fingerprint* is line-number independent —
+``RULE|relpath|qualname|detail`` — so the checked-in baseline survives
+unrelated edits to the same file. Two suppression mechanisms:
+
+- ``tools/vclint/baseline.txt``: one fingerprint per line, with a
+  ``# justification`` comment (deliberate, reviewed violations);
+- an inline ``# vclint: disable=VCL00X <reason>`` pragma on the
+  flagged line (or the line above) for point suppressions.
+"""
+from __future__ import annotations
+
+import os
+import re
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+from .model import ModuleInfo, Project, build_project
+
+_PRAGMA_RE = re.compile(r"#\s*vclint:\s*disable=([A-Z0-9,]+)")
+
+
+@dataclass
+class Finding:
+    rule: str          # "VCL001"
+    relpath: str       # posix path relative to the repo root
+    line: int
+    qualname: str      # "Class.method" / "function" / "Class"
+    detail: str        # stable discriminator within the function/class
+    message: str
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.rule}|{self.relpath}|{self.qualname}|{self.detail}"
+
+    def render(self) -> str:
+        return (f"{self.relpath}:{self.line}: {self.rule} {self.message}\n"
+                f"    fingerprint: {self.fingerprint}")
+
+
+class Rule:
+    """A rule contributes findings over the whole project model."""
+
+    id = "VCL000"
+    description = ""
+
+    def check(self, project: Project) -> List[Finding]:
+        raise NotImplementedError
+
+
+def load_baseline(path: str) -> Dict[str, str]:
+    """fingerprint -> justification. Missing file = empty baseline."""
+    out: Dict[str, str] = {}
+    if not os.path.exists(path):
+        return out
+    with open(path, "r", encoding="utf-8") as f:
+        for raw in f:
+            line = raw.strip()
+            if not line or line.startswith("#"):
+                continue
+            fp, _, just = line.partition("#")
+            out[fp.strip()] = just.strip()
+    return out
+
+
+def _pragma_suppressed(mod: ModuleInfo, finding: Finding) -> bool:
+    for lineno in (finding.line, finding.line - 1):
+        idx = lineno - 1
+        if 0 <= idx < len(mod.source_lines):
+            m = _PRAGMA_RE.search(mod.source_lines[idx])
+            if m and finding.rule in m.group(1).split(","):
+                return True
+    return False
+
+
+def collect_files(roots: List[str]) -> List[Tuple[str, str]]:
+    """(relpath, source) for every .py under the given roots (or the
+    files themselves), relpaths normalized to posix relative to cwd."""
+    files: List[Tuple[str, str]] = []
+    seen = set()
+    for root in roots:
+        paths: List[str] = []
+        if os.path.isfile(root):
+            paths.append(root)
+        else:
+            for dirpath, dirnames, filenames in os.walk(root):
+                dirnames[:] = sorted(d for d in dirnames
+                                     if d not in ("__pycache__", ".git"))
+                paths.extend(os.path.join(dirpath, f)
+                             for f in sorted(filenames) if f.endswith(".py"))
+        for p in paths:
+            rel = os.path.relpath(p).replace(os.sep, "/")
+            if rel in seen:
+                continue
+            seen.add(rel)
+            with open(p, "r", encoding="utf-8") as f:
+                files.append((rel, f.read()))
+    return files
+
+
+def run(roots: List[str], rules: List[Rule],
+        baseline_path: Optional[str] = None,
+        emit: Callable[[str], None] = print) -> int:
+    """Run all rules; print findings; return a process exit code
+    (0 = only baselined/pragma'd findings, 1 = new violations)."""
+    project = build_project(collect_files(roots))
+    mods_by_path = {m.relpath: m for m in project.modules}
+    baseline = load_baseline(baseline_path) if baseline_path else {}
+
+    findings: List[Finding] = []
+    for rule in rules:
+        findings.extend(rule.check(project))
+    findings.sort(key=lambda f: (f.relpath, f.line, f.rule))
+
+    fresh: List[Finding] = []
+    used_baseline = set()
+    for f in findings:
+        mod = mods_by_path.get(f.relpath)
+        if mod is not None and _pragma_suppressed(mod, f):
+            continue
+        if f.fingerprint in baseline:
+            used_baseline.add(f.fingerprint)
+            continue
+        fresh.append(f)
+
+    for f in fresh:
+        emit(f.render())
+    stale = sorted(set(baseline) - used_baseline)
+    for fp in stale:
+        emit(f"warning: stale baseline entry (no longer triggered): {fp}")
+    n_sup = len(findings) - len(fresh)
+    emit(f"vclint: {len(fresh)} new finding(s), {n_sup} suppressed "
+         f"(baseline/pragma), {len(stale)} stale baseline entr(y/ies)")
+    return 1 if fresh else 0

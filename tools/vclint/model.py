@@ -1,0 +1,429 @@
+"""Shared static-analysis model for vclint.
+
+Builds a light-weight project model over a set of parsed Python files:
+
+- per-class info: methods, base classes, lock attributes
+  (``self._lock = threading.Lock()``-style assignments, with
+  ``Condition(self._lock)`` aliasing), and inferred attribute types
+  (``self.api = api`` where the parameter is annotated ``APIServer``);
+- best-effort call resolution (self-methods with subclass-override
+  closure, typed-attribute receivers, ``super()``, module functions,
+  and a unique-method-name fallback);
+- helpers to walk function bodies without descending into nested
+  ``def``/``lambda`` (whose bodies do not execute at the call site).
+
+The model is deliberately approximate: rules built on it aim for zero
+false positives on this repo's idioms and accept false negatives (the
+runtime sanitizer is the dynamic backstop).
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+LOCK_FACTORIES = {"Lock", "RLock", "Condition"}
+# typed as blocking primitives for VCL002's ``.wait`` / ``.join`` checks
+SYNC_FACTORIES = {"Event", "Semaphore", "BoundedSemaphore", "Barrier",
+                  "Thread", "Timer"}
+
+FuncDef = ast.FunctionDef
+
+# never resolved via the unique-name fallback: too likely to be a builtin
+# container / threading-primitive method on an untyped receiver
+_COMMON_METHOD_NAMES = {
+    "get", "set", "add", "pop", "update", "items", "keys", "values",
+    "append", "extend", "insert", "remove", "discard", "clear", "copy",
+    "sort", "reverse", "index", "count", "join", "split", "strip",
+    "wait", "notify", "notify_all", "acquire", "release", "is_set",
+    "start", "stop", "run", "close", "open", "read", "write", "send",
+    "next", "setdefault", "popleft", "popitem", "encode", "decode",
+}
+
+
+@dataclass
+class ClassInfo:
+    name: str
+    relpath: str
+    node: ast.ClassDef
+    bases: List[str] = field(default_factory=list)
+    methods: Dict[str, FuncDef] = field(default_factory=dict)
+    # attr -> "Lock" | "RLock" | "Condition"
+    lock_attrs: Dict[str, str] = field(default_factory=dict)
+    # Condition(self._lock) makes _cv an alias of _lock (same underlying lock)
+    lock_alias: Dict[str, str] = field(default_factory=dict)
+    # self.<attr> -> type string ("APIServer", "threading.Event", "list[Task]")
+    attr_types: Dict[str, str] = field(default_factory=dict)
+
+    def canonical_lock(self, attr: str) -> str:
+        seen = set()
+        while attr in self.lock_alias and attr not in seen:
+            seen.add(attr)
+            attr = self.lock_alias[attr]
+        return attr
+
+
+@dataclass
+class ModuleInfo:
+    relpath: str
+    tree: ast.Module
+    source_lines: List[str]
+    classes: Dict[str, ClassInfo] = field(default_factory=dict)
+    functions: Dict[str, FuncDef] = field(default_factory=dict)
+
+
+class Project:
+    """Model over all analyzed files, with cross-module indexes."""
+
+    def __init__(self, modules: List[ModuleInfo]):
+        self.modules = modules
+        self.classes_by_name: Dict[str, List[ClassInfo]] = {}
+        self.functions_by_name: Dict[str, List[Tuple[ModuleInfo, FuncDef]]] = {}
+        self.methods_by_name: Dict[str, List[ClassInfo]] = {}
+        for mod in modules:
+            for ci in mod.classes.values():
+                self.classes_by_name.setdefault(ci.name, []).append(ci)
+                for mname in ci.methods:
+                    bucket = self.methods_by_name.setdefault(mname, [])
+                    bucket.append(ci)
+            for fname, fn in mod.functions.items():
+                self.functions_by_name.setdefault(fname, []).append((mod, fn))
+        # transitive subclass map, by class name
+        self._subclasses: Dict[str, List[ClassInfo]] = {}
+        for mod in modules:
+            for ci in mod.classes.values():
+                for base in self._transitive_bases(ci):
+                    self._subclasses.setdefault(base, []).append(ci)
+
+    def _transitive_bases(self, ci: ClassInfo, seen: Optional[Set[str]] = None
+                          ) -> Set[str]:
+        seen = seen if seen is not None else set()
+        for b in ci.bases:
+            if b in seen:
+                continue
+            seen.add(b)
+            for parent in self.classes_by_name.get(b, []):
+                self._transitive_bases(parent, seen)
+        return seen
+
+    def subclasses(self, class_name: str) -> List[ClassInfo]:
+        return self._subclasses.get(class_name, [])
+
+    def lookup_method(self, ci: ClassInfo, mname: str
+                      ) -> Optional[Tuple[ClassInfo, FuncDef]]:
+        """MRO-ish lookup: the class, then its bases (first match wins)."""
+        if mname in ci.methods:
+            return ci, ci.methods[mname]
+        for b in ci.bases:
+            for parent in self.classes_by_name.get(b, []):
+                hit = self.lookup_method(parent, mname)
+                if hit is not None:
+                    return hit
+        return None
+
+    def attr_type(self, ci: ClassInfo, attr: str) -> Optional[str]:
+        """Inferred type of ``self.<attr>``, searching the class then bases
+        (a subclass inherits its parent's typed attributes)."""
+        if attr in ci.attr_types:
+            return ci.attr_types[attr]
+        for b in ci.bases:
+            for parent in self.classes_by_name.get(b, []):
+                t = self.attr_type(parent, attr)
+                if t is not None:
+                    return t
+        return None
+
+    def class_lock(self, ci: ClassInfo, attr: str) -> Optional[str]:
+        """Lock kind of ``self.<attr>`` searching the class then bases."""
+        if attr in ci.lock_attrs:
+            return ci.lock_attrs[attr]
+        for b in ci.bases:
+            for parent in self.classes_by_name.get(b, []):
+                kind = self.class_lock(parent, attr)
+                if kind is not None:
+                    return kind
+        return None
+
+    # -- call resolution ----------------------------------------------------
+
+    def resolve_call(self, ci: Optional[ClassInfo], call: ast.Call,
+                     local_types: Optional[Dict[str, str]] = None
+                     ) -> List[Tuple[Optional[ClassInfo], FuncDef]]:
+        """Best-effort: the function definitions a Call may dispatch to
+        (including subclass overrides for self-method calls). Empty when
+        unresolvable — rules treat that as an analysis boundary."""
+        local_types = local_types or {}
+        func = call.func
+        out: List[Tuple[Optional[ClassInfo], FuncDef]] = []
+        if isinstance(func, ast.Name):
+            # constructor or module-level function
+            for candidates in self.classes_by_name.get(func.id, []):
+                init = candidates.methods.get("__init__")
+                if init is not None:
+                    out.append((candidates, init))
+            if not out:
+                mods = self.functions_by_name.get(func.id, [])
+                out.extend((None, fn) for _, fn in mods)
+            return out
+        if not isinstance(func, ast.Attribute):
+            return out
+        mname = func.attr
+        recv = func.value
+        # super().m()
+        if (isinstance(recv, ast.Call) and isinstance(recv.func, ast.Name)
+                and recv.func.id == "super" and ci is not None):
+            for b in ci.bases:
+                for parent in self.classes_by_name.get(b, []):
+                    hit = self.lookup_method(parent, mname)
+                    if hit is not None:
+                        out.append(hit)
+            return out
+        recv_type = self._receiver_type(ci, recv, local_types)
+        if recv_type is not None and recv_type.split(".")[-1] in (
+                "Any", "object"):
+            recv_type = None        # annotated-unknown: allow the fallback
+        if recv_type == "self" and ci is not None:
+            hit = self.lookup_method(ci, mname)
+            if hit is not None:
+                out.append(hit)
+                # virtual dispatch: subclass overrides are reachable too
+                for sub in self.subclasses(hit[0].name):
+                    if mname in sub.methods:
+                        out.append((sub, sub.methods[mname]))
+            return out
+        if recv_type is not None:
+            # the receiver's type is known: resolve within it (or give up —
+            # a known non-project type like threading.Event must NOT fall
+            # through to the unique-name guess)
+            base = recv_type.split("[")[0].split(".")[-1]
+            for cand in self.classes_by_name.get(base, []):
+                hit = self.lookup_method(cand, mname)
+                if hit is not None:
+                    out.append(hit)
+                    for sub in self.subclasses(hit[0].name):
+                        if mname in sub.methods:
+                            out.append((sub, sub.methods[mname]))
+            return out
+        # unique-method-name fallback: exactly one project class defines it,
+        # and the name is distinctive (not a stdlib-collection look-alike)
+        if mname in _COMMON_METHOD_NAMES:
+            return out
+        owners = self.methods_by_name.get(mname, [])
+        if len(owners) == 1:
+            owner = owners[0]
+            out.append((owner, owner.methods[mname]))
+            for sub in self.subclasses(owner.name):
+                if mname in sub.methods:
+                    out.append((sub, sub.methods[mname]))
+        return out
+
+    def _receiver_type(self, ci: Optional[ClassInfo], recv: ast.expr,
+                       local_types: Dict[str, str]) -> Optional[str]:
+        """Type string of a call receiver, or "self", or None."""
+        if isinstance(recv, ast.Name):
+            if recv.id == "self":
+                return "self"
+            return local_types.get(recv.id)
+        if isinstance(recv, ast.Attribute):
+            # self.<attr> (one level)
+            if isinstance(recv.value, ast.Name) and recv.value.id == "self" \
+                    and ci is not None:
+                return self.attr_type(ci, recv.attr)
+            # <local>.<attr> where local's class is known
+            if isinstance(recv.value, ast.Name):
+                t = local_types.get(recv.value.id)
+                if t is not None:
+                    for cand in self.classes_by_name.get(
+                            t.split("[")[0].split(".")[-1], []):
+                        at = self.attr_type(cand, recv.attr)
+                        if at is not None:
+                            return at
+        return None
+
+
+# ---------------------------------------------------------------- construction
+
+def _ann_to_type(ann: Optional[ast.expr]) -> Optional[str]:
+    """Annotation -> type string: Name, dotted Attribute, "quoted", and
+    Optional[T] / List[T] unwrapping. None when not representable."""
+    if ann is None:
+        return None
+    if isinstance(ann, ast.Name):
+        return ann.id
+    if isinstance(ann, ast.Attribute):
+        inner = _ann_to_type(ann.value)
+        return f"{inner}.{ann.attr}" if inner else ann.attr
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        try:
+            return _ann_to_type(ast.parse(ann.value, mode="eval").body)
+        except SyntaxError:
+            return None
+    if isinstance(ann, ast.Subscript):
+        base = _ann_to_type(ann.value)
+        if base is None:
+            return None
+        tail = base.split(".")[-1]
+        if tail == "Optional":
+            return _ann_to_type(ann.slice)
+        if tail in ("List", "list"):
+            elem = _ann_to_type(ann.slice)
+            return f"list[{elem}]" if elem else None
+    return None
+
+
+def elem_type(tstr: Optional[str]) -> Optional[str]:
+    """Element type of a ``list[T]`` type string."""
+    if tstr and tstr.startswith("list[") and tstr.endswith("]"):
+        return tstr[5:-1]
+    return None
+
+
+def _factory_type(expr: ast.expr) -> Optional[str]:
+    """Type from a construction expression: ``threading.Lock()``,
+    ``SomeClass(...)``, ``a or SomeClass(...)``, ``list(x)``."""
+    if isinstance(expr, ast.BoolOp):
+        for v in expr.values:
+            t = _factory_type(v)
+            if t is not None:
+                return t
+        return None
+    if not isinstance(expr, ast.Call):
+        return None
+    f = expr.func
+    if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name) \
+            and f.value.id == "threading":
+        return f"threading.{f.attr}"
+    if isinstance(f, ast.Name):
+        if f.id in LOCK_FACTORIES | SYNC_FACTORIES:
+            return f"threading.{f.id}"
+        return f.id
+    return None
+
+
+def param_types(fn: FuncDef) -> Dict[str, str]:
+    """Annotated-parameter type table for a function."""
+    out: Dict[str, str] = {}
+    args = list(fn.args.posonlyargs) + list(fn.args.args) \
+        + list(fn.args.kwonlyargs)
+    for a in args:
+        t = _ann_to_type(a.annotation)
+        if t is not None:
+            out[a.arg] = t
+    return out
+
+
+def _collect_class(ci: ClassInfo) -> None:
+    """Fill methods, lock attrs, and attribute types for one class."""
+    for stmt in ci.node.body:
+        if isinstance(stmt, ast.FunctionDef):
+            ci.methods[stmt.name] = stmt
+        elif isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target,
+                                                            ast.Name):
+            t = _ann_to_type(stmt.annotation)
+            if t is not None:
+                ci.attr_types.setdefault(stmt.target.id, t)
+    for fn in ci.methods.values():
+        ptypes = param_types(fn)
+        for node in ast.walk(fn):
+            tgt = None
+            value = None
+            ann = None
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                tgt, value = node.targets[0], node.value
+            elif isinstance(node, ast.AnnAssign):
+                tgt, value, ann = node.target, node.value, node.annotation
+            if not (isinstance(tgt, ast.Attribute)
+                    and isinstance(tgt.value, ast.Name)
+                    and tgt.value.id == "self"):
+                continue
+            attr = tgt.attr
+            t = _ann_to_type(ann)
+            if t is None and isinstance(value, ast.Name):
+                t = ptypes.get(value.id)
+            if t is None and value is not None:
+                t = _factory_type(value)
+            if t is not None:
+                ci.attr_types.setdefault(attr, t)
+                tail = t.split(".")[-1]
+                if tail in LOCK_FACTORIES:
+                    ci.lock_attrs.setdefault(attr, tail)
+                    # Condition(self._lock): same underlying lock -> alias
+                    if (tail == "Condition" and isinstance(value, ast.Call)
+                            and value.args):
+                        arg = value.args[0]
+                        if (isinstance(arg, ast.Attribute)
+                                and isinstance(arg.value, ast.Name)
+                                and arg.value.id == "self"):
+                            ci.lock_alias[attr] = arg.attr
+
+
+def build_project(files: List[Tuple[str, str]]) -> Project:
+    """``files`` is a list of (relpath, source). Unparseable files are
+    skipped (the ruff E9 gate owns syntax errors)."""
+    modules: List[ModuleInfo] = []
+    for relpath, source in files:
+        try:
+            tree = ast.parse(source, filename=relpath)
+        except SyntaxError:
+            continue
+        mod = ModuleInfo(relpath=relpath, tree=tree,
+                         source_lines=source.splitlines())
+        for stmt in tree.body:
+            if isinstance(stmt, ast.ClassDef):
+                ci = ClassInfo(name=stmt.name, relpath=relpath, node=stmt,
+                               bases=[b.id for b in stmt.bases
+                                      if isinstance(b, ast.Name)])
+                _collect_class(ci)
+                mod.classes[ci.name] = ci
+            elif isinstance(stmt, ast.FunctionDef):
+                mod.functions[stmt.name] = stmt
+        modules.append(mod)
+    return Project(modules)
+
+
+# ------------------------------------------------------------------- traversal
+
+_SCOPE_BARRIERS = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+def walk_in_scope(node: ast.AST) -> Iterator[ast.AST]:
+    """ast.walk in document (pre-)order that does NOT descend into nested
+    def/lambda bodies (their code does not execute at this point in the
+    enclosing function)."""
+    for child in ast.iter_child_nodes(node):
+        yield child
+        if not isinstance(child, _SCOPE_BARRIERS):
+            yield from walk_in_scope(child)
+
+
+def iter_functions(mod: ModuleInfo
+                   ) -> Iterator[Tuple[str, Optional[ClassInfo], FuncDef]]:
+    """Yield (qualname, owning class or None, def) for every top-level
+    function and method in a module."""
+    for fname, fn in mod.functions.items():
+        yield fname, None, fn
+    for ci in mod.classes.values():
+        for mname, m in ci.methods.items():
+            yield f"{ci.name}.{mname}", ci, m
+
+
+def call_name(call: ast.Call) -> str:
+    """Display name of a call target ("time.sleep", ".join", "foo")."""
+    f = call.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        if isinstance(f.value, ast.Name):
+            return f"{f.value.id}.{f.attr}"
+        return f".{f.attr}"
+    return "<call>"
+
+
+def root_name(expr: ast.expr) -> Optional[str]:
+    """Left-most Name of an attribute/subscript chain (``u.status.phase``
+    -> "u"); None when the chain bottoms out in a call or literal."""
+    while isinstance(expr, (ast.Attribute, ast.Subscript)):
+        expr = expr.value
+    if isinstance(expr, ast.Name):
+        return expr.id
+    return None

@@ -1,0 +1,90 @@
+"""VCL004: silent ``except Exception`` swallows.
+
+A broad handler (``except Exception`` / ``except BaseException`` /
+bare ``except:``) is silent when its body neither re-raises, nor logs
+(``logging`` / ``logger`` / ``log`` / ``warnings`` / ``print`` /
+``traceback``), nor records a metric (a call to an ``inc`` /
+``observe``-style method or a ``+=`` onto a counter attribute), nor
+references the bound exception variable (handlers that inspect ``e``
+are making a decision, not swallowing). Narrow handlers
+(``except ConflictError:``) are the sanctioned way to express
+"this specific error is expected here" and are never flagged.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from .engine import Finding, Rule
+from .model import Project, iter_functions, walk_in_scope
+
+BROAD = {"Exception", "BaseException"}
+LOGGERS = {"logging", "logger", "log", "warnings", "traceback", "print",
+           "stderr", "stdout"}
+METRIC_METHODS = {"inc", "observe", "observe_n", "gauge", "set_gauge",
+                  "count", "record"}
+
+
+def _is_broad(handler: ast.ExceptHandler) -> bool:
+    t = handler.type
+    if t is None:
+        return True
+    if isinstance(t, ast.Name):
+        return t.id in BROAD
+    if isinstance(t, ast.Tuple):
+        return any(isinstance(e, ast.Name) and e.id in BROAD for e in t.elts)
+    return False
+
+
+def _handles(handler: ast.ExceptHandler) -> bool:
+    """True when the handler body observably reacts to the failure."""
+    name = handler.name
+    for node in ast.walk(ast.Module(body=handler.body, type_ignores=[])):
+        if isinstance(node, ast.Raise):
+            return True
+        if isinstance(node, ast.Name) and name and node.id == name:
+            return True   # inspects the exception
+        if isinstance(node, ast.AugAssign) and isinstance(node.op, ast.Add):
+            return True   # counter bump
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Name) and f.id in LOGGERS:
+                return True
+            if isinstance(f, ast.Attribute):
+                if f.attr in METRIC_METHODS or f.attr.startswith("inc_"):
+                    return True
+                root = f.value
+                while isinstance(root, ast.Attribute):
+                    root = root.value
+                if isinstance(root, ast.Name) and root.id in LOGGERS:
+                    return True
+                if f.attr in ("warning", "error", "exception", "info",
+                              "debug", "warn", "print_exc", "write"):
+                    return True
+    return False
+
+
+class SilentExceptRule(Rule):
+    id = "VCL004"
+    description = "silent except Exception swallows"
+
+    def check(self, project: Project) -> List[Finding]:
+        findings: List[Finding] = []
+        for mod in project.modules:
+            for qualname, _ci, fn in iter_functions(mod):
+                seq = 0
+                for node in walk_in_scope(fn):
+                    if not isinstance(node, ast.ExceptHandler):
+                        continue
+                    if not _is_broad(node):
+                        continue
+                    seq += 1
+                    if _handles(node):
+                        continue
+                    findings.append(Finding(
+                        self.id, mod.relpath, node.lineno, qualname,
+                        detail=f"swallow:{seq}",
+                        message=("broad except swallows the failure — "
+                                 "re-raise, log, or bump an error counter "
+                                 "(MetricsRegistry.inc)")))
+        return findings

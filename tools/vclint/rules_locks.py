@@ -1,0 +1,309 @@
+"""VCL001 lock-order violations and VCL005 locked-elsewhere fields.
+
+VCL001 builds a lock-acquisition graph: nodes are (class, lock-attr)
+pairs discovered from ``self.X = threading.Lock()/RLock()/Condition()``
+assignments (``Condition(self._lock)`` aliases collapse to one node);
+edges are added when a lock is acquired — lexically via a nested
+``with``, or transitively via a resolvable call — while another is
+held. Flagged: cycles, re-acquisition of a non-reentrant ``Lock``,
+and the repo's one configured forbidden direction (taking the store
+lock while holding a watch lock; the legal direction is documented in
+``_Watch.close``).
+
+VCL005 flags instance attributes written both under a lock and bare in
+the same class. "Under a lock" = inside a ``with self.<lock-ish>`` (or
+any attribute chain ending in a lock/cv name), or inside a method whose
+name ends in ``_locked`` (the repo convention for call-with-lock-held
+helpers). ``__init__``/``_init*`` construction is exempt.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from .engine import Finding, Rule
+from .model import (ClassInfo, FuncDef, Project, iter_functions, param_types,
+                    walk_in_scope)
+
+LockNode = Tuple[str, str]    # (class name, canonical lock attr)
+
+# The one direction the architecture forbids outright (see _Watch.close):
+# store lock -> watch lock is legal (event fan-out); the reverse deadlocks.
+FORBIDDEN_EDGES = [
+    (("_Watch", "_cv"), ("ObjectStore", "_lock"),
+     "store lock acquired while a watch lock is held (deadlocks against "
+     "the store->watch fan-out path; see _Watch.close)"),
+]
+
+
+def _lock_node_of(project: Project, ci: Optional[ClassInfo],
+                  expr: ast.expr, ptypes: Dict[str, str]
+                  ) -> Optional[LockNode]:
+    """Map a with-item context expr to a lock graph node, or None."""
+    if not isinstance(expr, ast.Attribute):
+        return None
+    owner: Optional[ClassInfo] = None
+    if isinstance(expr.value, ast.Name):
+        if expr.value.id == "self":
+            owner = ci
+        else:
+            t = ptypes.get(expr.value.id)
+            if t:
+                cands = project.classes_by_name.get(
+                    t.split("[")[0].split(".")[-1], [])
+                owner = cands[0] if cands else None
+    elif (isinstance(expr.value, ast.Attribute)
+          and isinstance(expr.value.value, ast.Name)
+          and expr.value.value.id == "self" and ci is not None):
+        # self.<attr>.<lock> — one level through a typed attribute
+        t = project.attr_type(ci, expr.value.attr)
+        if t:
+            cands = project.classes_by_name.get(
+                t.split("[")[0].split(".")[-1], [])
+            owner = cands[0] if cands else None
+    if owner is None:
+        return None
+    kind = project.class_lock(owner, expr.attr)
+    if kind is None:
+        return None
+    return (owner.name, owner.canonical_lock(expr.attr))
+
+
+class LockOrderRule(Rule):
+    id = "VCL001"
+    description = "lock-order violations (cycles / forbidden directions)"
+
+    def check(self, project: Project) -> List[Finding]:
+        self.project = project
+        self._acquires_memo: Dict[Tuple[str, str, str], Set[LockNode]] = {}
+        # edge -> first witness (relpath, line, qualname)
+        self.edges: Dict[Tuple[LockNode, LockNode],
+                         Tuple[str, int, str]] = {}
+        self.lock_kinds: Dict[LockNode, str] = {}
+        for mod in project.modules:
+            for ci in mod.classes.values():
+                for attr, kind in ci.lock_attrs.items():
+                    self.lock_kinds[(ci.name, ci.canonical_lock(attr))] = kind
+        for mod in project.modules:
+            for qualname, ci, fn in iter_functions(mod):
+                self._scan_function(mod.relpath, qualname, ci, fn)
+        return self._report()
+
+    # -- graph construction --------------------------------------------------
+
+    def _scan_function(self, relpath: str, qualname: str,
+                       ci: Optional[ClassInfo], fn: FuncDef) -> None:
+        ptypes = param_types(fn)
+        self._scan_body(relpath, qualname, ci, fn, ptypes, fn.body, [])
+
+    def _scan_body(self, relpath: str, qualname: str,
+                   ci: Optional[ClassInfo], fn: FuncDef,
+                   ptypes: Dict[str, str], body: List[ast.stmt],
+                   held: List[LockNode]) -> None:
+        for stmt in body:
+            if isinstance(stmt, ast.With):
+                nodes = [n for n in
+                         (_lock_node_of(self.project, ci, item.context_expr,
+                                        ptypes)
+                          for item in stmt.items) if n is not None]
+                for n in nodes:
+                    for h in held:
+                        self._add_edge(h, n, relpath, stmt.lineno, qualname)
+                self._scan_body(relpath, qualname, ci, fn, ptypes,
+                                stmt.body, held + nodes)
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue   # nested defs run later, not under these locks
+            else:
+                if held:
+                    self._scan_calls(relpath, qualname, ci, stmt, ptypes,
+                                     held)
+                # recurse into compound statements (if/for/try/while bodies)
+                for child_body in _sub_bodies(stmt):
+                    self._scan_body(relpath, qualname, ci, fn, ptypes,
+                                    child_body, held)
+
+    def _scan_calls(self, relpath: str, qualname: str,
+                    ci: Optional[ClassInfo], stmt: ast.stmt,
+                    ptypes: Dict[str, str], held: List[LockNode]) -> None:
+        """Edges from calls made while locks are held: every lock the
+        callee (transitively) acquires is ordered after each held lock."""
+        nodes = [stmt] if isinstance(stmt, (ast.Expr, ast.Assign,
+                                            ast.AugAssign, ast.Return,
+                                            ast.AnnAssign)) else []
+        for top in nodes:
+            for node in walk_in_scope(top):
+                if not isinstance(node, ast.Call):
+                    continue
+                for tci, tfn in self.project.resolve_call(ci, node, ptypes):
+                    for acq in self._acquired_by(tci, tfn):
+                        for h in held:
+                            self._add_edge(h, acq, relpath, node.lineno,
+                                           qualname)
+
+    def _acquired_by(self, ci: Optional[ClassInfo], fn: FuncDef,
+                     _depth: int = 0) -> Set[LockNode]:
+        """All lock nodes a function acquires, transitively (depth-capped)."""
+        key = (ci.name if ci else "", ci.relpath if ci else "", fn.name)
+        if key in self._acquires_memo:
+            return self._acquires_memo[key]
+        self._acquires_memo[key] = set()    # cycle guard
+        out: Set[LockNode] = set()
+        if _depth < 6:
+            ptypes = param_types(fn)
+            for node in walk_in_scope(fn):
+                if isinstance(node, ast.With):
+                    for item in node.items:
+                        n = _lock_node_of(self.project, ci,
+                                          item.context_expr, ptypes)
+                        if n is not None:
+                            out.add(n)
+                elif isinstance(node, ast.Call):
+                    for tci, tfn in self.project.resolve_call(ci, node,
+                                                              ptypes):
+                        out |= self._acquired_by(tci, tfn, _depth + 1)
+        self._acquires_memo[key] = out
+        return out
+
+    def _add_edge(self, src: LockNode, dst: LockNode, relpath: str,
+                  line: int, qualname: str) -> None:
+        if src == dst and self.lock_kinds.get(src) != "Lock":
+            return   # RLock/Condition re-entry is legal
+        self.edges.setdefault((src, dst), (relpath, line, qualname))
+
+    # -- reporting -----------------------------------------------------------
+
+    def _report(self) -> List[Finding]:
+        findings: List[Finding] = []
+        for (src, dst), (relpath, line, qualname) in sorted(
+                self.edges.items()):
+            if src == dst:
+                findings.append(Finding(
+                    self.id, relpath, line, qualname,
+                    detail=f"reacquire:{src[0]}.{src[1]}",
+                    message=(f"non-reentrant lock {src[0]}.{src[1]} "
+                             f"acquired while already held")))
+            for fsrc, fdst, why in FORBIDDEN_EDGES:
+                if src == fsrc and dst == fdst:
+                    findings.append(Finding(
+                        self.id, relpath, line, qualname,
+                        detail=(f"forbidden:{src[0]}.{src[1]}->"
+                                f"{dst[0]}.{dst[1]}"),
+                        message=why))
+        findings.extend(self._cycles())
+        return findings
+
+    def _cycles(self) -> List[Finding]:
+        graph: Dict[LockNode, Set[LockNode]] = {}
+        for (src, dst) in self.edges:
+            if src != dst:
+                graph.setdefault(src, set()).add(dst)
+        findings: List[Finding] = []
+        reported: Set[Tuple[LockNode, ...]] = set()
+        state: Dict[LockNode, int] = {}   # 0 unvisited / 1 on stack / 2 done
+
+        def dfs(node: LockNode, path: List[LockNode]) -> None:
+            state[node] = 1
+            path.append(node)
+            for nxt in sorted(graph.get(node, ())):
+                if state.get(nxt, 0) == 1:
+                    cyc = tuple(sorted(path[path.index(nxt):]))
+                    if cyc not in reported:
+                        reported.add(cyc)
+                        edge = (path[-1], nxt)
+                        relpath, line, qualname = self.edges[edge]
+                        names = " -> ".join(f"{c}.{a}" for c, a in cyc)
+                        findings.append(Finding(
+                            self.id, relpath, line, qualname,
+                            detail=f"cycle:{names}",
+                            message=f"lock-order cycle: {names}"))
+                elif state.get(nxt, 0) == 0:
+                    dfs(nxt, path)
+            path.pop()
+            state[node] = 2
+
+        for node in sorted(graph):
+            if state.get(node, 0) == 0:
+                dfs(node, [])
+        return findings
+
+
+def _sub_bodies(stmt: ast.stmt) -> List[List[ast.stmt]]:
+    out: List[List[ast.stmt]] = []
+    for name in ("body", "orelse", "finalbody"):
+        b = getattr(stmt, name, None)
+        if isinstance(b, list) and b and isinstance(b[0], ast.stmt):
+            out.append(b)
+    for h in getattr(stmt, "handlers", []) or []:
+        out.append(h.body)
+    return out
+
+
+_LOCKISH = ("lock", "_cv", "mutex", "cond")
+
+
+def _is_lockish_ctx(expr: ast.expr) -> bool:
+    """with <expr>: looks like a lock acquisition (attr chain ending in a
+    lock-ish name) — VCL005's notion of a guarded region."""
+    if isinstance(expr, ast.Call):    # e.g. self._lock.acquire_timeout(...)
+        expr = expr.func
+    if isinstance(expr, ast.Attribute):
+        tail = expr.attr.lower()
+        return any(tail.endswith(s) or s in tail for s in _LOCKISH)
+    return False
+
+
+class LockedElsewhereRule(Rule):
+    id = "VCL005"
+    description = "fields written both under a lock and bare"
+
+    def check(self, project: Project) -> List[Finding]:
+        findings: List[Finding] = []
+        for mod in project.modules:
+            for ci in mod.classes.values():
+                findings.extend(self._check_class(mod.relpath, ci))
+        return findings
+
+    def _check_class(self, relpath: str, ci: ClassInfo) -> List[Finding]:
+        locked: Dict[str, List[Tuple[str, int]]] = {}
+        bare: Dict[str, List[Tuple[str, int]]] = {}
+        for mname, fn in ci.methods.items():
+            if mname == "__init__" or mname.startswith("_init"):
+                continue
+            in_locked_method = mname.endswith("_locked")
+            self._scan(fn.body, in_locked_method, mname, locked, bare)
+        findings: List[Finding] = []
+        for attr in sorted(set(locked) & set(bare)):
+            mname, line = bare[attr][0]
+            lmname, _ = locked[attr][0]
+            findings.append(Finding(
+                self.id, relpath, line, f"{ci.name}.{mname}",
+                detail=f"bare:{attr}",
+                message=(f"self.{attr} written without a lock here but "
+                         f"under a lock in {ci.name}.{lmname} — either "
+                         f"always lock it or rename the helper *_locked")))
+        return findings
+
+    def _scan(self, body: List[ast.stmt], under_lock: bool, mname: str,
+              locked: Dict[str, List[Tuple[str, int]]],
+              bare: Dict[str, List[Tuple[str, int]]]) -> None:
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if isinstance(stmt, ast.With):
+                inner = under_lock or any(
+                    _is_lockish_ctx(i.context_expr) for i in stmt.items)
+                self._scan(stmt.body, inner, mname, locked, bare)
+                continue
+            targets: List[ast.expr] = []
+            if isinstance(stmt, ast.Assign):
+                targets = stmt.targets
+            elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+                targets = [stmt.target]
+            for tgt in targets:
+                if (isinstance(tgt, ast.Attribute)
+                        and isinstance(tgt.value, ast.Name)
+                        and tgt.value.id == "self"):
+                    sink = locked if under_lock else bare
+                    sink.setdefault(tgt.attr, []).append((mname, stmt.lineno))
+            for child_body in _sub_bodies(stmt):
+                self._scan(child_body, under_lock, mname, locked, bare)

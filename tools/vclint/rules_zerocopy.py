@@ -1,0 +1,142 @@
+"""VCL003: mutation of zero-copy (``copy=False``) store references.
+
+Function-local taint tracking: a variable is tainted when bound from a
+call with a literal ``copy=False`` keyword (``list`` / ``watch`` /
+``list_and_watch`` / ``list_paged`` / ``list_all_pages`` / ``get``
+store APIs) or from ``.peek()``. Taint propagates through assignment,
+tuple unpacking, for-loop targets over tainted iterables, and
+subscript/attribute reads; it is cleansed by an explicit copy
+(``deepcopy_obj`` / ``copy.deepcopy`` / ``list()`` / ``dict()`` /
+``sorted()``). Flagged: attribute/item assignment whose target roots at
+a tainted name, and mutating-method calls (``append`` / ``update`` /
+``sort`` / ...) on tainted receivers.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from .engine import Finding, Rule
+from .model import Project, iter_functions, root_name, walk_in_scope
+
+TAINT_SOURCES = {"list", "watch", "list_and_watch", "list_page",
+                 "list_paged", "list_all_pages", "get"}
+PEEK_SOURCES = {"peek"}
+MUTATORS = {"append", "extend", "insert", "remove", "pop", "clear", "sort",
+            "reverse", "update", "setdefault", "popitem", "add", "discard",
+            "set_condition", "__setitem__"}
+CLEANSERS = {"deepcopy_obj", "deepcopy", "list", "dict", "sorted", "tuple",
+             "set", "frozenset", "copy_obj"}
+
+
+def _has_copy_false(call: ast.Call) -> bool:
+    return any(kw.arg == "copy" and isinstance(kw.value, ast.Constant)
+               and kw.value.value is False for kw in call.keywords)
+
+
+def _is_taint_source(call: ast.Call) -> bool:
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        if f.attr in PEEK_SOURCES:
+            return True
+        if f.attr in TAINT_SOURCES and _has_copy_false(call):
+            return True
+    return False
+
+
+def _is_cleanser(call: ast.Call) -> bool:
+    f = call.func
+    name = f.id if isinstance(f, ast.Name) else (
+        f.attr if isinstance(f, ast.Attribute) else "")
+    return name in CLEANSERS
+
+
+class ZeroCopyMutationRule(Rule):
+    id = "VCL003"
+    description = "mutation of copy=False (zero-copy) store references"
+
+    def check(self, project: Project) -> List[Finding]:
+        findings: List[Finding] = []
+        for mod in project.modules:
+            for qualname, _ci, fn in iter_functions(mod):
+                findings.extend(self._check_fn(mod.relpath, qualname, fn))
+        return findings
+
+    def _check_fn(self, relpath: str, qualname: str,
+                  fn: ast.FunctionDef) -> List[Finding]:
+        tainted: Set[str] = set()
+        findings: List[Finding] = []
+
+        def expr_tainted(expr: ast.expr) -> bool:
+            if isinstance(expr, ast.Call):
+                if _is_taint_source(expr):
+                    return True
+                if _is_cleanser(expr):
+                    return False
+                return False
+            if isinstance(expr, (ast.Attribute, ast.Subscript, ast.Name,
+                                 ast.Starred)):
+                r = root_name(expr)
+                return r is not None and r in tainted
+            if isinstance(expr, ast.IfExp):
+                return expr_tainted(expr.body) or expr_tainted(expr.orelse)
+            return False
+
+        def bind(target: ast.expr, value_tainted: bool) -> None:
+            if isinstance(target, ast.Name):
+                if value_tainted:
+                    tainted.add(target.id)
+                else:
+                    tainted.discard(target.id)
+            elif isinstance(target, (ast.Tuple, ast.List)):
+                for elt in target.elts:
+                    bind(elt, value_tainted)
+            elif isinstance(target, ast.Starred):
+                bind(target.value, value_tainted)
+
+        # statement-ordered walk (taint is flow-insensitive within loops but
+        # assignment order matters for the common straight-line cases)
+        for node in walk_in_scope(fn):
+            if isinstance(node, ast.Assign):
+                vt = expr_tainted(node.value)
+                for tgt in node.targets:
+                    if isinstance(tgt, (ast.Name, ast.Tuple, ast.List,
+                                        ast.Starred)):
+                        bind(tgt, vt)
+                    elif isinstance(tgt, (ast.Attribute, ast.Subscript)):
+                        r = root_name(tgt)
+                        if r in tainted:
+                            findings.append(self._finding(
+                                relpath, qualname, node.lineno,
+                                f"assign:{r}",
+                                f"assignment into zero-copy ref '{r}'"))
+            elif isinstance(node, ast.AugAssign):
+                tgt = node.target
+                if isinstance(tgt, (ast.Attribute, ast.Subscript)):
+                    r = root_name(tgt)
+                    if r in tainted:
+                        findings.append(self._finding(
+                            relpath, qualname, node.lineno,
+                            f"augassign:{r}",
+                            f"augmented assignment into zero-copy ref "
+                            f"'{r}'"))
+            elif isinstance(node, ast.For):
+                bind(node.target, expr_tainted(node.iter))
+            elif isinstance(node, ast.Call):
+                f = node.func
+                if isinstance(f, ast.Attribute) and f.attr in MUTATORS:
+                    r = root_name(f.value)
+                    if r is not None and r in tainted:
+                        findings.append(self._finding(
+                            relpath, qualname, node.lineno,
+                            f"mutate:{r}.{f.attr}",
+                            f"mutating call .{f.attr}() on zero-copy "
+                            f"ref '{r}'"))
+        return findings
+
+    def _finding(self, relpath: str, qualname: str, line: int,
+                 detail: str, what: str) -> Finding:
+        return Finding(
+            self.id, relpath, line, qualname, detail=detail,
+            message=(f"{what} — copy=False returns shared READ-ONLY store "
+                     f"state; deepcopy_obj() it before mutating"))
