@@ -1,0 +1,433 @@
+"""Mixed-tenant serving storm -> BENCH_serving.json.
+
+Three phases over the serving data plane (ISSUE 8's tentpole):
+
+- ``throughput`` — the fused-admission engine vs. the seed engine
+  (embedded below verbatim-in-spirit: per-request eager prefill + an
+  unjitted whole-tree ``.at[slot:slot+1].set`` rescatter of the FULL slot
+  cache per admission) at equal slot counts on the same request storm.
+  Records steady-state decode throughput (tokens/s after a compile
+  warmup), admission-path counters (the seed copies the whole cache once
+  per admit; the fused engine's ``full_cache_copies`` stays 0), and
+  host-sync counts. ``--smoke`` gates fused >= 2x seed tokens/s.
+- ``isolation`` — the fig11 story on the data plane, through a real
+  :class:`~repro.serving.host.ServingFleet` (engine replicas as
+  WorkUnits on a live framework): a steady tenant's paced requests ride
+  alongside a greedy tenant's flood. Records the steady tenant's solo
+  vs. under-flood TTFT percentiles under WRR admission, plus the
+  ``fair=False`` FIFO contrast. ``--smoke`` gates the steady tenant's
+  p99 TTFT under flood within 3x its solo run (with a small absolute
+  floor: sub-50 ms TTFTs are timer/park-latency noise on shared CI).
+- ``autoscale`` — the fourth actuator closed-loop: a request flood on a
+  1-replica fleet must make the autoscaler grow engine replicas via
+  WorkUnit creation, and the fleet drain back down after idle cooldown.
+  ``--smoke`` asserts at least one engine-replica up-decision and that
+  every request still completed.
+
+``python -m benchmarks.serving_storm [--smoke]`` appends a record (git
+sha + timestamp) to the tracked ``BENCH_serving.json`` history; smoke
+runs land in ``latest_smoke``.
+"""
+from __future__ import annotations
+
+import datetime
+import json
+import statistics
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core import ScalingPolicy, VirtualClusterFramework
+from repro.models import decode_step, init_cache, init_params, prefill
+from repro.serving import (ContinuousBatcher, GenerationEngine, Request,
+                           ServingFleet, SlotScheduler)
+
+from .syncer_shards import _append_history, _git_sha
+
+OUT_PATH = "BENCH_serving.json"
+F32 = jnp.float32
+MAX_LEN = 64
+PROMPT_LEN = 8      # one admission bucket: every prompt pads to 8
+
+
+# --------------------------------------------------------------- seed engine
+
+class SeedGenerationEngine:
+    """The pre-ISSUE-8 engine, embedded for the A/B: one eager per-request
+    prefill per admission followed by an unjitted whole-tree
+    ``.at[slot:slot+1].set`` — an O(slots*max_len) copy of the ENTIRE slot
+    cache per admitted request — and a decode step that syncs the host
+    once per step but rebuilds its inputs in numpy each time."""
+
+    def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 512,
+                 compute_dtype=jnp.bfloat16):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.compute_dtype = compute_dtype
+        self.cache = init_cache(cfg, slots, max_len, enc_len=max_len)
+        self.lengths = np.zeros((slots,), np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * slots
+        self._decode = jax.jit(
+            lambda p, t, c, l: decode_step(p, cfg, t, c, l,
+                                           compute_dtype=compute_dtype))
+        self.steps = 0
+        self.admitted = 0
+        self.full_cache_copies = 0
+
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def admit_many(self, reqs: List[Request]) -> List[Request]:
+        take = []
+        for req in reqs:
+            free = self.free_slots()
+            if not free:
+                break
+            slot = free[0]
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+            row_cache = init_cache(self.cfg, 1, self.max_len,
+                                   enc_len=self.max_len)
+            logits, row_cache, row_len = prefill(
+                self.params, self.cfg, prompt, row_cache,
+                compute_dtype=self.compute_dtype)
+            self.cache = jax.tree.map(
+                lambda c, rc: c.at[:, slot:slot + 1].set(rc.astype(c.dtype)),
+                self.cache, row_cache)
+            self.full_cache_copies += 1
+            self.admitted += 1
+            self.lengths[slot] = int(row_len[0])
+            now = time.monotonic()
+            req.tokens.append(int(jnp.argmax(logits[0, -1, :self.cfg.vocab])))
+            req.admitted_at = req.first_token_at = now
+            self.slot_req[slot] = req
+            take.append(req)
+        return take
+
+    def step(self) -> List[Request]:
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return []
+        last = np.zeros((self.slots, 1), np.int32)
+        for i in active:
+            last[i, 0] = self.slot_req[i].tokens[-1]
+        call_lengths = jnp.asarray(self.lengths + 1, jnp.int32)
+        logits, self.cache, _ = self._decode(
+            self.params, jnp.asarray(last), self.cache, call_lengths)
+        self.steps += 1
+        toks = np.asarray(jnp.argmax(logits[:, 0, :self.cfg.vocab], axis=-1))
+        finished = []
+        for i in active:
+            req = self.slot_req[i]
+            self.lengths[i] += 1
+            req.tokens.append(int(toks[i]))
+            if (len(req.tokens) >= req.max_new_tokens
+                    or self.lengths[i] >= self.max_len - 1):
+                req.done = True
+                req.finished_at = time.monotonic()
+                finished.append(req)
+                self.slot_req[i] = None
+                self.lengths[i] = 0
+        return finished
+
+    def active_slots(self) -> int:
+        return sum(1 for r in self.slot_req if r is not None)
+
+    def counters(self) -> Dict[str, int]:
+        return {"steps": self.steps, "admitted": self.admitted,
+                "full_cache_copies": self.full_cache_copies}
+
+
+# ------------------------------------------------------------------ helpers
+
+def _model():
+    cfg = reduced(get_config("qwen2-7b"), n_layers=2)
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _prompts(n: int, vocab: int, seed: int = 0) -> List[np.ndarray]:
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, PROMPT_LEN).astype(np.int32)
+            for _ in range(n)]
+
+
+def _pct(vals: List[float], p: float) -> float:
+    if not vals:
+        return 0.0
+    s = sorted(vals)
+    return s[min(len(s) - 1, int(len(s) * p))]
+
+
+def _drain(engine: Any, reqs: List[Request]) -> None:
+    """Drive one engine (seed or fused) through a request list via the
+    shared drive shape: admit into free slots, then step."""
+    queue = list(reqs)
+    while queue or engine.active_slots():
+        free = len(engine.free_slots())
+        if free and queue:
+            admitted = engine.admit_many(queue[:free])
+            queue = queue[len(admitted):]
+        engine.step()
+
+
+# ------------------------------------------------------------ phase 1: A/B
+
+def _run_throughput(cfg, params, slots: int, n_requests: int,
+                    max_new: int) -> Dict:
+    """Same storm through both engines at equal slots; tokens/s measured
+    after a warmup pass absorbs compilation for both."""
+    out: Dict[str, Any] = {"slots": slots, "requests": n_requests,
+                           "max_new_tokens": max_new}
+    for name, mk in (
+            ("seed", lambda: SeedGenerationEngine(
+                cfg, params, slots=slots, max_len=MAX_LEN,
+                compute_dtype=F32)),
+            ("fused", lambda: GenerationEngine(
+                cfg, params, slots=slots, max_len=MAX_LEN,
+                compute_dtype=F32))):
+        engine = mk()
+        # warmup: compile prefill/decode (and every admit batch width k for
+        # the fused path) outside the timed window
+        warm = [Request(1000 + i, p, max_new_tokens=2) for i, p in
+                enumerate(_prompts(slots, cfg.vocab, seed=9))]
+        for k in range(1, slots + 1):
+            _drain(engine, warm[:k])
+            for r in warm[:k]:
+                r.tokens.clear()
+                r.done = False
+        reqs = [Request(i, p, max_new_tokens=max_new)
+                for i, p in enumerate(_prompts(n_requests, cfg.vocab))]
+        t0 = time.monotonic()
+        _drain(engine, reqs)
+        wall = time.monotonic() - t0
+        tokens = sum(len(r.tokens) for r in reqs)
+        assert all(r.done and len(r.tokens) == max_new for r in reqs)
+        out[name] = {"wall_s": wall, "tokens": tokens,
+                     "tokens_per_s": tokens / wall,
+                     "counters": engine.counters()}
+    out["fused_over_seed"] = (out["fused"]["tokens_per_s"]
+                              / out["seed"]["tokens_per_s"])
+    return out
+
+
+# ----------------------------------------------------- phase 2: isolation
+
+def _warm_fleet_traces(cfg, params, slots: int) -> None:
+    """Compile the admit/step kernels for the fleet engines' slot count
+    (jit traces key on the cache's leading slot dim and the admit batch
+    width) on a throwaway engine, so no fleet phase pays compile time
+    inside a timed window."""
+    eng = GenerationEngine(cfg, params, slots=slots, max_len=MAX_LEN,
+                           compute_dtype=F32)
+    for k in range(1, slots + 1):
+        reqs = [Request(100 + i, p, max_new_tokens=3) for i, p in
+                enumerate(_prompts(k, cfg.vocab, seed=9))]
+        _drain(eng, reqs)
+
+def _fleet_fw(cfg, params, *, slots: int, replicas: int, fair: bool,
+              autoscale: bool = False,
+              policy: Optional[ScalingPolicy] = None):
+    fleet = ServingFleet(
+        lambda: GenerationEngine(cfg, params, slots=slots, max_len=MAX_LEN,
+                                 compute_dtype=F32),
+        replicas=replicas, fair=fair, scan_interval=0.05)
+    fw = VirtualClusterFramework(
+        num_nodes=max(2, replicas), scan_interval=0.0,
+        heartbeat_interval=3600, autoscale=autoscale,
+        autoscale_policy=policy, autoscale_interval=0.05)
+    fleet.attach(fw)
+    return fleet, fw
+
+
+def _wait_live(fleet, n: int, timeout: float = 30.0) -> None:
+    deadline = time.monotonic() + timeout
+    while fleet.live_replicas() < n:
+        if time.monotonic() > deadline:
+            raise TimeoutError(f"{fleet.live_replicas()}/{n} replicas live")
+        time.sleep(0.005)
+
+
+def _steady_ttfts(fleet, cfg, n: int, pace_s: float,
+                  max_new: int) -> List[float]:
+    uids = []
+    for p in _prompts(n, cfg.vocab, seed=3):
+        uids.append(fleet.submit("steady", p, max_new_tokens=max_new))
+        time.sleep(pace_s)
+    deadline = time.monotonic() + 120
+    while not all(uid in fleet.completed for uid in uids):
+        if time.monotonic() > deadline:
+            raise TimeoutError("steady requests did not finish")
+        time.sleep(0.01)
+    done = dict(fleet.completed)
+    return [done[uid].first_token_at - done[uid].submitted_at
+            for uid in uids]
+
+
+def _run_isolation_mode(cfg, params, fair: bool, steady_n: int,
+                        greedy_n: int, max_new: int) -> Dict:
+    """One fleet per mode: the steady tenant runs solo first (its baseline
+    TTFT on this fleet), then again under the greedy tenant's flood."""
+    fleet, fw = _fleet_fw(cfg, params, slots=2, replicas=1, fair=fair)
+    with fw:
+        fleet.register_tenant("steady")
+        fleet.register_tenant("greedy")
+        _wait_live(fleet, 1)
+        # traces are pre-warmed by _warm_fleet_traces; this just exercises
+        # the submit -> scheduler -> replica path once before timing
+        for p in _prompts(2, cfg.vocab, seed=8):
+            fleet.submit("steady", p, max_new_tokens=2)
+        fleet.wait_completed(2, timeout=120)
+        solo = _steady_ttfts(fleet, cfg, steady_n, pace_s=0.02,
+                             max_new=max_new)
+        # the flood: greedy dumps its whole backlog, steady keeps pacing
+        for p in _prompts(greedy_n, cfg.vocab, seed=4):
+            fleet.submit("greedy", p, max_new_tokens=max_new)
+        flood = _steady_ttfts(fleet, cfg, steady_n, pace_s=0.02,
+                              max_new=max_new)
+        greedy_pending_peak = greedy_n
+        snap = fw.metrics.snapshot()
+        tokens_by_tenant = {
+            t: snap["counters"].get(f"serving_tokens_total{{tenant={t}}}",
+                                    0.0)
+            for t in ("steady", "greedy")}
+    return {"fair": fair,
+            "solo_ttft_s": {"mean": statistics.mean(solo),
+                            "p50": _pct(solo, 0.5), "p99": _pct(solo, 0.99)},
+            "flood_ttft_s": {"mean": statistics.mean(flood),
+                             "p50": _pct(flood, 0.5),
+                             "p99": _pct(flood, 0.99)},
+            "flood_over_solo_p99": (_pct(flood, 0.99)
+                                    / max(_pct(solo, 0.99), 1e-9)),
+            "greedy_backlog": greedy_pending_peak,
+            "tokens_by_tenant": tokens_by_tenant}
+
+
+# ----------------------------------------------------- phase 3: autoscale
+
+def _run_autoscale(cfg, params, n_requests: int, max_new: int) -> Dict:
+    """A flood big enough to hold the per-replica backlog above the up
+    threshold for several autoscaler ticks (hysteresis=2 at 50 ms)."""
+    policy = ScalingPolicy(
+        min_engine_replicas=1, max_engine_replicas=3,
+        engine_up_pending=2.0, engine_down_pending=0.25,
+        engine_up_ttft_s=30.0, hysteresis=2,
+        up_cooldown_s=0.1, down_cooldown_s=1.0, window_s=1.5)
+    fleet, fw = _fleet_fw(cfg, params, slots=2, replicas=1, fair=True,
+                          autoscale=True, policy=policy)
+    with fw:
+        fleet.register_tenant("storm")
+        _wait_live(fleet, 1)
+        # traces pre-warmed; one round through the fleet path off the clock
+        for p in _prompts(2, cfg.vocab, seed=8):
+            fleet.submit("storm", p, max_new_tokens=2)
+        fleet.wait_completed(2, timeout=120)
+        t0 = time.monotonic()
+        for p in _prompts(n_requests, cfg.vocab, seed=5):
+            fleet.submit("storm", p, max_new_tokens=max_new)
+        fleet.wait_completed(2 + n_requests, timeout=180)
+        wall = time.monotonic() - t0
+        events = [e for e in fw.autoscaler.scale_events()
+                  if e["actuator"] == "engine_replicas"]
+        ups = sum(1 for e in events if e["direction"] == "up")
+        peak = max([e["to"] for e in events if e["direction"] == "up"],
+                   default=1)
+        # idle: the down-cooldown returns the fleet to its floor
+        deadline = time.monotonic() + 60
+        while fleet.desired_replicas > 1 and time.monotonic() < deadline:
+            time.sleep(0.05)
+        completed = sum(1 for r in fleet.completed.values() if r.done)
+    return {"requests": n_requests, "wall_s": wall,
+            "engine_ups": ups, "peak_replicas": peak,
+            "final_desired_replicas": fleet.desired_replicas,
+            "completed": completed}
+
+
+# ------------------------------------------------------------------- driver
+
+def run(smoke: bool = False, out_path: str = OUT_PATH) -> Dict:
+    cfg, params = _model()
+    slots = 4 if smoke else 8
+    n_requests, max_new = (24, 8) if smoke else (96, 16)
+    record: Dict[str, Any] = {
+        "git_sha": _git_sha(),
+        "timestamp": datetime.datetime.now(datetime.timezone.utc)
+                     .isoformat(timespec="seconds"),
+        "config": {"smoke": smoke, "slots": slots, "max_len": MAX_LEN,
+                   "prompt_len": PROMPT_LEN, "requests": n_requests,
+                   "max_new_tokens": max_new},
+    }
+
+    print(f"== throughput: seed vs fused, slots={slots}, "
+          f"{n_requests} reqs x {max_new} tokens")
+    thr = _run_throughput(cfg, params, slots, n_requests, max_new)
+    record["throughput"] = thr
+    print(f"   seed  {thr['seed']['tokens_per_s']:8.1f} tok/s  "
+          f"(full_cache_copies={thr['seed']['counters']['full_cache_copies']})")
+    print(f"   fused {thr['fused']['tokens_per_s']:8.1f} tok/s  "
+          f"(full_cache_copies="
+          f"{thr['fused']['counters']['full_cache_copies']}, "
+          f"host_syncs={thr['fused']['counters']['host_syncs']})")
+    print(f"   fused/seed = {thr['fused_over_seed']:.2f}x")
+
+    steady_n, greedy_n = (8, 24) if smoke else (16, 64)
+    _warm_fleet_traces(cfg, params, slots=2)   # fleet engines run 2 slots
+    print(f"== isolation: steady x{steady_n} paced vs greedy flood "
+          f"x{greedy_n} (1 replica, 2 slots)")
+    iso = {"wrr": _run_isolation_mode(cfg, params, True, steady_n,
+                                      greedy_n, max_new),
+           "fifo": _run_isolation_mode(cfg, params, False, steady_n,
+                                       greedy_n, max_new)}
+    record["isolation"] = iso
+    for mode, r in iso.items():
+        print(f"   {mode:4s} solo p99 {r['solo_ttft_s']['p99']*1e3:7.1f}ms  "
+              f"flood p99 {r['flood_ttft_s']['p99']*1e3:7.1f}ms  "
+              f"ratio {r['flood_over_solo_p99']:.2f}x")
+
+    a_requests, a_max_new = (48, 24) if smoke else (96, 32)
+    print(f"== autoscale: {a_requests} request flood on 1-replica fleet")
+    auto = _run_autoscale(cfg, params, a_requests, a_max_new)
+    record["autoscale"] = auto
+    print(f"   engine ups={auto['engine_ups']} "
+          f"peak={auto['peak_replicas']} "
+          f"final={auto['final_desired_replicas']} "
+          f"completed={auto['completed']}/{auto['requests'] + 2}")
+
+    if smoke:
+        assert thr["fused_over_seed"] >= 2.0, (
+            f"fused engine only {thr['fused_over_seed']:.2f}x the seed "
+            f"(gate: >= 2x at equal slots)")
+        assert thr["fused"]["counters"]["full_cache_copies"] == 0, \
+            "fused admission rescatter-copied the full KV cache"
+        assert (thr["seed"]["counters"]["full_cache_copies"]
+                == thr["seed"]["counters"]["admitted"]), \
+            "seed counter wiring broken: expected one full copy per admit"
+        wrr = iso["wrr"]
+        # absolute floor absorbs timer/park noise when solo TTFT is tiny
+        limit = 3.0 * max(wrr["solo_ttft_s"]["p99"], 0.05)
+        assert wrr["flood_ttft_s"]["p99"] <= limit, (
+            f"steady tenant p99 TTFT {wrr['flood_ttft_s']['p99']:.3f}s "
+            f"exceeds {limit:.3f}s under greedy flood (WRR gate)")
+        assert auto["engine_ups"] >= 1, \
+            "autoscaler never grew the engine-replica fleet"
+        assert auto["completed"] >= auto["requests"] + 2, \
+            "autoscale ramp dropped serving requests"
+        print("smoke gates passed")
+
+    _append_history(out_path, record,
+                    "latest_smoke" if smoke else "latest")
+    print(f"appended record to {out_path}")
+    return record
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out)

@@ -1,70 +1,83 @@
-"""Multi-tenant serving: two tenants share one GenerationEngine fleet.
+"""Multi-tenant serving through the control->data plane bridge.
 
-Each tenant registers a Service (router injects its routing rules into the
-serving WorkUnits' guest tables before they start — the paper's enhanced-
-kubeproxy path), then streams generation requests through the continuous
-batcher. Fair queuing keeps the bursty tenant from starving the steady one.
+A ServingFleet hosts engine replicas as WorkUnits: the SuperScheduler
+places ``engine-<i>`` units on nodes, each node agent's provider spawns a
+live GenerationEngine with a dedicated drive thread, and tenant requests
+flow through the shared per-tenant WRR SlotScheduler — so the bursty
+tenant's flood cannot starve the steady tenant's admissions, and
+per-tenant TTFT / token throughput land in the framework's metrics
+registry (where the autoscaler's engine-replica actuator reads them).
 
     PYTHONPATH=src python examples/serve_multitenant.py
 """
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced
-from repro.core import Service, VirtualClusterFramework
+from repro.core import VirtualClusterFramework
 from repro.models import init_params
-from repro.serving import ContinuousBatcher, GenerationEngine
+from repro.serving import GenerationEngine, ServingFleet
 
 
 def main():
     cfg = reduced(get_config("qwen2-7b"), n_layers=2, d_model=64, vocab=512)
     params = init_params(jax.random.PRNGKey(0), cfg)
-    engine = GenerationEngine(cfg, params, slots=4, max_len=64)
-    batcher = ContinuousBatcher(engine)
+    fleet = ServingFleet(
+        lambda: GenerationEngine(cfg, params, slots=4, max_len=64,
+                                 compute_dtype=jnp.float32),
+        replicas=2, scan_interval=0.1)
 
     fw = VirtualClusterFramework(num_nodes=2, scan_interval=0.0,
                                  heartbeat_interval=3600)
+    fleet.attach(fw)
     with fw:
-        tenants = {name: fw.add_tenant(name) for name in ("bursty", "steady")}
-        # each tenant publishes a model endpoint service
-        for name, plane in tenants.items():
-            svc = Service()
-            svc.metadata.name = f"{cfg.name}-endpoint"
-            svc.metadata.namespace = "default"
-            svc.virtual_ip = f"10.96.0.{len(name)}"
-            svc.endpoints = ["engine-0"]
-            fw.submit(plane, fw.make_unit("server", "default", chips=1,
-                                          init_gate=True))
-            plane.api.create(svc)
-            fw.wait_ready(plane, "default", "server", timeout=30)
-            u = plane.api.get("WorkUnit", "default", "server")
-            print(f"[{name}] serving unit ready on vNode {u.status.node} "
-                  f"(routing rules gated before start)")
+        # tenants register from their control planes; the steady tenant
+        # gets double WRR weight at the admission scheduler
+        bursty = fw.add_tenant("bursty")
+        steady = fw.add_tenant("steady", weight=2)
+        fleet.register_tenant(bursty)
+        fleet.register_tenant(steady)
+        while fleet.live_replicas() < 2:
+            time.sleep(0.01)
+        for u in fw.super_api.list("WorkUnit", "vc-serving"):
+            print(f"[fleet] {u.metadata.name} scheduled on "
+                  f"{u.status.node or '?'}")
 
         rng = np.random.default_rng(0)
         uids = {}
         t0 = time.monotonic()
-        # bursty tenant: 12 requests at once; steady: 4
-        for i in range(12):
-            uids[batcher.submit(rng.integers(0, cfg.vocab, 12),
-                                max_new_tokens=8)] = "bursty"
-        for i in range(4):
-            uids[batcher.submit(rng.integers(0, cfg.vocab, 12),
-                                max_new_tokens=8)] = "steady"
-        batcher.run_until_drained()
+        # bursty tenant: 12 requests at once; steady: 4 paced
+        for _ in range(12):
+            uid = fleet.submit("bursty", rng.integers(0, cfg.vocab, 12),
+                               max_new_tokens=8)
+            uids[uid] = "bursty"
+        for _ in range(4):
+            uid = fleet.submit("steady", rng.integers(0, cfg.vocab, 12),
+                               max_new_tokens=8)
+            uids[uid] = "steady"
+        done = fleet.wait_completed(len(uids), timeout=120)
         wall = time.monotonic() - t0
+
         by_tenant = {}
-        for uid, req in batcher.completed.items():
+        for uid, req in done.items():
             by_tenant.setdefault(uids[uid], []).append(
-                req.finished_at - req.submitted_at)
-        toks = sum(len(r.tokens) for r in batcher.completed.values())
-        print(f"served {len(batcher.completed)} requests / {toks} tokens "
-              f"in {wall:.2f}s ({toks/wall:.0f} tok/s)")
-        for name, lats in sorted(by_tenant.items()):
-            print(f"  {name:7s}: {len(lats)} reqs, "
-                  f"mean latency {sum(lats)/len(lats):.2f}s")
+                req.first_token_at - req.submitted_at)
+        toks = sum(len(r.tokens) for r in done.values())
+        print(f"served {len(done)} requests / {toks} tokens in {wall:.2f}s "
+              f"({toks / wall:.0f} tok/s)")
+        for name, ttfts in sorted(by_tenant.items()):
+            print(f"  {name:7s}: {len(ttfts)} reqs, "
+                  f"mean TTFT {sum(ttfts) / len(ttfts) * 1e3:.1f}ms")
+        snap = fw.metrics.snapshot()
+        for t in ("bursty", "steady"):
+            s = snap["summaries"].get(
+                f"serving_ttft_seconds{{tenant={t}}}", {})
+            print(f"  metrics[{t}]: ttft_count={s.get('count', 0):.0f} "
+                  f"tokens="
+                  f"{snap['counters'].get(f'serving_tokens_total{{tenant={t}}}', 0):.0f}")
     print("done")
 
 

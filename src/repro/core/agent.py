@@ -25,7 +25,7 @@ from typing import Any, Callable, Dict, List, Optional
 from .apiserver import APIServer
 from .objects import Node, NodeStatus, WorkUnit
 from .runtime import Controller, RetryLater
-from .store import ADDED, AlreadyExistsError, MODIFIED, NotFoundError
+from .store import ADDED, AlreadyExistsError, DELETED, MODIFIED, NotFoundError
 from .upward import EventRecorder
 from .workqueue import WorkQueue
 
@@ -151,12 +151,22 @@ class NodeAgent(Controller):
                 and unit.status.node == self.node_name
                 and unit.status.phase == "Scheduled"):
             self.queue.add((unit.metadata.namespace, unit.metadata.name))
+        elif ev_type == DELETED and unit.status.node == self.node_name:
+            # deletion of a unit this node ran: release provider resources
+            self.queue.add((unit.metadata.namespace, unit.metadata.name))
 
     def reconcile(self, item: Any) -> None:
         ns, name = item
         unit = self.unit_informer.cache.get(ns, name)
         if unit is not None:
             self._maybe_run(unit)
+            return
+        # gone from the cache: stop whatever the provider is running for it
+        # (also unblocks re-running a recreated unit with the same key)
+        key = f"{ns}/{name}" if ns else name
+        running = self._running_units.pop(key, None)
+        if running is not None:
+            self.provider.stop(running)
 
     def _maybe_run(self, unit: WorkUnit) -> None:
         if unit.status.node != self.node_name:

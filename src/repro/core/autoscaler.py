@@ -16,7 +16,13 @@ the loop over the two elastic axes the framework already exposes:
 - **vertical** — the shared cooperative executor: ready-task backlog per
   thread and quantum latency drive :meth:`CooperativeExecutor.resize(n)
   <repro.core.executor.CooperativeExecutor.resize>` (grow spawns threads,
-  shrink drains-and-retires via poison quanta).
+  shrink drains-and-retires via poison quanta);
+- **workload (data plane)** — the serving engine-replica fleet: pending
+  requests per replica and fleet-wide TTFT drive
+  :meth:`ServingFleet.resize(n) <repro.serving.host.ServingFleet.resize>`
+  (desired-state: WorkUnits are created/deleted and node agents
+  spawn/drain the live engines). Attached post-construction via
+  :meth:`Autoscaler.set_engine_fleet`, absent by default.
 
 Signal flow::
 
@@ -150,6 +156,13 @@ class ScalingPolicy:
     pool_up_backlog: float = 4.0       # p90 ready backlog per pool thread
     pool_down_backlog: float = 0.5
     pool_up_quantum_s: float = 0.05    # windowed mean quantum latency
+    # workload: serving engine-replica fleet (fourth actuator; evaluated
+    # only when a ServingFleet is attached via set_engine_fleet)
+    min_engine_replicas: int = 1
+    max_engine_replicas: int = 8
+    engine_up_pending: float = 4.0     # p90 pending requests per replica
+    engine_down_pending: float = 0.5
+    engine_up_ttft_s: float = 1.0      # windowed mean per-request TTFT
     # control-loop damping
     hysteresis: int = 2                # consecutive breaching ticks to act
     up_cooldown_s: float = 3.0
@@ -172,6 +185,10 @@ class ScalingPolicy:
 
     def clamp_pool(self, n: int) -> int:
         return max(self.min_pool, min(self.max_pool, n))
+
+    def clamp_engine(self, n: int) -> int:
+        return max(self.min_engine_replicas,
+                   min(self.max_engine_replicas, n))
 
 
 class _Actuator:
@@ -265,9 +282,16 @@ class Autoscaler(Controller):
         self.w_up_latency = SignalWindow(p.window_s, p.ewma_alpha)
         self.w_backlog = SignalWindow(p.window_s, p.ewma_alpha)
         self.w_quantum = SignalWindow(p.window_s, p.ewma_alpha)
+        self.w_engine_pending = SignalWindow(p.window_s, p.ewma_alpha)
+        self.w_engine_ttft = SignalWindow(p.window_s, p.ewma_alpha)
         self._shards_act = _Actuator("shards", p, p.clamp_shards)
         self._upward_act = _Actuator("upward_shards", p, p.clamp_upward)
         self._pool_act = _Actuator("executor_pool", p, p.clamp_pool)
+        self._engine_act = _Actuator("engine_replicas", p, p.clamp_engine)
+        # the serving data plane's engine fleet (fourth actuator); attached
+        # post-construction by ServingFleet.attach via set_engine_fleet
+        self.engine_fleet: Optional[Any] = None
+        self._prev_ttft = (0.0, 0.0)         # cumulative (sum, count)
         self.weight_retunes = 0
         # cumulative (sum, count) per shard-controller NAME: the registry
         # keeps a retired shard's summary and a re-grown shard reuses its
@@ -302,6 +326,23 @@ class Autoscaler(Controller):
         m.register_gauge("autoscaler_quantum_latency_s", self.w_quantum.ewma)
         m.register_gauge("autoscaler_ticks", lambda: self.ticks)
 
+    def set_engine_fleet(self, fleet: Any) -> None:
+        """Attach the serving fleet as the fourth actuator. Bounds widen to
+        include the fleet's configured replica count (same pristine-policy
+        treatment as the framework gives the other axes)."""
+        self.engine_fleet = fleet
+        p = self.policy
+        start = int(fleet.desired_replicas)
+        p.min_engine_replicas = min(p.min_engine_replicas, start)
+        p.max_engine_replicas = max(p.max_engine_replicas, max(start, 1))
+        m = self.metrics
+        m.register_gauge("autoscaler_target_engine_replicas",
+                         lambda: (self.engine_fleet.desired_replicas
+                                  if self.engine_fleet else 0))
+        m.register_gauge("autoscaler_engine_pending_p90",
+                         lambda: self.w_engine_pending.percentile(0.9))
+        m.register_gauge("autoscaler_engine_ttft_s", self.w_engine_ttft.ewma)
+
     def scan(self) -> int:
         """One control tick; returns the number of scaling actions taken."""
         return self.tick()
@@ -312,7 +353,7 @@ class Autoscaler(Controller):
         now = time.monotonic() if now is None else now
         self._sample(now)
         actions = (self._evaluate_shards(now) + self._evaluate_upward(now)
-                   + self._evaluate_pool(now))
+                   + self._evaluate_pool(now) + self._evaluate_engine(now))
         self._autotune_weights()
         with self._state_lock:
             self.ticks += 1
@@ -354,6 +395,22 @@ class Autoscaler(Controller):
             dq = qtot - pqt
             self._prev_quanta = (qsec, qtot)
             self.w_quantum.observe((qsec - pqs) / dq if dq > 0 else 0.0, now)
+        fleet = self.engine_fleet
+        if fleet is not None:
+            # demand signal: pending requests per live replica (a flooded
+            # scheduler with one replica must look worse than the same
+            # backlog spread over four)
+            live = max(1, int(fleet.live_replicas()))
+            self.w_engine_pending.observe(
+                fleet.scheduler.pending() / live, now)
+            # latency signal: windowed mean TTFT across the whole fleet
+            # (delta of the cumulative aggregate summary since last tick)
+            s = self.metrics.summary("serving_ttft_seconds")
+            psum, pcount = self._prev_ttft
+            dsum, dcount = s["sum"] - psum, s["count"] - pcount
+            self._prev_ttft = (s["sum"], s["count"])
+            self.w_engine_ttft.observe(
+                dsum / dcount if dcount > 0 else 0.0, now)
 
     def _evaluate_shards(self, now: float) -> int:
         p = self.policy
@@ -427,6 +484,31 @@ class Autoscaler(Controller):
                              f"quantum={quantum * 1e3:.2f}ms"))
         return 1
 
+    def _evaluate_engine(self, now: float) -> int:
+        """The fourth actuator: engine-replica fleet sizing from serving
+        backlog per replica and fleet-wide TTFT (the tenant-facing
+        data-plane axis). Actuates ``ServingFleet.resize`` — desired-state:
+        the fleet's reconcile turns it into WorkUnit create/delete."""
+        fleet = self.engine_fleet
+        if fleet is None:
+            return 0
+        p = self.policy
+        pending_p90 = self.w_engine_pending.percentile(0.9)
+        ttft = self.w_engine_ttft.ewma()
+        up = (pending_p90 > p.engine_up_pending
+              or ttft > p.engine_up_ttft_s)
+        down = (pending_p90 <= p.engine_down_pending
+                and ttft <= p.engine_up_ttft_s / 2)
+        cur = int(fleet.desired_replicas)
+        target = self._engine_act.decide(cur, up, down, now)
+        if target is None:
+            return 0
+        fleet.resize(target)
+        self._commit("engine_replicas", cur, target, now,
+                     reason=(f"pending/replica_p90={pending_p90:.1f} "
+                             f"ttft={ttft * 1e3:.1f}ms"))
+        return 1
+
     def _autotune_weights(self) -> int:
         """Feed each fair queue's fresh per-tenant wait metrics back into
         its live WRR weights, bounded to [min_factor, max_factor] x the
@@ -477,7 +559,8 @@ class Autoscaler(Controller):
                 reason: str, extra: Optional[Dict[str, Any]] = None) -> None:
         act = {"shards": self._shards_act,
                "upward_shards": self._upward_act,
-               "executor_pool": self._pool_act}[actuator]
+               "executor_pool": self._pool_act,
+               "engine_replicas": self._engine_act}[actuator]
         act.committed(now)
         direction = "up" if target > cur else "down"
         decision = {"actuator": actuator, "from": cur, "to": target,
@@ -508,18 +591,24 @@ class Autoscaler(Controller):
             "last_decision": last,
             "targets": {"shards": self.syncer.num_shards,
                         "upward_shards": self.syncer.num_upward_shards,
-                        "executor_pool": ex.pool_size if ex else None},
+                        "executor_pool": ex.pool_size if ex else None,
+                        "engine_replicas": (
+                            self.engine_fleet.desired_replicas
+                            if self.engine_fleet else None)},
             "cooldown_remaining_s": {
                 "shards": self._shards_act.cooldown_remaining(now),
                 "upward_shards": self._upward_act.cooldown_remaining(now),
                 "executor_pool": self._pool_act.cooldown_remaining(now),
+                "engine_replicas": self._engine_act.cooldown_remaining(now),
             },
             "signals": {"shard_depth": self.w_depth.state(),
                         "reconcile_latency_s": self.w_latency.state(),
                         "upward_depth": self.w_up_depth.state(),
                         "upward_latency_s": self.w_up_latency.state(),
                         "backlog_per_thread": self.w_backlog.state(),
-                        "quantum_latency_s": self.w_quantum.state()},
+                        "quantum_latency_s": self.w_quantum.state(),
+                        "engine_pending": self.w_engine_pending.state(),
+                        "engine_ttft_s": self.w_engine_ttft.state()},
             "ticks": ticks,
             "contended_resizes": contended,
             "weight_retunes": retunes,

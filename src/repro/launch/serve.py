@@ -2,6 +2,11 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --reduced \
         --requests 16 --max-new 24 --slots 4
+
+Requests are spread across two tenants through the batcher's per-tenant
+WRR slot scheduler; the report includes per-tenant TTFT and the fused
+engine's admission counters (``full_cache_copies`` stays 0: admission
+writes freed slots in place instead of rescattering the whole KV cache).
 """
 from __future__ import annotations
 
@@ -21,6 +26,7 @@ def main(argv=None) -> int:
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--tenants", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -37,18 +43,30 @@ def main(argv=None) -> int:
     batcher = ContinuousBatcher(engine)
     rng = np.random.default_rng(args.seed)
     t0 = time.monotonic()
-    for _ in range(args.requests):
+    for i in range(args.requests):
         batcher.submit(rng.integers(0, cfg.vocab, args.prompt_len),
-                       max_new_tokens=args.max_new)
+                       max_new_tokens=args.max_new,
+                       tenant=f"t{i % max(1, args.tenants)}")
     batcher.run_until_drained()
     wall = time.monotonic() - t0
-    lats = [r.finished_at - r.submitted_at for r in
-            batcher.completed.values()]
-    toks = sum(len(r.tokens) for r in batcher.completed.values())
+    done = batcher.completed.values()
+    lats = sorted(r.finished_at - r.submitted_at for r in done)
+    toks = sum(len(r.tokens) for r in done)
+    c = engine.counters()
     print(f"served {len(batcher.completed)} requests, {toks} tokens in "
           f"{wall:.2f}s ({toks/wall:.1f} tok/s); "
-          f"p50 latency {sorted(lats)[len(lats)//2]:.2f}s; "
-          f"decode steps {engine.steps}")
+          f"p50 latency {lats[len(lats)//2]:.2f}s; "
+          f"steps {c['steps']}, admit_calls {c['admit_calls']}, "
+          f"host_syncs {c['host_syncs']}, "
+          f"full_cache_copies {c['full_cache_copies']}")
+    by_tenant = {}
+    for r in done:
+        by_tenant.setdefault(r.tenant, []).append(
+            r.first_token_at - r.submitted_at)
+    for tenant, ttfts in sorted(by_tenant.items()):
+        print(f"  {tenant}: {len(ttfts)} reqs, "
+              f"mean TTFT {sum(ttfts)/len(ttfts)*1e3:.1f}ms, "
+              f"max {max(ttfts)*1e3:.1f}ms")
     return 0
 
 

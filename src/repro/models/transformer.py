@@ -408,16 +408,30 @@ def loss_fn(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig, *,
     return loss, {"loss_sum": loss_sum, "weight": w_sum}
 
 
-def prefill(params, cfg: ModelConfig, tokens, cache, *, frames=None,
-            patches=None, impl: Optional[str] = None,
+def prefill(params, cfg: ModelConfig, tokens, cache, *, lengths=None,
+            frames=None, patches=None, impl: Optional[str] = None,
             compute_dtype=jnp.bfloat16):
-    """Fill the cache with S tokens; return (last-token logits, cache, lengths)."""
+    """Fill the cache with S tokens; return (last-token logits, cache, lengths).
+
+    ``lengths`` ([B] int32, optional) marks per-row true prompt lengths for
+    right-padded ragged batches: logits are gathered at each row's last
+    *valid* position instead of S-1 and the returned lengths echo the true
+    lengths. Pad garbage beyond a row's length is masked out of decode by
+    the length-aware attention kernels (recurrent layers are NOT pad-safe —
+    callers bucket those by exact length, see ``serving.engine``).
+    """
     B, S = tokens.shape[0], tokens.shape[1]
-    lengths = jnp.full((B,), S, jnp.int32)
     h, cache = forward(params, cfg, tokens=tokens, cache=cache,
                        frames=frames, patches=patches, impl=impl,
                        compute_dtype=compute_dtype)
-    logits = logits_head(params, cfg, h[:, -1:], compute_dtype)
+    if lengths is None:
+        lengths = jnp.full((B,), S, jnp.int32)
+        h_last = h[:, -1:]
+    else:
+        lengths = jnp.asarray(lengths, jnp.int32)
+        h_last = jnp.take_along_axis(
+            h, (lengths - 1).astype(jnp.int32)[:, None, None], axis=1)
+    logits = logits_head(params, cfg, h_last, compute_dtype)
     return logits, cache, lengths
 
 

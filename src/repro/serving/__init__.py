@@ -1,2 +1,6 @@
 from .engine import ContinuousBatcher, GenerationEngine, Request, generate
-__all__ = ["GenerationEngine", "ContinuousBatcher", "Request", "generate"]
+from .host import EngineProvider, EngineReplica, ServingFleet, SERVING_NS
+from .scheduler import SlotScheduler
+__all__ = ["GenerationEngine", "ContinuousBatcher", "Request", "generate",
+           "SlotScheduler", "ServingFleet", "EngineProvider",
+           "EngineReplica", "SERVING_NS"]

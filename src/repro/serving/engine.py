@@ -1,14 +1,36 @@
-"""Serving engine: batched generation with continuous batching.
+"""Serving engine: fused batched admission + donated decode over fixed slots.
 
-``GenerationEngine`` owns jitted prefill/decode steps over a fixed slot
-budget; ``ContinuousBatcher`` packs a request queue into those slots,
-admitting new requests whenever a slot frees (per-slot lengths ride the
-decode step — the attention kernels mask by length, so ragged batches are
-exact).
+``GenerationEngine`` owns a slot-sharded KV cache and two jitted entry
+points shared (via an lru cache keyed on the hashable ``ModelConfig``)
+across every engine replica of the same model:
+
+- **fused admission** — all free slots are filled in ONE jitted call per
+  prompt-length bucket: prompts are right-padded to the bucket length,
+  prefilled as a batch, and the resulting rows are written *in place* into
+  the donated slot cache (``.at[:, slot_idx].set`` under ``donate_argnums``
+  lowers to an in-place scatter). The seed engine instead ran one eager
+  per-request prefill plus an unjitted whole-tree ``.at[slot:slot+1].set``
+  — an O(slots·max_len) copy of the full KV cache per admitted request.
+  Right-padding is exact for attention layers (the decode kernels mask by
+  ``lengths``; pad positions are never attended and are progressively
+  overwritten), but recurrent layers (mamba 'm' / rwkv 'r') fold pad
+  tokens into their state, so those patterns bucket by exact length.
+- **fused decode** — one jitted step over all slots with
+  ``donate_argnums`` on the cache and slot state, advancing every active
+  slot, computing done-flags device-side, and returning ``(tokens, done)``
+  so the host syncs ONCE per step instead of once per slot.
+
+Slot state lives on device between calls (lengths, token budgets, active
+mask, last token per slot); the host keeps only the request objects and a
+free-slot map. ``ContinuousBatcher`` fronts one engine with a thread-safe
+per-tenant WRR :class:`~repro.serving.scheduler.SlotScheduler`;
+``generate`` routes batch generation through the same engine path so there
+is a single decode implementation.
 """
 from __future__ import annotations
 
-import queue
+import functools
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
@@ -20,132 +42,300 @@ import numpy as np
 from ..models import decode_step, init_cache, prefill
 from ..models.config import ModelConfig
 
+from .scheduler import SlotScheduler
+
 
 @dataclass
 class Request:
     uid: int
     prompt: np.ndarray                  # [S] int32
     max_new_tokens: int = 16
+    tenant: str = "default"
     tokens: List[int] = field(default_factory=list)
     done: bool = False
     submitted_at: float = field(default_factory=time.monotonic)
+    admitted_at: float = 0.0
+    first_token_at: float = 0.0         # TTFT = first_token_at - submitted_at
     finished_at: float = 0.0
 
 
+# --------------------------------------------------------------- jitted core
+
+def _admit_kernel(cfg: ModelConfig, max_len: int, compute_dtype,
+                  params, cache, slot_lengths, budget, active, last,
+                  prompts, slot_idx, true_len, max_new):
+    """Prefill ``k`` right-padded prompts and write them into freed slots.
+
+    All slot-state updates are scatters at ``slot_idx`` on donated buffers;
+    the full cache is never copied. Returns the updated slot state plus the
+    first generated token per admitted row.
+    """
+    k = prompts.shape[0]
+    row_cache = init_cache(cfg, k, max_len, enc_len=max_len)
+    logits, row_cache, _ = prefill(params, cfg, prompts, row_cache,
+                                   lengths=true_len,
+                                   compute_dtype=compute_dtype)
+    first = jnp.argmax(logits[:, 0, :cfg.vocab], axis=-1).astype(jnp.int32)
+    cache = jax.tree.map(
+        lambda c, rc: c.at[:, slot_idx].set(rc.astype(c.dtype)),
+        cache, row_cache)
+    slot_lengths = slot_lengths.at[slot_idx].set(true_len)
+    # the first token is produced by the prefill itself: one unit of budget
+    # is spent on it, and a slot stays active only if budget remains and
+    # the cache can hold another token
+    budget = budget.at[slot_idx].set(max_new - 1)
+    active = active.at[slot_idx].set(
+        (max_new > 1) & (true_len < max_len - 1))
+    last = last.at[slot_idx, 0].set(first)
+    return cache, slot_lengths, budget, active, last, first
+
+
+def _step_kernel(cfg: ModelConfig, max_len: int, compute_dtype,
+                 params, cache, slot_lengths, budget, active, last):
+    """One decode step over every slot; inactive slots are masked out.
+
+    Inactive slots still flow through the batched matmuls (their writes
+    land at stale positions and are masked by ``lengths`` / overwritten at
+    the next admission), which keeps the step shape static. Done-flags are
+    reduced device-side so the host syncs once for the whole batch.
+    """
+    call_lengths = slot_lengths + 1     # new token position + 1
+    logits, cache, _ = decode_step(params, cfg, last, cache, call_lengths,
+                                   compute_dtype=compute_dtype)
+    toks = jnp.argmax(logits[:, 0, :cfg.vocab], axis=-1).astype(jnp.int32)
+    slot_lengths = jnp.where(active, slot_lengths + 1, slot_lengths)
+    budget = jnp.where(active, budget - 1, budget)
+    last = jnp.where(active[:, None], toks[:, None], last)
+    done = active & ((budget <= 0) | (slot_lengths >= max_len - 1))
+    active = active & ~done
+    return cache, slot_lengths, budget, active, last, toks, done
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled(cfg: ModelConfig, max_len: int, compute_dtype):
+    """Jitted admit/step shared by every engine of this (cfg, max_len):
+    replicas reuse traces instead of recompiling per instance."""
+    admit = jax.jit(functools.partial(_admit_kernel, cfg, max_len,
+                                      compute_dtype),
+                    donate_argnums=(1, 2, 3, 4, 5))
+    step = jax.jit(functools.partial(_step_kernel, cfg, max_len,
+                                     compute_dtype),
+                   donate_argnums=(1, 2, 3, 4, 5))
+    return admit, step
+
+
 class GenerationEngine:
-    """Slot-based engine: per-request prefill into a slot, joint decode of
-    all active slots. ``lengths[i]`` = #cache entries used by slot i."""
+    """Slot-based engine: fused bucketed admission, donated joint decode.
+
+    NOT thread-safe by itself: exactly one drive thread may call
+    ``admit_many``/``step``; put a :class:`ContinuousBatcher` (or a fleet
+    replica's drive thread) in front for concurrent submitters.
+    """
 
     def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 4,
-                 max_len: int = 512):
+                 max_len: int = 512, compute_dtype=jnp.bfloat16):
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
+        self.compute_dtype = compute_dtype
         self.cache = init_cache(cfg, slots, max_len, enc_len=max_len)
+        # device-resident slot state (donated through every fused call)
+        self._slot_lengths = jnp.zeros((slots,), jnp.int32)
+        self._budget = jnp.zeros((slots,), jnp.int32)
+        self._active = jnp.zeros((slots,), bool)
+        self._last = jnp.zeros((slots, 1), jnp.int32)
+        # host mirrors (authoritative for slot occupancy)
         self.lengths = np.zeros((slots,), np.int32)
         self.slot_req: List[Optional[Request]] = [None] * slots
-        self._decode = jax.jit(
-            lambda p, t, c, l: decode_step(p, cfg, t, c, l))
+        self._admit_fn, self._step_fn = _compiled(cfg, max_len, compute_dtype)
+        # recurrent state folds pad tokens in: bucket by exact length there
+        self._exact_buckets = any(ch in cfg.layer_pattern for ch in "mr")
+        # perf counters (benchmarks read these)
         self.steps = 0
+        self.admit_calls = 0            # jitted admit invocations
+        self.admitted = 0               # requests admitted
+        self.full_cache_copies = 0      # whole-cache rescatter copies: stays 0
+        self.host_syncs = 0             # device->host transfers
+
+    # -- slots -------------------------------------------------------------
 
     def free_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
 
-    def admit(self, req: Request) -> bool:
+    def _bucket(self, n: int) -> int:
+        if self._exact_buckets:
+            return n
+        b = 8
+        while b < n:
+            b <<= 1
+        return min(b, self.max_len - 1)
+
+    # -- admission ---------------------------------------------------------
+
+    def admit_many(self, reqs: List[Request]) -> List[Request]:
+        """Admit up to ``len(free_slots())`` requests, one jitted call (and
+        one host sync) per prompt-length bucket. Returns the requests
+        admitted; those with ``done`` set finished at admission (their
+        single-token budget was spent by the prefill)."""
         free = self.free_slots()
-        if not free:
-            return False
-        slot = free[0]
-        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
-        row_cache = init_cache(self.cfg, 1, self.max_len, enc_len=self.max_len)
-        logits, row_cache, row_len = prefill(self.params, self.cfg, prompt,
-                                             row_cache)
-        self.cache = jax.tree.map(
-            lambda c, rc: c.at[:, slot:slot + 1].set(rc.astype(c.dtype)),
-            self.cache, row_cache)
-        self.lengths[slot] = int(row_len[0])
-        req.tokens.append(int(jnp.argmax(logits[0, -1, :self.cfg.vocab])))
-        self.slot_req[slot] = req
-        return True
+        take = [r for r in reqs[:len(free)]]
+        if not take:
+            return []
+        groups: Dict[int, List[Request]] = {}
+        for r in take:
+            n = int(np.asarray(r.prompt).reshape(-1).shape[0])
+            if n >= self.max_len:
+                raise ValueError(
+                    f"prompt length {n} >= engine max_len {self.max_len}")
+            groups.setdefault(self._bucket(n), []).append(r)
+        for pad_len, group in sorted(groups.items()):
+            k = len(group)
+            idx = np.asarray(free[:k], np.int32)
+            free = free[k:]
+            prompts = np.zeros((k, pad_len), np.int32)
+            true_len = np.empty((k,), np.int32)
+            max_new = np.empty((k,), np.int32)
+            for j, r in enumerate(group):
+                p = np.asarray(r.prompt, np.int32).reshape(-1)
+                prompts[j, :p.shape[0]] = p
+                true_len[j] = p.shape[0]
+                max_new[j] = max(1, int(r.max_new_tokens))
+            (self.cache, self._slot_lengths, self._budget, self._active,
+             self._last, first) = self._admit_fn(
+                self.params, self.cache, self._slot_lengths, self._budget,
+                self._active, self._last, jnp.asarray(prompts),
+                jnp.asarray(idx), jnp.asarray(true_len),
+                jnp.asarray(max_new))
+            first_np = jax.device_get(first)
+            self.host_syncs += 1
+            self.admit_calls += 1
+            self.admitted += k
+            now = time.monotonic()
+            for j, r in enumerate(group):
+                slot = int(idx[j])
+                r.tokens.append(int(first_np[j]))
+                r.admitted_at = now
+                r.first_token_at = now
+                if max_new[j] <= 1 or true_len[j] >= self.max_len - 1:
+                    r.done = True
+                    r.finished_at = now          # slot never occupied
+                else:
+                    self.slot_req[slot] = r
+                    self.lengths[slot] = int(true_len[j])
+        return take
+
+    def admit(self, req: Request) -> bool:
+        """Single-request admission (compat shim over ``admit_many``)."""
+        return bool(self.admit_many([req]))
+
+    # -- decode ------------------------------------------------------------
 
     def step(self) -> List[Request]:
-        """One decode step over all active slots; returns finished requests."""
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
-        if not active:
+        """One fused decode step over all slots; returns finished requests.
+        One host sync per step regardless of slot count."""
+        if not any(r is not None for r in self.slot_req):
             return []
-        last = np.zeros((self.slots, 1), np.int32)
-        for i in active:
-            last[i, 0] = self.slot_req[i].tokens[-1]
-        # the new token lands at position lengths[i]; decode expects pos+1
-        call_lengths = jnp.asarray(self.lengths + 1, jnp.int32)
-        logits, self.cache, _ = self._decode(
-            self.params, jnp.asarray(last), self.cache, call_lengths)
+        (self.cache, self._slot_lengths, self._budget, self._active,
+         self._last, toks, done) = self._step_fn(
+            self.params, self.cache, self._slot_lengths, self._budget,
+            self._active, self._last)
+        toks_np, done_np = jax.device_get((toks, done))
+        self.host_syncs += 1
         self.steps += 1
-        toks = np.asarray(jnp.argmax(logits[:, 0, :self.cfg.vocab], axis=-1))
-        finished = []
-        for i in active:
-            req = self.slot_req[i]
+        now = time.monotonic()
+        finished: List[Request] = []
+        for i, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            req.tokens.append(int(toks_np[i]))
             self.lengths[i] += 1
-            req.tokens.append(int(toks[i]))
-            if (len(req.tokens) >= req.max_new_tokens
-                    or self.lengths[i] >= self.max_len - 1):
+            if done_np[i]:
                 req.done = True
-                req.finished_at = time.monotonic()
+                req.finished_at = now
                 finished.append(req)
                 self.slot_req[i] = None
                 self.lengths[i] = 0
         return finished
 
+    # -- introspection -----------------------------------------------------
+
+    def active_slots(self) -> int:
+        return sum(1 for r in self.slot_req if r is not None)
+
+    def counters(self) -> Dict[str, int]:
+        return {"steps": self.steps, "admit_calls": self.admit_calls,
+                "admitted": self.admitted,
+                "full_cache_copies": self.full_cache_copies,
+                "host_syncs": self.host_syncs}
+
 
 class ContinuousBatcher:
-    """Request queue in front of a GenerationEngine."""
+    """Thread-safe request front for ONE engine: a per-tenant WRR
+    :class:`SlotScheduler` feeds the engine's free slots. ``submit`` is
+    safe from any thread; a single driver calls ``pump`` /
+    ``run_until_drained``."""
 
-    def __init__(self, engine: GenerationEngine):
+    def __init__(self, engine: GenerationEngine,
+                 scheduler: Optional[SlotScheduler] = None):
         self.engine = engine
-        self._queue: "queue.Queue[Request]" = queue.Queue()
+        self.scheduler = scheduler or SlotScheduler()
+        self._lock = threading.Lock()
         self._uid = 0
         self.completed: Dict[int, Request] = {}
 
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
-        self._uid += 1
-        self._queue.put(Request(self._uid, np.asarray(prompt, np.int32),
-                                max_new_tokens))
-        return self._uid
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               tenant: str = "default") -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.shape[0] >= self.engine.max_len:
+            raise ValueError(f"prompt length {prompt.shape[0]} >= "
+                             f"engine max_len {self.engine.max_len}")
+        with self._lock:
+            self._uid += 1
+            uid = self._uid
+        self.scheduler.submit(
+            tenant, Request(uid, prompt, max_new_tokens, tenant=tenant))
+        return uid
+
+    def pump(self) -> List[Request]:
+        """One admit+decode round; returns requests finished this round."""
+        finished: List[Request] = []
+        free = len(self.engine.free_slots())
+        if free:
+            for req in self.engine.admit_many(self.scheduler.take(free)):
+                if req.done:
+                    finished.append(req)
+        finished.extend(self.engine.step())
+        if finished:
+            with self._lock:
+                for req in finished:
+                    self.completed[req.uid] = req
+        return finished
 
     def run_until_drained(self, max_steps: int = 10_000) -> None:
-        pending: List[Request] = []
         for _ in range(max_steps):
-            while not self._queue.empty() and self.engine.free_slots():
-                try:
-                    pending.append(self._queue.get_nowait())
-                except queue.Empty:
-                    break
-            for req in list(pending):
-                if self.engine.admit(req):
-                    pending.remove(req)
-            for req in self.engine.step():
-                self.completed[req.uid] = req
-            if (self._queue.empty() and not pending
-                    and not any(r is not None for r in self.engine.slot_req)):
+            self.pump()
+            if (self.scheduler.pending() == 0
+                    and self.engine.active_slots() == 0):
                 return
         raise TimeoutError("batcher did not drain")
 
 
 def generate(cfg: ModelConfig, params: Any, prompts: np.ndarray,
-             max_new_tokens: int = 16, max_len: int = 256) -> np.ndarray:
-    """Simple batched generation (prefill + greedy decode loop)."""
+             max_new_tokens: int = 16, max_len: int = 256,
+             compute_dtype=jnp.bfloat16) -> np.ndarray:
+    """Batched generation routed through the engine path (ONE decode
+    implementation): B prompts admit into B slots in a single fused call,
+    then fused-decode to the token budget."""
+    prompts = np.asarray(prompts, np.int32)
     B, S = prompts.shape
-    cache = init_cache(cfg, B, max_len, enc_len=max_len)
-    logits, cache, lengths = prefill(params, cfg,
-                                     jnp.asarray(prompts, jnp.int32), cache)
-    step = jax.jit(lambda p, t, c, l: decode_step(p, cfg, t, c, l))
-    toks = jnp.argmax(logits[:, -1, :cfg.vocab], -1)[:, None].astype(jnp.int32)
-    out = [toks]
-    lengths = lengths + 1          # first new token position + 1
-    for _ in range(max_new_tokens - 1):
-        logits, cache, lengths = step(params, toks, cache, lengths)
-        toks = jnp.argmax(logits[:, 0, :cfg.vocab], -1)[:, None].astype(
-            jnp.int32)
-        out.append(toks)
-    return np.asarray(jnp.concatenate(out, axis=1))
+    if S + max_new_tokens > max_len:
+        raise ValueError(f"prompt ({S}) + max_new_tokens ({max_new_tokens}) "
+                         f"exceeds max_len ({max_len})")
+    engine = GenerationEngine(cfg, params, slots=B, max_len=max_len,
+                              compute_dtype=compute_dtype)
+    reqs = [Request(i + 1, prompts[i], max_new_tokens) for i in range(B)]
+    engine.admit_many(reqs)   # equal lengths: one bucket, slots 0..B-1
+    while engine.active_slots():
+        engine.step()
+    return np.asarray([r.tokens for r in reqs])

@@ -199,14 +199,17 @@ def test_autoscaler_state_reports_decisions_targets_cooldowns():
         st = scaler.state()
         assert st["last_decision"] is None
         assert st["targets"] == {"shards": 1, "upward_shards": 1,
-                                 "executor_pool": 2}
+                                 "executor_pool": 2,
+                                 "engine_replicas": None}
         assert set(st["cooldown_remaining_s"]) == {"shards", "upward_shards",
-                                                   "executor_pool"}
+                                                   "executor_pool",
+                                                   "engine_replicas"}
         assert wait_for(lambda: scaler.state()["ticks"] >= 3)
         assert set(st["signals"]) == {"shard_depth", "reconcile_latency_s",
                                       "upward_depth", "upward_latency_s",
                                       "backlog_per_thread",
-                                      "quantum_latency_s"}
+                                      "quantum_latency_s",
+                                      "engine_pending", "engine_ttft_s"}
         # force a decision and check it surfaces
         for p in planes:
             for j in range(400):

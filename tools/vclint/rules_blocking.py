@@ -33,7 +33,12 @@ ENTRY_FUNC_NAMES = {"_pump", "_worker_quantum", "_scan_quantum",
 ENTRY_METHOD_NAMES = {"reconcile", "reconcile_batch", "scan", "scan_once",
                       "poll"}
 ENTRY_MODULES = ("executor.py", "informer.py", "runtime.py", "syncer.py",
-                 "upward.py")
+                 "upward.py",
+                 # the serving data plane: the fleet controller runs on the
+                 # cooperative runtime, and the engine/scheduler are called
+                 # from its reconcile/scan — blocking there stalls a quantum
+                 "serving/engine.py", "serving/scheduler.py",
+                 "serving/host.py")
 POLL_GATED = {"get", "get_batch", "next", "poll"}
 JOIN_TYPES = {"Thread", "Timer", "Task"}
 WAIT_TYPES = {"Event", "Condition"}
