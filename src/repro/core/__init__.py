@@ -11,22 +11,25 @@ from .objects import (KINDS, ConfigMap, Event, Namespace, Node, Secret,
                       WorkUnitSpec)
 from .ring import ShardRing, shard_for
 from .router import IsolationViolation, MeshRouter
-from .runtime import (Controller, ControllerManager, MetricsRegistry,
-                      RetryLater)
+from .runtime import (Controller, ControllerManager, Histogram,
+                      MetricsRegistry, RetryLater)
 from .scheduler import SuperScheduler
+from .slo import SLO, SLOTracker
 from .store import (ADDED, BOOKMARK, DELETED, MODIFIED, AlreadyExistsError,
                     ConflictError, ContinueToken, NotFoundError, ObjectStore,
                     ResourceVersionExpired)
 from .syncer import Syncer, ns_prefix
 from .tenant_operator import TenantOperator
+from .trace import TRACEPARENT_KEY, Span, Tracer
 from .upward import EventRecorder, UpwardPipeline, UpwardShard
 from .vnode import VNodeManager
 from .workqueue import DelayingQueue, RateLimiter, WorkQueue
 
 __all__ = [
     "APIClient", "APIServer", "TenantControlPlane", "VirtualClusterFramework",
-    "Controller", "ControllerManager", "MetricsRegistry", "RetryLater",
-    "CooperativeExecutor", "Task",
+    "Controller", "ControllerManager", "MetricsRegistry", "Histogram",
+    "RetryLater", "CooperativeExecutor", "Task",
+    "Tracer", "Span", "TRACEPARENT_KEY", "SLOTracker", "SLO",
     "Autoscaler", "ScalingPolicy", "SignalWindow",
     "FairWorkQueue", "WorkQueue", "DelayingQueue", "RateLimiter",
     "Informer", "InformerCache", "ObjectStore", "Syncer", "ns_prefix",

@@ -80,13 +80,26 @@ class SignalWindow:
     ``alpha`` per sample) and **percentile** over the retained window (the
     burst detector — a p90 over raw samples reacts faster than any mean).
     Thread-safe: ticks write while gauges/healthz read.
+
+    Memory is bounded: at most ``max_samples`` samples are retained
+    regardless of observation rate (the deque drops from the old end, so a
+    flood degrades the window toward "most recent max_samples" — the right
+    bias for a burst detector). When a ``histogram``
+    (:class:`~repro.core.runtime.Histogram`) is wired, every observation
+    also feeds it, and once the window saturates — truncated samples mean
+    the sorted-sample read no longer sees the full horizon — percentile
+    queries delegate to the histogram's bucket walk, which never forgets.
     """
 
-    def __init__(self, horizon: float = 30.0, alpha: float = 0.3):
+    def __init__(self, horizon: float = 30.0, alpha: float = 0.3,
+                 max_samples: int = 1024, histogram: Optional[Any] = None):
         self.horizon = float(horizon)
         self.alpha = float(alpha)
+        self.max_samples = max(1, int(max_samples))
+        self.histogram = histogram
         self._samples: Deque[Tuple[float, float]] = deque()
         self._ewma: Optional[float] = None
+        self._truncated = False    # window has dropped in-horizon samples
         self._lock = threading.Lock()
 
     def observe(self, value: float, now: Optional[float] = None) -> None:
@@ -97,8 +110,13 @@ class SignalWindow:
             cutoff = now - self.horizon
             while self._samples and self._samples[0][0] < cutoff:
                 self._samples.popleft()
+            while len(self._samples) > self.max_samples:
+                self._samples.popleft()
+                self._truncated = True
             self._ewma = (v if self._ewma is None
                           else self.alpha * v + (1 - self.alpha) * self._ewma)
+        if self.histogram is not None:
+            self.histogram.observe(v)
 
     def ewma(self) -> float:
         with self._lock:
@@ -108,7 +126,12 @@ class SignalWindow:
         with self._lock:
             if not self._samples:
                 return 0.0
+            truncated = self._truncated
             vals = sorted(v for _, v in self._samples)
+        if truncated and self.histogram is not None:
+            # the raw window lost in-horizon samples to the cap; the
+            # histogram saw every observation, so its estimate is better
+            return self.histogram.percentile(p * 100.0)
         idx = min(len(vals) - 1, int(len(vals) * p))
         return vals[idx]
 
@@ -308,6 +331,14 @@ class Autoscaler(Controller):
 
     def on_start(self) -> None:
         m = self.metrics
+        # back the latency windows' percentile reads with registry
+        # histograms (wired here, where self.metrics is final): a flood past
+        # max_samples degrades the raw deque, but the histogram saw every
+        # observation — and the buckets land on /metrics for free
+        self.w_latency.histogram = m.histogram("autoscaler_reconcile_seconds")
+        self.w_up_latency.histogram = m.histogram("autoscaler_upward_seconds")
+        self.w_quantum.histogram = m.histogram("autoscaler_quantum_seconds")
+        self.w_engine_ttft.histogram = m.histogram("autoscaler_ttft_seconds")
         m.register_gauge("autoscaler_target_shards",
                          lambda: self.syncer.num_shards)
         m.register_gauge("autoscaler_target_upward_shards",

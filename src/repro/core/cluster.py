@@ -23,9 +23,11 @@ from .objects import VirtualClusterCR, WorkUnit, WorkUnitSpec
 from .router import MeshRouter
 from .runtime import ControllerManager, MetricsRegistry
 from .scheduler import SuperScheduler
+from .slo import SLOTracker
 from .store import NotFoundError
 from .syncer import Syncer
 from .tenant_operator import TenantOperator
+from .trace import TRACEPARENT_KEY, Tracer
 
 
 class VirtualClusterFramework:
@@ -73,11 +75,22 @@ class VirtualClusterFramework:
                  executor_pool: int = 8,
                  autoscale: bool = False,
                  autoscale_policy: Optional[ScalingPolicy] = None,
-                 autoscale_interval: float = 0.5):
+                 autoscale_interval: float = 0.5,
+                 tracing: bool = False,
+                 tracer: Optional[Tracer] = None):
         self.executor = (CooperativeExecutor(executor_pool, name="vc-exec")
                          if executor_mode else None)
+        # distributed tracing is opt-in (tracing=True, or pass a configured
+        # Tracer); every hook in the planes guards on `tracer is not None`,
+        # so the default deployment is byte-identical to an untraced one
+        self.tracer: Optional[Tracer] = (
+            tracer if tracer is not None else (Tracer() if tracing else None))
+        # per-tenant SLO accounting is always on: a handful of ints per
+        # rolling bucket, fed by the upward pipeline and the serving plane
+        self.slo = SLOTracker()
         self.manager = ControllerManager(executor=self.executor)
         self.super_api = APIServer("super")
+        self.super_api.store.tracer = self.tracer
         self.router = MeshRouter(self.super_api,
                                  grpc_latency_ms=grpc_latency_ms,
                                  scan_interval=router_scan_interval)
@@ -106,7 +119,9 @@ class VirtualClusterFramework:
                              batch_upward=batch_upward,
                              upward_batch=upward_batch,
                              record_events=record_events,
-                             executor=self.executor)
+                             executor=self.executor,
+                             tracer=self.tracer)
+        self.syncer.slo = self.slo
         self.operator = TenantOperator(self.super_api, self.syncer,
                                        vn_agents=[self.vn_agent])
         # registration order == start order; stop runs in reverse
@@ -162,12 +177,19 @@ class VirtualClusterFramework:
         short-lived daemon thread per request). Routes:
 
         - ``/`` or ``/metrics`` — ``MetricsRegistry.snapshot()`` (counters,
-          summaries, gauges — including the executor and autoscaler gauges);
+          summaries, gauges, histograms — including the executor and
+          autoscaler gauges);
         - ``/healthz`` — ``{"controllers": <per-controller health map>,
-          "autoscaler": <loop state or null>}``, 503 if any controller is
-          unhealthy. The autoscaler state (last decision, current targets,
-          cooldown remaining, signal windows) makes a wedged control loop
-          visible from outside the process.
+          "autoscaler": <loop state or null>, "slo": <per-tenant SLO
+          compliance/burn-rate map>}``, 503 if any controller is unhealthy.
+          The autoscaler state (last decision, current targets, cooldown
+          remaining, signal windows) makes a wedged control loop visible
+          from outside the process;
+        - ``/traces`` — the tracer's retained span ring as JSON
+          (``{"enabled", "stats", "spans"}``; empty when tracing is off);
+          ``/traces/chrome`` (or ``/traces?format=chrome``) returns the
+          same ring as Chrome trace-event JSON, loadable directly in
+          Perfetto / ``chrome://tracing``.
 
         Returns the bound port (pass ``port=0`` for an ephemeral one).
         """
@@ -179,14 +201,27 @@ class VirtualClusterFramework:
 
         class Handler(BaseHTTPRequestHandler):
             def do_GET(self) -> None:
-                if self.path in ("/", "/metrics"):
+                path, _, query = self.path.partition("?")
+                tr = fw.tracer
+                if path in ("/", "/metrics"):
                     code, payload = 200, fw.metrics.snapshot()
-                elif self.path == "/healthz":
+                elif path == "/healthz":
                     health = fw.healthy()
                     code = 200 if all(health.values()) else 503
                     payload = {"controllers": health,
                                "autoscaler": (fw.autoscaler.state()
-                                              if fw.autoscaler else None)}
+                                              if fw.autoscaler else None),
+                               "slo": fw.slo.state()}
+                elif path == "/traces/chrome" or (
+                        path == "/traces" and "format=chrome" in query):
+                    code = 200
+                    payload = (tr.chrome_trace() if tr is not None
+                               else {"traceEvents": []})
+                elif path == "/traces":
+                    code = 200
+                    payload = {"enabled": tr is not None,
+                               "stats": tr.stats() if tr is not None else {},
+                               "spans": tr.spans() if tr is not None else []}
                 else:
                     code, payload = 404, {"error": f"no route {self.path}"}
                 body = json.dumps(payload, default=str).encode()
@@ -277,6 +312,24 @@ class VirtualClusterFramework:
             ns = Namespace()
             ns.metadata.name = unit.metadata.namespace
             plane.api.create(ns)
+        tr = self.tracer
+        if tr is not None:
+            # open the end-to-end propagation span here, at the tenant-plane
+            # write; its traceparent rides the object's annotations through
+            # downward sync and the super commit, and the upward pipeline
+            # closes it when the first real status lands back in the tenant
+            span = tr.start_pending(
+                "propagation", tenant=plane.name,
+                attrs={"kind": type(unit).kind,
+                       "ns": unit.metadata.namespace,
+                       "name": unit.metadata.name})
+            # only sampled traces ride the object: every downstream hook
+            # skips unsampled carriers, so stamping flag-00 would buy
+            # nothing and the annotation is deep-copied on every pipeline
+            # hop — head sampling keeps the unsampled path annotation-free
+            if span.sampled:
+                unit.metadata.annotations[TRACEPARENT_KEY] = \
+                    span.traceparent()
         return plane.api.create(unit)
 
     @staticmethod

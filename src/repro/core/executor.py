@@ -42,6 +42,7 @@ from collections import deque
 from typing import Any, Callable, Deque, List, Optional, Set, Tuple
 
 from . import sanitize
+from . import trace as _trace
 
 
 class RetryLater(Exception):
@@ -80,7 +81,7 @@ class Task:
     _IDLE, _READY, _RUNNING, _DONE = range(4)
 
     __slots__ = ("name", "fn", "_ex", "_state", "_pending_wake",
-                 "_cancelled", "_finished")
+                 "_cancelled", "_finished", "trace_ctx")
 
     def __init__(self, executor: "CooperativeExecutor",
                  fn: Callable[[], Any], name: str):
@@ -91,6 +92,11 @@ class Task:
         self._pending_wake = False
         self._cancelled = False
         self._finished = threading.Event()
+        # Trace context attaches to the TASK, not the thread: quanta hop
+        # pool threads across a WAIT, so thread-locals lie. Inherit the
+        # spawner's current span; the executor swaps this in/out around
+        # every quantum.
+        self.trace_ctx = _trace.current_span()
 
     @property
     def alive(self) -> bool:
@@ -354,12 +360,17 @@ class CooperativeExecutor:
 
     def _run_quantum(self, task: Task) -> None:
         t0 = time.monotonic()
+        # install the task's trace context for this quantum and save
+        # whatever it left current (spans may stay open across a WAIT)
+        prev_ctx = _trace.swap_current(task.trace_ctx)
         try:
             result = task.fn()
             failed = False
         except BaseException:   # vclint: disable=VCL004 counted as task_errors below
             result = Task.WAIT
             failed = True
+        finally:
+            task.trace_ctx = _trace.swap_current(prev_ctx)
         dur = time.monotonic() - t0
         if self._sanitize and dur > self._sanitize_quantum_s:
             sanitize.report_long_hold(

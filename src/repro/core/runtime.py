@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import threading
 import time
+from bisect import bisect_right
 from typing import (Any, Callable, Dict, Hashable, List, Optional, Tuple,
                     Type)
 
@@ -43,11 +44,104 @@ from .workqueue import DelayingQueue, RateLimiter, WorkQueue
 # RetryLater is re-exported here for the existing import surface (agent.py,
 # syncer.py, tests); the class itself moved to executor.py so leaf modules
 # (apiserver.py) can raise it without importing the controller runtime.
-__all__ = ["RetryLater", "MetricsRegistry", "Controller",
+__all__ = ["RetryLater", "MetricsRegistry", "Histogram", "Controller",
            "ControllerManager"]
 
 
 # --------------------------------------------------------------------- metrics
+
+class Histogram:
+    """Log-spaced latency histogram: mergeable, with exact-ish percentiles.
+
+    ``bounds[i] = start * factor**i`` — the defaults span 100µs to ~14min in
+    24 buckets, fine enough that p50/p90/p99 land within one factor-of-2
+    bucket of truth (log-linear interpolation inside the bucket tightens
+    that further). Unlike the ``[sum, count, max]`` summaries, a histogram
+    answers percentile queries over its whole lifetime in O(buckets) and
+    two histograms with the same bounds merge by adding counts (per-tenant
+    series roll up into fleet-wide ones).
+
+    Self-locking: ``observe`` takes only the histogram's own lock, never the
+    registry lock, so the hot path can't contend with ``snapshot()``.
+    """
+
+    __slots__ = ("bounds", "counts", "sum", "count", "max", "_lock")
+
+    def __init__(self, *, start: float = 1e-4, factor: float = 2.0,
+                 buckets: int = 24,
+                 bounds: Optional[Tuple[float, ...]] = None):
+        if bounds is not None:
+            self.bounds = tuple(bounds)
+        else:
+            self.bounds = tuple(start * factor ** i for i in range(buckets))
+        self.counts = [0] * (len(self.bounds) + 1)   # last = overflow
+        self.sum = 0.0
+        self.count = 0
+        self.max = 0.0
+        self._lock = threading.Lock()
+
+    def observe(self, value: float, n: int = 1) -> None:
+        if n <= 0:
+            return
+        idx = bisect_right(self.bounds, value)
+        with self._lock:
+            self.counts[idx] += n
+            self.sum += value * n
+            self.count += n
+            if value > self.max:
+                self.max = value
+
+    def merge(self, other: "Histogram") -> None:
+        """Add ``other``'s counts into this histogram (same bounds only)."""
+        if other.bounds != self.bounds:
+            raise ValueError("cannot merge histograms with different bounds")
+        with other._lock:
+            counts = list(other.counts)
+            osum, ocount, omax = other.sum, other.count, other.max
+        with self._lock:
+            for i, c in enumerate(counts):
+                self.counts[i] += c
+            self.sum += osum
+            self.count += ocount
+            if omax > self.max:
+                self.max = omax
+
+    def percentile(self, p: float) -> float:
+        """Estimate the ``p``-th percentile (0-100) by cumulative walk with
+        log-linear interpolation inside the landing bucket."""
+        with self._lock:
+            total = self.count
+            counts = list(self.counts)
+            hi = self.max
+        if total == 0:
+            return 0.0
+        rank = max(1.0, (min(100.0, max(0.0, p)) / 100.0) * total)
+        cum = 0
+        for i, c in enumerate(counts):
+            if c == 0:
+                continue
+            if cum + c >= rank:
+                frac = (rank - cum) / c
+                if i == 0:
+                    lo_b, hi_b = 0.0, self.bounds[0]
+                    return lo_b + frac * (hi_b - lo_b)
+                if i == len(self.bounds):
+                    # overflow bucket: bounded above by the observed max
+                    lo_b = self.bounds[-1]
+                    return lo_b + frac * (max(hi, lo_b) - lo_b)
+                lo_b, hi_b = self.bounds[i - 1], self.bounds[i]
+                # log-linear: latency mass is multiplicative within a bucket
+                return lo_b * (hi_b / lo_b) ** frac
+            cum += c
+        return hi
+
+    def state(self) -> Dict[str, float]:
+        with self._lock:
+            count, total, mx = self.count, self.sum, self.max
+        return {"count": float(count), "sum": total,
+                "mean": total / count if count else 0.0, "max": mx,
+                "p50": self.percentile(50.0), "p90": self.percentile(90.0),
+                "p99": self.percentile(99.0)}
 
 class MetricsRegistry:
     """Process-wide controller metrics: counters, summaries, gauges.
@@ -62,6 +156,7 @@ class MetricsRegistry:
         self._counters: Dict[str, float] = {}
         self._summaries: Dict[str, List[float]] = {}   # [sum, count, max]
         self._gauges: Dict[str, Callable[[], float]] = {}
+        self._hists: Dict[str, Histogram] = {}
         self.gauge_errors = 0   # snapshot() gauge callables that raised
 
     @staticmethod
@@ -103,6 +198,17 @@ class MetricsRegistry:
         with self._lock:
             self._gauges[key] = fn
 
+    def histogram(self, name: str, **labels: Any) -> Histogram:
+        """Get-or-create the named histogram. The registry lock covers only
+        the lookup; the returned histogram self-locks its observes, so hot
+        paths should hold onto the reference."""
+        key = self._key(name, labels)
+        with self._lock:
+            h = self._hists.get(key)
+            if h is None:
+                h = self._hists[key] = Histogram()
+        return h
+
     def counter(self, name: str, **labels: Any) -> float:
         with self._lock:
             return self._counters.get(self._key(name, labels), 0.0)
@@ -116,25 +222,35 @@ class MetricsRegistry:
                 "mean": s[0] / s[1] if s[1] else 0.0, "max": s[2]}
 
     def snapshot(self) -> Dict[str, Any]:
+        # hold the registry lock only long enough to copy raw state; summary
+        # shaping, gauge callables (which may be arbitrarily slow), and
+        # histogram percentile walks all run outside it, so a stalled gauge
+        # cannot block every inc()/observe() on the hot path
         with self._lock:
             counters = dict(self._counters)
-            summaries = {k: {"sum": s[0], "count": s[1],
-                             "mean": s[0] / s[1] if s[1] else 0.0,
-                             "max": s[2]}
-                         for k, s in self._summaries.items()}
+            raw_summaries = {k: tuple(s) for k, s in self._summaries.items()}
             gauges = list(self._gauges.items())
+            hists = list(self._hists.items())
+        summaries = {k: {"sum": s[0], "count": s[1],
+                         "mean": s[0] / s[1] if s[1] else 0.0,
+                         "max": s[2]}
+                     for k, s in raw_summaries.items()}
         out_gauges: Dict[str, float] = {}
+        errors = 0
         for key, fn in gauges:
             try:
                 out_gauges[key] = float(fn())
             except Exception:
                 # a broken gauge must not break /metrics, but it must be
                 # visible: NaN in the scrape plus an error counter
-                with self._lock:
-                    self.gauge_errors += 1
+                errors += 1
                 out_gauges[key] = float("nan")
+        if errors:
+            with self._lock:
+                self.gauge_errors += errors
         return {"counters": counters, "summaries": summaries,
-                "gauges": out_gauges}
+                "gauges": out_gauges,
+                "histograms": {k: h.state() for k, h in hists}}
 
 
 # ------------------------------------------------------------------ controller

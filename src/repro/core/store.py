@@ -51,6 +51,7 @@ from dataclasses import dataclass, field
 from typing import (Any, Callable, Deque, Dict, List, Optional, Tuple)
 
 from . import sanitize
+from . import trace as trace_mod
 from .objects import deepcopy_obj, new_uid, obj_key
 
 ADDED, MODIFIED, DELETED = "ADDED", "MODIFIED", "DELETED"
@@ -254,6 +255,10 @@ class ObjectStore:
         self._bookmark_every = max(1, int(bookmark_every))
         self._writes_since_bookmark = 0
         self.bookmarks_sent = 0
+        # optional Tracer: writes whose object carries a traceparent
+        # annotation record an instant "store.commit" child span. One attr
+        # check per write when unset — tracing off costs nothing.
+        self.tracer: Optional[Any] = None
 
     # -- index maintenance (call under lock) --------------------------------
 
@@ -615,6 +620,18 @@ class ObjectStore:
         if such a watcher exists), preserving the mutable-event contract."""
         kind = type(stored).kind
         ns = stored.metadata.namespace
+        tr = self.tracer
+        if tr is not None:
+            tp = stored.metadata.annotations.get(trace_mod.TRACEPARENT_KEY)
+            if tp and trace_mod.sampled_carrier(tp):
+                # instant span: the commit itself is sub-µs under the lock;
+                # what matters for the propagation tree is WHEN it landed.
+                # Unsampled carriers skip the record entirely — a zero-
+                # duration span can never be tail-retained anyway.
+                now = time.monotonic()
+                tr.record_from(tp, "store.commit", now, now,
+                               attrs={"store": self.name, "kind": kind,
+                                      "event": ev_type, "rv": rv})
         ev = WatchEvent(ev_type, stored, rv)
         # resumable-watch backlog (kept even with zero watchers: a future
         # watch(from_rv=...) may resume across this write); raw refs, so an

@@ -56,6 +56,7 @@ from .objects import (SYNCED_KINDS_DOWNWARD, SYNCED_KINDS_UPWARD, Namespace,
                       deepcopy_obj, obj_kind, spec_equal, status_equal)
 from .ring import ShardRing, shard_for  # noqa: F401  (re-export: public API)
 from .runtime import Controller, MetricsRegistry, RetryLater
+from .trace import TRACEPARENT_KEY, sampled_carrier
 from .store import (ADDED, MODIFIED, AlreadyExistsError, ConflictError,
                     NotFoundError)
 from .upward import UpwardPipeline
@@ -279,8 +280,16 @@ class Syncer:
                  event_ttl: float = 3600.0,
                  ring_vnodes: int = 64,
                  executor: Optional[Any] = None,
-                 informer_cache_budget: Optional[int] = None):
+                 informer_cache_budget: Optional[int] = None,
+                 tracer: Optional[Any] = None):
         self.super_api = super_api
+        # optional Tracer: sync paths record spans for objects carrying a
+        # traceparent annotation; every hook guards on `is not None`, so a
+        # tracer-less syncer is byte-identical in behavior
+        self.tracer = tracer
+        # optional SLOTracker (set by the framework): the upward pipeline
+        # feeds the end-to-end propagation latency into it
+        self.slo: Optional[Any] = None
         # per-informer cache byte budget for tenant-side informers (None =
         # unbounded); evicted keys read through the apiserver on access
         self.informer_cache_budget = informer_cache_budget
@@ -624,6 +633,8 @@ class Syncer:
         handle); defaults to the shared server client.
         """
         api = api or self.super_api
+        tr = self.tracer
+        t0 = time.monotonic() if tr is not None else 0.0
         with self._tenants_lock:
             reg = self.tenants.get(tenant)
         if reg is None:
@@ -671,6 +682,7 @@ class Syncer:
             try:
                 api.create(projected)
                 self.metrics.inc_downward()
+                self._trace_down(tenant_obj, t0, tenant, kind, ns, name)
             except AlreadyExistsError:
                 pass
             return
@@ -681,6 +693,23 @@ class Syncer:
                 projected.status = existing.status  # status is super-owned
             api.update(projected)
             self.metrics.inc_downward()
+            self._trace_down(tenant_obj, t0, tenant, kind, ns, name)
+
+    def _trace_down(self, tenant_obj: Any, t0: float, tenant: str, kind: str,
+                    ns: str, name: str, batch: int = 0) -> None:
+        """Record a "syncer.down" child span for an object that carries a
+        traceparent annotation (dequeue -> super-cluster write landed)."""
+        tr = self.tracer
+        if tr is None:
+            return
+        tp = tenant_obj.metadata.annotations.get(TRACEPARENT_KEY)
+        if not tp or not sampled_carrier(tp):
+            return                  # unsampled: child can't be retained
+        attrs: Dict[str, Any] = {"kind": kind, "ns": ns, "name": name}
+        if batch:
+            attrs["batch"] = batch
+        tr.record_from(tp, "syncer.down", t0, time.monotonic(),
+                       tenant=tenant, attrs=attrs)
 
     def _reconcile_down_fast(self, tenant: str, keys: List[DownItem],
                              api: Optional[Any] = None
@@ -699,6 +728,9 @@ class Syncer:
         comparison.
         """
         api = api or self.super_api
+        tr = self.tracer
+        t0 = time.monotonic() if tr is not None else 0.0
+        traced: Dict[DownItem, Any] = {}
         fast: List[DownItem] = []
         slow: List[DownItem] = []
         with self._tenants_lock:
@@ -737,6 +769,10 @@ class Syncer:
                 to_create.append(
                     self._project_down(tenant_obj, tenant, ns, super_ns))
                 create_keys.append(key)
+                if tr is not None:
+                    tp = tenant_obj.metadata.annotations.get(TRACEPARENT_KEY)
+                    if tp and sampled_carrier(tp):
+                        traced[key] = tenant_obj
             elif _spec_equal(tenant_obj, cached):
                 fast.append(key)            # echo: two-side states match
             else:                           # spec update: batched write
@@ -747,6 +783,10 @@ class Syncer:
                     proj.status = deepcopy_obj(cached.status)  # super-owned
                 to_update.append(proj)
                 update_keys.append(key)
+                if tr is not None:
+                    tp = tenant_obj.metadata.annotations.get(TRACEPARENT_KEY)
+                    if tp and sampled_carrier(tp):
+                        traced[key] = tenant_obj
         def route_write(keys_projs: List[Tuple[DownItem, Any]],
                         applied: int, conflicted: List[Any]) -> None:
             # cache races (create conflict / stale update rv) go slow for
@@ -759,6 +799,10 @@ class Syncer:
                     slow.append(key)
                 else:
                     fast.append(key)
+                    tobj = traced.pop(key, None)
+                    if tobj is not None:
+                        self._trace_down(tobj, t0, tenant, key[0], key[1],
+                                         key[2], batch=len(keys))
 
         if to_create:
             created, conflicted = api.create_batch(to_create)

@@ -43,6 +43,7 @@ from .objects import Event, deepcopy_obj, status_equal
 from .ring import ShardRing
 from .runtime import Controller, RetryLater
 from .store import AlreadyExistsError, ConflictError, NotFoundError
+from .trace import TRACEPARENT_KEY, sampled_carrier
 
 UpKey = Tuple[str, str, str]           # (kind, super_ns, name)
 
@@ -354,6 +355,9 @@ class UpwardPipeline:
         races) need the authoritative per-item reconcile.
         """
         sy = self.syncer
+        tr = sy.tracer
+        t0 = time.monotonic() if tr is not None else 0.0
+        traced: List[Tuple[UpKey, Any, str]] = []
         fast: List[UpKey] = []
         slow: List[UpKey] = []
         with sy._tenants_lock:
@@ -397,6 +401,10 @@ class UpwardPipeline:
                     u.status = status
                 status_updates.append(("WorkUnit", tenant_ns, name, mutate))
                 status_keys.append(key)
+                if tr is not None:
+                    tp = sobj.metadata.annotations.get(TRACEPARENT_KEY)
+                    if tp and sampled_carrier(tp):
+                        traced.append((key, sobj, tenant_ns))
             elif kind == "Service":
                 eps, vip = list(sobj.endpoints), sobj.virtual_ip
                 sinf = reg.informers.get("Service")
@@ -412,6 +420,10 @@ class UpwardPipeline:
                     s.virtual_ip = vip
                 status_updates.append(("Service", tenant_ns, name, mutate))
                 status_keys.append(key)
+                if tr is not None:
+                    tp = sobj.metadata.annotations.get(TRACEPARENT_KEY)
+                    if tp and sampled_carrier(tp):
+                        traced.append((key, sobj, tenant_ns))
             elif kind == "Event":
                 ev_updates.append(("Event", tenant_ns, name,
                                    _event_bump(sobj)))
@@ -419,12 +431,18 @@ class UpwardPipeline:
             else:
                 slow.append(key)
         if status_updates:
-            updated, _missing = reg.plane.api.update_status_batch(
+            updated, missing = reg.plane.api.update_status_batch(
                 status_updates)
             # missing == tenant deleted it mid-flight: same as the per-item
             # path's NotFound pass — the downward reconciler cleans up
             fast.extend(status_keys)
             synced += len(updated)
+            if traced:
+                miss = set(missing)
+                for key, sobj, t_ns in traced:
+                    if (key[0], t_ns, key[2]) not in miss:
+                        self._trace_up(sobj, t0, tenant, key[0], t_ns,
+                                       key[2], batch=len(keys))
         if ev_updates:
             updated, missing = reg.plane.api.update_status_batch(ev_updates)
             synced += len(updated)
@@ -450,6 +468,43 @@ class UpwardPipeline:
         if synced:
             sy.metrics.inc_upward(synced)
         return fast, slow
+
+    # -------------------------------------------------------------- tracing
+
+    def _trace_up(self, sobj: Any, t0: float, tenant: str, kind: str,
+                  tenant_ns: str, name: str, batch: int = 0) -> None:
+        """Record a "syncer.up" child span for a traced object whose status
+        just landed in the tenant plane, and — since a landed status IS the
+        end of the paper's propagation path — close the pending end-to-end
+        span, feeding its duration to the propagation histogram and the
+        per-tenant SLO tracker. Echo-suppressed keys never reach here, so
+        the e2e span closes on the FIRST real status return only."""
+        sy = self.syncer
+        tr = sy.tracer
+        if tr is None:
+            return
+        tp = sobj.metadata.annotations.get(TRACEPARENT_KEY)
+        if not tp:
+            return
+        if not sampled_carrier(tp):
+            # head-unsampled: nothing was registered at the root, no child
+            # can be retained, and the SLO/histogram feeds run on the
+            # sampled subset — the unsampled path pays zero tracer calls
+            return
+        end = time.monotonic()
+        attrs: Dict[str, Any] = {"kind": kind, "ns": tenant_ns, "name": name}
+        if batch:
+            attrs["batch"] = batch
+        tr.record_from(tp, "syncer.up", t0, end, tenant=tenant, attrs=attrs)
+        root = tr.finish_pending(tp, end)
+        if root is None:
+            return      # already closed (or never opened here)
+        dur = max(0.0, root.end - root.start)
+        m = self.controllers[0].metrics
+        m.histogram("propagation_seconds").observe(dur)
+        m.histogram("propagation_seconds", tenant=tenant).observe(dur)
+        if sy.slo is not None:
+            sy.slo.observe("propagation", tenant, dur)
 
     # ------------------------------------------------------ kind projectors
 
@@ -480,6 +535,7 @@ class UpwardPipeline:
     def _sync_unit_status_up(self, reg: Any, tenant_ns: str, name: str,
                              super_obj: Any,
                              api: Optional[Any] = None) -> None:
+        t0 = time.monotonic() if self.syncer.tracer is not None else 0.0
         status = self._project_unit_status(reg, tenant_ns, name, super_obj,
                                            api=api)
         winf = reg.informers.get("WorkUnit")
@@ -494,9 +550,13 @@ class UpwardPipeline:
             reg.plane.api.update_status("WorkUnit", tenant_ns, name, mutate)
         except NotFoundError:
             pass  # tenant deleted it mid-flight; scan/downward will clean up
+        else:
+            self._trace_up(super_obj, t0, reg.plane.name, "WorkUnit",
+                           tenant_ns, name)
 
     def _sync_service_up(self, reg: Any, tenant_ns: str, name: str,
                          super_obj: Any) -> None:
+        t0 = time.monotonic() if self.syncer.tracer is not None else 0.0
         eps = list(super_obj.endpoints)
         vip = super_obj.virtual_ip
         sinf = reg.informers.get("Service")
@@ -513,6 +573,9 @@ class UpwardPipeline:
             reg.plane.api.update_status("Service", tenant_ns, name, mutate)
         except NotFoundError:
             pass
+        else:
+            self._trace_up(super_obj, t0, reg.plane.name, "Service",
+                           tenant_ns, name)
 
     def _sync_event_up(self, reg: Any, tenant_ns: str, name: str,
                        super_obj: Any) -> None:

@@ -54,6 +54,8 @@ class Request:
     tokens: List[int] = field(default_factory=list)
     done: bool = False
     submitted_at: float = field(default_factory=time.monotonic)
+    dequeued_at: float = 0.0            # WRR dispatch (SlotScheduler.take)
+    admit_started_at: float = 0.0       # prefill launch (before device sync)
     admitted_at: float = 0.0
     first_token_at: float = 0.0         # TTFT = first_token_at - submitted_at
     finished_at: float = 0.0
@@ -193,6 +195,9 @@ class GenerationEngine:
             k = len(group)
             idx = np.asarray(free[:k], np.int32)
             free = free[k:]
+            t_admit = time.monotonic()   # prefill launch, before host sync
+            for r in group:
+                r.admit_started_at = t_admit
             prompts = np.zeros((k, pad_len), np.int32)
             true_len = np.empty((k,), np.int32)
             max_new = np.empty((k,), np.int32)
@@ -279,7 +284,11 @@ class ContinuousBatcher:
     def __init__(self, engine: GenerationEngine,
                  scheduler: Optional[SlotScheduler] = None):
         self.engine = engine
-        self.scheduler = scheduler or SlotScheduler()
+        # NOT ``scheduler or ...``: SlotScheduler.__len__ is the pending
+        # count, so a freshly-built (empty) scheduler is falsy and would be
+        # silently replaced with a default fair one.
+        self.scheduler = (scheduler if scheduler is not None
+                          else SlotScheduler())
         self._lock = threading.Lock()
         self._uid = 0
         self.completed: Dict[int, Request] = {}

@@ -171,6 +171,9 @@ class ServingFleet(Controller):
         self.completed: Dict[int, Request] = {}
         self.spawned = 0
         self.retired = 0
+        # observability wiring (set by attach(): adopted from the framework)
+        self.tracer: Optional[Any] = None
+        self.slo: Optional[Any] = None
 
     # -- wiring ------------------------------------------------------------
 
@@ -180,6 +183,8 @@ class ServingFleet(Controller):
         manager (start included if the framework is live), and hand the
         fleet to the autoscaler as its engine actuator."""
         self.api = fw.super_api
+        self.tracer = getattr(fw, "tracer", None)
+        self.slo = getattr(fw, "slo", None)
         for agent in fw.agents.values():
             assert isinstance(agent, NodeAgent)
             agent.provider = EngineProvider(self, agent.node_name,
@@ -226,15 +231,49 @@ class ServingFleet(Controller):
         ttft = max(0.0, req.first_token_at - req.submitted_at)
         m.observe("serving_ttft_seconds", ttft, tenant=req.tenant)
         m.observe("serving_ttft_seconds", ttft)     # fleet aggregate
+        m.histogram("serving_ttft_seconds", tenant=req.tenant).observe(ttft)
+        m.histogram("serving_ttft_seconds").observe(ttft)
         m.inc("serving_tokens_total", float(len(req.tokens)),
               tenant=req.tenant)
         m.inc("serving_tokens_total", float(len(req.tokens)))
         m.observe("serving_request_latency_seconds",
                   max(0.0, req.finished_at - req.submitted_at),
                   tenant=req.tenant)
+        if self.slo is not None:
+            self.slo.observe("serving_ttft", req.tenant, ttft)
+        if self.tracer is not None:
+            self._trace_request(req)
         with self._done_cv:
             self.completed[req.uid] = req
             self._done_cv.notify_all()
+
+    def _trace_request(self, req: Request) -> None:
+        """Synthesize the queue->admit->prefill->decode span tree from the
+        request's timestamps — the hot decode loop never touches span
+        objects; the whole tree is recorded once, at finish."""
+        tr = self.tracer
+        total = max(0.0, req.finished_at - req.submitted_at)
+        keep = (tr.should_sample(req.tenant)
+                or total >= tr.slow_threshold_s)
+        root = tr.record("serving.request", req.submitted_at,
+                         req.finished_at, tenant=req.tenant, keep=keep,
+                         sampled=keep,
+                         attrs={"uid": req.uid, "tokens": len(req.tokens)})
+        if root is None:
+            return
+        # zero timestamps mean the phase never happened (e.g. finished at
+        # admission): fall back to the previous boundary so the tree is
+        # always well-formed
+        dequeued = req.dequeued_at or req.submitted_at
+        admit0 = req.admit_started_at or dequeued
+        first = req.first_token_at or req.finished_at
+        for name, s, e in (("serving.queue_wait", req.submitted_at, dequeued),
+                           ("serving.admit", dequeued, admit0),
+                           ("serving.prefill", admit0, first),
+                           ("serving.decode", first, req.finished_at)):
+            tr.record(name, s, max(s, e), trace_id=root["trace_id"],
+                      parent_id=root["span_id"], tenant=req.tenant,
+                      keep=True, sampled=keep)
 
     def wait_completed(self, n: int, timeout: float = 60.0
                        ) -> Dict[int, Request]:

@@ -128,6 +128,7 @@ class SlotScheduler:
                 while len(out) < n and self._active:
                     out.append(self._wrr_pop_locked())
             for req in out:
+                req.dequeued_at = now   # queue-wait -> admit boundary
                 self.per_tenant_wait.setdefault(req.tenant, []).append(
                     now - req.submitted_at)
             self.dispatched += len(out)

@@ -426,7 +426,7 @@ def test_serve_metrics_http_endpoint():
         port = fw.serve_metrics(port=0)
         snap = json.load(urllib.request.urlopen(
             f"http://127.0.0.1:{port}/metrics", timeout=5))
-        assert set(snap) == {"counters", "summaries", "gauges"}
+        assert set(snap) == {"counters", "summaries", "gauges", "histograms"}
         assert snap["gauges"]["executor_pool_size"] == 8.0
         assert "executor_ready_backlog" in snap["gauges"]
         assert "executor_timer_depth" in snap["gauges"]
@@ -434,6 +434,10 @@ def test_serve_metrics_http_endpoint():
             f"http://127.0.0.1:{port}/healthz", timeout=5))
         assert health["controllers"] and all(health["controllers"].values())
         assert health["autoscaler"] is None   # autoscale off by default
+        assert health["slo"] == {}            # nothing observed yet
+        traces = json.load(urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/traces", timeout=5))
+        assert traces == {"enabled": False, "stats": {}, "spans": []}
         with pytest.raises(urllib.error.HTTPError):
             urllib.request.urlopen(f"http://127.0.0.1:{port}/nope", timeout=5)
 

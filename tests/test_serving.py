@@ -262,7 +262,8 @@ def test_wrr_bounds_steady_tenant_ttft_under_flood(model):
     dispatches the steady tenant ahead of the backlog while FIFO serves it
     dead last — its TTFT must be strictly better under WRR."""
     cfg, params = model
-    fair = _flood_ttfts(cfg, params, fair=True)
+    _flood_ttfts(cfg, params, fair=True)   # warm the XLA compile cache so
+    fair = _flood_ttfts(cfg, params, fair=True)   # neither timed run pays it
     fifo = _flood_ttfts(cfg, params, fair=False)
     assert fair < fifo
 

@@ -1,0 +1,176 @@
+"""Histogram, SignalWindow bounding, snapshot isolation, and the
+per-tenant SLO tracker (compliance, burn rate, rolling expiry)."""
+import threading
+import time
+
+from repro.core.autoscaler import SignalWindow
+from repro.core.runtime import Histogram, MetricsRegistry
+from repro.core.slo import SLO, SLOTracker
+
+
+# ------------------------------------------------------------- histogram
+
+def test_histogram_percentiles_are_close_on_known_distribution():
+    h = Histogram()
+    for ms in range(1, 101):               # uniform 1ms..100ms
+        h.observe(ms / 1000.0)
+    p50 = h.percentile(50.0)
+    p99 = h.percentile(99.0)
+    assert 0.025 <= p50 <= 0.1             # within the landing bucket
+    assert 0.05 <= p99 <= 0.2
+    assert p50 < p99
+    st = h.state()
+    assert st["count"] == 100.0
+    assert abs(st["mean"] - 0.0505) < 1e-9
+    assert st["max"] == 0.1
+
+
+def test_histogram_empty_and_overflow():
+    h = Histogram()
+    assert h.percentile(50.0) == 0.0
+    big = h.bounds[-1] * 10
+    h.observe(big)
+    # overflow bucket is bounded above by the observed max
+    assert h.percentile(99.0) <= big
+
+
+def test_histogram_merge_adds_counts():
+    a, b = Histogram(), Histogram()
+    for _ in range(10):
+        a.observe(0.01)
+    for _ in range(30):
+        b.observe(0.08)
+    a.merge(b)
+    assert a.count == 40
+    assert a.max == 0.08
+    # merged mass sits mostly at 0.08 -> p90 lands in its bucket
+    assert a.percentile(90.0) > 0.04
+
+
+def test_histogram_merge_rejects_mismatched_bounds():
+    a = Histogram(buckets=8)
+    b = Histogram(buckets=24)
+    try:
+        a.merge(b)
+    except ValueError:
+        pass
+    else:
+        raise AssertionError("merge of mismatched bounds must raise")
+
+
+# ----------------------------------------------------------- signal window
+
+def test_signal_window_memory_is_bounded():
+    w = SignalWindow(horizon=1e9, max_samples=64)
+    for i in range(10_000):
+        w.observe(float(i), now=float(i))
+    assert len(w) == 64
+    assert w.last() == 9999.0
+
+
+def test_saturated_window_delegates_percentile_to_histogram():
+    h = Histogram()
+    w = SignalWindow(horizon=1e9, max_samples=10, histogram=h)
+    for i in range(1000):
+        w.observe(0.001 if i < 990 else 10.0, now=float(i))
+    # the raw deque only remembers the last 10 samples (all 10.0); the
+    # histogram saw all 1000, so the p50 must reflect the 99% of small ones
+    assert w.percentile(0.5) < 1.0
+    assert h.count == 1000
+
+
+def test_unsaturated_window_uses_raw_samples():
+    w = SignalWindow(horizon=1e9, max_samples=1024, histogram=Histogram())
+    for i in range(100):
+        w.observe(float(i), now=float(i))
+    assert w.percentile(0.5) == 50.0       # exact, from the sorted window
+
+
+# ------------------------------------------------------- snapshot isolation
+
+def test_snapshot_evaluates_gauges_outside_the_registry_lock():
+    m = MetricsRegistry()
+    entered = threading.Event()
+    release = threading.Event()
+
+    def slow_gauge():
+        entered.set()
+        release.wait(timeout=10)
+        return 1.0
+
+    m.register_gauge("slow", slow_gauge)
+    snap_done = threading.Event()
+    out = {}
+
+    def scrape():
+        out["snap"] = m.snapshot()
+        snap_done.set()
+
+    t = threading.Thread(target=scrape)
+    t.start()
+    assert entered.wait(timeout=5)
+    # the gauge is mid-evaluation: the hot path must not block on it
+    t0 = time.monotonic()
+    m.inc("writes")
+    m.observe("lat", 0.01)
+    m.histogram("h").observe(0.01)
+    assert time.monotonic() - t0 < 1.0
+    release.set()
+    assert snap_done.wait(timeout=5)
+    t.join(timeout=5)
+    assert out["snap"]["gauges"]["slow"] == 1.0
+    # the raw state was copied before the gauge ran, so the mid-scrape
+    # writes are in the registry but not in that snapshot
+    assert m.counter("writes") == 1.0
+
+
+def test_snapshot_broken_gauge_yields_nan_and_counts():
+    m = MetricsRegistry()
+    m.register_gauge("boom", lambda: 1 / 0)
+    snap = m.snapshot()
+    assert snap["gauges"]["boom"] != snap["gauges"]["boom"]   # NaN
+    assert m.gauge_errors == 1
+
+
+# -------------------------------------------------------------- SLO tracker
+
+def test_slo_compliance_and_burn_rate():
+    slo = SLO("propagation", threshold_s=1.0, target=0.9, window_s=100.0)
+    tr = SLOTracker(objectives=(slo,))
+    now = 1000.0
+    for i in range(20):
+        # 2 of 20 over threshold -> compliance 0.9 exactly
+        v = 2.0 if i < 2 else 0.1
+        tr.observe("propagation", "acme", v, now=now)
+    st = tr.state(now=now)
+    s = st["acme"]["propagation"]
+    assert s["total"] == 20.0
+    assert abs(s["compliance"] - 0.9) < 1e-9
+    # error rate equals the budget -> burn rate 1.0, not yet breaching
+    assert abs(s["burn_rate"] - 1.0) < 1e-9
+    assert not s["breaching"]
+    tr.observe("propagation", "acme", 5.0, now=now)
+    s = tr.state(now=now)["acme"]["propagation"]
+    assert s["breaching"]
+    assert s["burn_rate"] > 1.0
+
+
+def test_slo_window_expires_old_buckets():
+    slo = SLO("propagation", threshold_s=1.0, target=0.99, window_s=30.0)
+    tr = SLOTracker(objectives=(slo,))
+    tr.observe("propagation", "acme", 9.0, now=100.0)    # bad, old
+    tr.observe("propagation", "acme", 0.1, now=200.0)    # good, recent
+    s = tr.state(now=200.0)["acme"]["propagation"]
+    assert s["total"] == 1.0                             # old bucket gone
+    assert s["compliance"] == 1.0
+
+
+def test_slo_unknown_objective_ignored_and_tenants_isolated():
+    tr = SLOTracker()
+    tr.observe("no_such_objective", "acme", 1.0)
+    assert tr.state() == {}
+    tr.observe("propagation", "acme", 0.1, now=50.0)
+    tr.observe("propagation", "globex", 99.0, now=50.0)
+    st = tr.state(now=50.0)
+    assert st["acme"]["propagation"]["compliance"] == 1.0
+    assert st["globex"]["propagation"]["compliance"] == 0.0

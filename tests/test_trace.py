@@ -1,0 +1,276 @@
+"""Tracer unit tests: span context management, ring bounding, head
+sampling + slow-tail retention, traceparent round-trips, pending-root
+lifecycle, task-attached context across executor quanta, and the
+end-to-end propagation span through a live framework."""
+import threading
+import time
+
+from repro.core import trace as trace_mod
+from repro.core.cluster import VirtualClusterFramework
+from repro.core.executor import CooperativeExecutor, Task
+from repro.core.trace import (TRACEPARENT_KEY, Tracer, current_span,
+                              make_traceparent, parse_traceparent,
+                              sampled_carrier)
+
+
+def wait_for(pred, timeout=20.0, poll=0.02):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(poll)
+    return pred()
+
+
+# -------------------------------------------------------------- span basics
+
+def test_span_context_manager_installs_and_restores():
+    tr = Tracer()
+    assert current_span() is None
+    with tr.start_span("outer") as outer:
+        assert current_span() is outer
+        with tr.start_span("inner") as inner:
+            assert current_span() is inner
+            # child inherits the parent's trace via task context
+            assert inner.trace_id == outer.trace_id
+            assert inner.parent_id == outer.span_id
+        assert current_span() is outer
+    assert current_span() is None
+    names = [s["name"] for s in tr.spans()]
+    assert names == ["inner", "outer"]       # closed in nesting order
+
+
+def test_span_close_is_idempotent():
+    tr = Tracer()
+    with tr.start_span("once") as sp:
+        pass
+    sp.close()
+    sp.close()
+    assert len(tr.spans()) == 1
+
+
+def test_ring_is_bounded():
+    tr = Tracer(capacity=16)
+    for i in range(100):
+        with tr.start_span(f"s{i}"):
+            pass
+    spans = tr.spans()
+    assert len(spans) == 16
+    assert spans[-1]["name"] == "s99"        # newest retained, oldest gone
+
+
+# ---------------------------------------------------- sampling + tail keep
+
+def test_head_sampling_drops_unsampled_spans():
+    tr = Tracer(sample=0.25)
+    for _ in range(40):
+        with tr.start_span("op", tenant="acme"):
+            pass
+    st = tr.stats()
+    # deterministic stride sampling: exactly a quarter kept
+    assert st["kept"] == 10
+    assert st["dropped_unsampled"] == 30
+
+
+def test_slow_span_survives_losing_the_sampling_toss():
+    tr = Tracer(sample=0.0, slow_threshold_s=0.01)
+    now = time.monotonic()
+    tr.record("fast", now, now + 0.001, tenant="acme")
+    tr.record("slow", now, now + 0.5, tenant="acme")
+    names = [s["name"] for s in tr.spans()]
+    assert names == ["slow"]
+    assert tr.stats()["kept_slow"] == 1
+
+
+def test_record_keep_override_keeps_whole_tree():
+    tr = Tracer(sample=0.0, slow_threshold_s=10.0)
+    now = time.monotonic()
+    rec = tr.record("root", now, now + 0.001, keep=True)
+    assert rec is not None
+    child = tr.record("child", now, now + 0.001, trace_id=rec["trace_id"],
+                      parent_id=rec["span_id"], keep=True)
+    assert child is not None
+    assert {s["name"] for s in tr.spans()} == {"root", "child"}
+
+
+# ------------------------------------------------------- traceparent wires
+
+def test_traceparent_round_trip():
+    tp = make_traceparent("a" * 32, "b" * 16, True)
+    assert parse_traceparent(tp) == ("a" * 32, "b" * 16, True)
+    assert sampled_carrier(tp)
+    tp0 = make_traceparent("a" * 32, "b" * 16, False)
+    assert parse_traceparent(tp0) == ("a" * 32, "b" * 16, False)
+    assert not sampled_carrier(tp0)
+    assert parse_traceparent("garbage") is None
+    assert parse_traceparent("00--b-01") is None
+
+
+def test_record_from_ignores_malformed_carrier():
+    tr = Tracer()
+    assert tr.record_from("not-a-carrier-at-all-x", "child", 0.0, 1.0) is None
+    assert tr.spans() == []
+
+
+def test_start_span_parents_from_carrier():
+    tr = Tracer()
+    tp = make_traceparent("c" * 32, "d" * 16, True)
+    with tr.start_span("child", traceparent=tp) as sp:
+        assert sp.trace_id == "c" * 32
+        assert sp.parent_id == "d" * 16
+        assert sp.sampled
+
+
+# ---------------------------------------------------------- pending roots
+
+def test_pending_root_lifecycle():
+    tr = Tracer()
+    root = tr.start_pending("propagation", tenant="acme")
+    assert tr.pending_count() == 1
+    closed = tr.finish_pending(root.traceparent())
+    assert closed is root
+    assert closed.end > 0
+    # idempotent: second close finds nothing
+    assert tr.finish_pending(root.traceparent()) is None
+    assert tr.pending_count() == 0
+
+
+def test_unsampled_pending_root_is_not_registered():
+    tr = Tracer(sample=0.0)
+    root = tr.start_pending("propagation", tenant="acme")
+    assert not root.sampled
+    assert tr.pending_count() == 0
+    assert tr.finish_pending(root.traceparent()) is None
+
+
+def test_pending_registry_is_bounded():
+    tr = Tracer(max_pending=16)
+    for _ in range(40):
+        tr.start_pending("propagation", tenant="acme")
+    assert tr.pending_count() == 16
+    assert tr.stats()["pending_evicted"] == 24
+
+
+# --------------------------------------------- context across task quanta
+
+def test_span_context_survives_quantum_hops():
+    """A span opened in one quantum is still the current span in the next,
+    even though the executor may run the quanta on different pool threads
+    (Task.trace_ctx carries it; thread-locals alone would lie)."""
+    ex = CooperativeExecutor(pool_size=4, name="trace-test")
+    ex.start()
+    tr = Tracer()
+    seen = []
+    state = {}
+
+    def fn():
+        if not state:
+            sp = tr.start_span(  # vclint: disable=VCL006 cross-quantum test
+                "spanning")
+            sp.__enter__()
+            state["span"] = sp
+            return Task.AGAIN
+        seen.append(current_span() is state["span"])
+        state["span"].__exit__(None, None, None)
+        seen.append(current_span())
+        return Task.DONE
+
+    try:
+        ex.spawn(fn, name="hopper")
+        assert wait_for(lambda: len(seen) == 2)
+        assert seen[0] is True       # same span object, later quantum
+        assert seen[1] is None       # exit restored the empty context
+        assert [s["name"] for s in tr.spans()] == ["spanning"]
+    finally:
+        ex.shutdown()
+
+
+# --------------------------------------------------- end-to-end propagation
+
+def test_e2e_propagation_span_tree_through_framework():
+    """A tenant write produces one propagation root with store.commit,
+    syncer.down, and syncer.up children in the same trace — the paper's
+    Fig. 7/8 path, observable on /traces."""
+    fw = VirtualClusterFramework(num_nodes=2, scan_interval=0.0,
+                                 heartbeat_interval=0.5, tracing=True)
+    with fw:
+        plane = fw.add_tenant("acme")
+        fw.submit(plane, fw.make_unit("traced", chips=1))
+
+        def tree_complete():
+            spans = fw.tracer.spans()
+            roots = [s for s in spans if s["name"] == "propagation"]
+            if not roots:
+                return False
+            tid = roots[0]["trace_id"]
+            names = {s["name"] for s in spans if s["trace_id"] == tid}
+            return {"store.commit", "syncer.down", "syncer.up"} <= names
+
+        assert wait_for(tree_complete, timeout=30)
+        root = [s for s in fw.tracer.spans()
+                if s["name"] == "propagation"][0]
+        assert root["tenant"] == "acme"
+        assert root["end"] > root["start"]
+        # children reference the root's ids, not copies of them
+        kids = [s for s in fw.tracer.spans()
+                if s["trace_id"] == root["trace_id"]
+                and s["name"] != "propagation"]
+        assert all(k["parent_id"] == root["span_id"] for k in kids)
+        # chrome export shapes the same spans into trace events
+        chrome = fw.tracer.chrome_trace()
+        assert any(e.get("ph") == "X" and e["name"] == "propagation"
+                   for e in chrome["traceEvents"])
+
+
+def test_tracing_off_leaves_no_annotations():
+    fw = VirtualClusterFramework(num_nodes=2, scan_interval=0.0,
+                                 heartbeat_interval=0.5)
+    assert fw.tracer is None
+    with fw:
+        plane = fw.add_tenant("plain")
+        fw.submit(plane, fw.make_unit("bare", chips=1))
+        u = plane.api.get("WorkUnit", "default", "bare")
+        assert TRACEPARENT_KEY not in u.metadata.annotations
+
+
+def test_clear_preserves_counters():
+    tr = Tracer()
+    with tr.start_span("s"):
+        pass
+    tr.clear()
+    assert tr.spans() == []
+    assert tr.stats()["started"] == 1
+
+
+def test_concurrent_record_and_scrape():
+    """Writers hammer record() while readers snapshot the ring — no
+    corruption, every snapshot is a consistent list of dicts."""
+    tr = Tracer(capacity=256)
+    stop = threading.Event()
+    errors = []
+
+    def writer():
+        i = 0
+        while not stop.is_set():
+            now = time.monotonic()
+            tr.record(f"w{i % 7}", now, now + 0.001, tenant="t")
+            i += 1
+
+    def reader():
+        while not stop.is_set():
+            try:
+                for s in tr.spans():
+                    assert "name" in s and "trace_id" in s
+            except Exception as e:          # pragma: no cover - fail path
+                errors.append(e)
+
+    threads = ([threading.Thread(target=writer) for _ in range(3)]
+               + [threading.Thread(target=reader) for _ in range(2)])
+    for t in threads:
+        t.start()
+    time.sleep(0.5)
+    stop.set()
+    for t in threads:
+        t.join(timeout=5)
+    assert not errors
+    assert len(tr.spans()) == 256

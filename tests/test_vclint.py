@@ -19,6 +19,7 @@ from vclint.model import build_project                         # noqa: E402
 from vclint.rules_blocking import BlockingCallRule             # noqa: E402
 from vclint.rules_excepts import SilentExceptRule              # noqa: E402
 from vclint.rules_locks import LockedElsewhereRule, LockOrderRule  # noqa: E402
+from vclint.rules_trace import SpanContextRule                 # noqa: E402
 from vclint.rules_zerocopy import ZeroCopyMutationRule         # noqa: E402
 
 from repro.core import sanitize                                # noqa: E402
@@ -315,6 +316,49 @@ def test_vcl005_locked_helper_convention_clean():
     src = VCL005_SRC.replace("def bare_path(self):",
                              "def bare_path_locked(self):")
     assert check(LockedElsewhereRule, src) == []
+
+
+# ---------------------------------------------------------------- VCL006
+
+VCL006_SRC = """
+    class Worker:
+        def __init__(self, tracer):
+            self.tracer = tracer
+
+        def good(self):
+            with self.tracer.start_span("step") as sp:
+                sp.set_attr("k", 1)
+
+        def good_multi(self, other):
+            with self.tracer.start_span("a"), other.start_span("b"):
+                pass
+
+        def bad(self):
+            sp = self.tracer.start_span("step")
+            do_work()
+            sp.close()
+
+        def exempt_factories(self):
+            root = self.tracer.start_pending("propagation")
+            self.tracer.record("fast", 0.0, 1.0)
+            self.tracer.record_from("00-x-y-01", "fast", 0.0, 1.0)
+            return root
+"""
+
+
+def test_vcl006_unmanaged_start_span_flagged():
+    findings = check(SpanContextRule, VCL006_SRC)
+    assert [f.detail for f in findings] == ["span:1"]
+    assert findings[0].qualname == "Worker.bad"
+
+
+def test_vcl006_with_and_exempt_factories_clean():
+    src = VCL006_SRC.replace(
+        "            sp = self.tracer.start_span(\"step\")\n"
+        "            do_work()\n"
+        "            sp.close()",
+        "            pass")
+    assert check(SpanContextRule, src) == []
 
 
 # ------------------------------------------------- baseline + pragma engine

@@ -1,6 +1,6 @@
 """vclint — repo-specific concurrency lint for the control plane.
 
-Five rules prove the three invariants ARCHITECTURE.md documents under
+Six rules prove the invariants ARCHITECTURE.md documents under
 "Concurrency invariants":
 
 - VCL001 lock-order violations (cycles, store-lock-under-watch-lock)
@@ -8,6 +8,7 @@ Five rules prove the three invariants ARCHITECTURE.md documents under
 - VCL003 mutation of zero-copy (``copy=False``) store references
 - VCL004 silent ``except Exception`` swallows
 - VCL005 fields written both under a lock and bare
+- VCL006 tracer ``start_span`` not used as a context manager
 
 Run as ``PYTHONPATH=tools python -m vclint src`` from the repo root.
 Deliberate violations live in ``tools/vclint/baseline.txt`` (one
@@ -18,11 +19,12 @@ from .engine import Finding, Rule, load_baseline, run
 from .rules_blocking import BlockingCallRule
 from .rules_excepts import SilentExceptRule
 from .rules_locks import LockedElsewhereRule, LockOrderRule
+from .rules_trace import SpanContextRule
 from .rules_zerocopy import ZeroCopyMutationRule
 
 ALL_RULES = [LockOrderRule, BlockingCallRule, ZeroCopyMutationRule,
-             SilentExceptRule, LockedElsewhereRule]
+             SilentExceptRule, LockedElsewhereRule, SpanContextRule]
 
 __all__ = ["Finding", "Rule", "run", "load_baseline", "ALL_RULES",
            "LockOrderRule", "BlockingCallRule", "ZeroCopyMutationRule",
-           "SilentExceptRule", "LockedElsewhereRule"]
+           "SilentExceptRule", "LockedElsewhereRule", "SpanContextRule"]

@@ -14,7 +14,7 @@ DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.txt")
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="vclint",
-        description="concurrency lint for the control plane (VCL001-005)")
+        description="concurrency lint for the control plane (VCL001-006)")
     ap.add_argument("roots", nargs="+",
                     help="files or directories to analyze (e.g. src)")
     ap.add_argument("--baseline", default=DEFAULT_BASELINE,

@@ -1,0 +1,60 @@
+"""VCL006: tracer spans not closed via context manager.
+
+``Tracer.start_span`` installs the returned span as the executor-local
+current span on ``__enter__`` and restores the previous one on exit —
+holding the object and calling ``close()`` by hand means any early
+return or exception path leaks the installed context into whatever runs
+next on that executor thread. The one sanctioned shape is
+
+    with tracer.start_span("name") as sp:
+        ...
+
+(the span closes and the context restores on every path). This rule
+flags any ``*.start_span(...)`` call that is not the context expression
+of a ``with`` item. The other span factories close elsewhere by design
+and are exempt: ``start_pending`` roots are closed cross-plane by
+``finish_pending``, and ``record`` / ``record_from`` are after-the-fact
+recorders that never install context.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from .engine import Finding, Rule
+from .model import Project, iter_functions, walk_in_scope
+
+
+class SpanContextRule(Rule):
+    id = "VCL006"
+    description = "start_span not used as a context manager"
+
+    def check(self, project: Project) -> List[Finding]:
+        findings: List[Finding] = []
+        for mod in project.modules:
+            for qualname, _ci, fn in iter_functions(mod):
+                with_exprs: Set[int] = set()
+                for node in walk_in_scope(fn):
+                    if isinstance(node, (ast.With, ast.AsyncWith)):
+                        for item in node.items:
+                            with_exprs.add(id(item.context_expr))
+                seq = 0
+                for node in walk_in_scope(fn):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    f = node.func
+                    name = (f.attr if isinstance(f, ast.Attribute)
+                            else f.id if isinstance(f, ast.Name) else "")
+                    if name != "start_span":
+                        continue
+                    seq += 1
+                    if id(node) in with_exprs:
+                        continue
+                    findings.append(Finding(
+                        self.id, mod.relpath, node.lineno, qualname,
+                        detail=f"span:{seq}",
+                        message=("start_span outside a with block — the "
+                                 "installed context leaks on early "
+                                 "return/raise; use "
+                                 "`with tracer.start_span(...) as sp:`")))
+        return findings
