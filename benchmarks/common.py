@@ -51,14 +51,17 @@ def make_framework(num_nodes: int = 100, *, downward_workers: int = 20,
                    scan_interval: float = 0.0,
                    parallel_scorers: int = 0,
                    syncer_shards: int = 1,
-                   downward_batch: int = 1) -> VirtualClusterFramework:
+                   downward_batch: int = 1,
+                   metering: bool = False,
+                   audit: bool = False) -> VirtualClusterFramework:
     return VirtualClusterFramework(
         num_nodes=num_nodes, downward_workers=downward_workers,
         upward_workers=upward_workers, fair_queuing=fair_queuing,
         scan_interval=scan_interval, router_scan_interval=0.0,
         heartbeat_interval=3600.0,   # heartbeats off the hot path
         parallel_scorers=parallel_scorers,
-        syncer_shards=syncer_shards, downward_batch=downward_batch)
+        syncer_shards=syncer_shards, downward_batch=downward_batch,
+        metering=metering, audit=audit)
 
 
 def syncer_metrics_summary(fw: VirtualClusterFramework) -> Dict[str, float]:

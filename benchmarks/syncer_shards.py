@@ -39,6 +39,12 @@ Two executor-only scenarios cover the UPWARD axis:
   tracing tax at <= 5% of churn
   throughput and dumps the traced run's Chrome trace-event JSON to
   ``BENCH_trace_events.json`` (the CI artifact; load it in Perfetto).
+- ``metering_overhead`` — the churn workload with a fresh UsageMeter +
+  AuditLog wired through the whole rig (every tenant request audited and
+  metered, sync lanes metered for items/bytes/occupancy) vs both off (the
+  guard-only zero-cost path). Same paired-phase methodology and dual
+  estimator as ``tracing_overhead``; ``--smoke`` gates the metering tax
+  at <= 5% of churn throughput.
 - ``autoscale`` — the closed-loop ramp: starting from 1 shard / 1 upward
   shard / 2 pool threads, create waves then a status storm must grow all
   THREE actuators (downward shards, upward shards, executor threads),
@@ -73,10 +79,10 @@ import threading
 import time
 from typing import Callable, Dict, List, Optional
 
-from repro.core import (APIServer, Autoscaler, CooperativeExecutor,
+from repro.core import (APIServer, AuditLog, Autoscaler, CooperativeExecutor,
                         EventRecorder, Informer, InformerCache, Namespace,
                         ScalingPolicy, Syncer, TenantControlPlane, Tracer,
-                        TRACEPARENT_KEY, WorkUnit)
+                        TRACEPARENT_KEY, UsageMeter, WorkUnit)
 from repro.core.objects import deepcopy_count, deepcopy_obj
 
 OUT_PATH = "BENCH_syncer_shards.json"
@@ -402,16 +408,28 @@ def _churn_converged(super_api: APIServer, tag: str, goal: int,
 
 
 def _churn_phase(super_api, syncer, planes, tag: str,
-                 tracer: Optional[Tracer], pop: int, k: int) -> float:
+                 tracer: Optional[Tracer], pop: int, k: int,
+                 meter=None, audit=None) -> float:
     """One churn burst on a round-scoped population with the tracer wired
     through the whole rig (or off). Untimed: wire the tracer, create and
     sync ``pop`` units per tenant (annotated when tracing). Timed: per
     tenant, ``k`` creates + ``k`` spec updates + ``k`` deletes, clock
     stopping at full downward convergence. Untimed again: delete the
     round's population so every phase starts from the same empty store.
-    Returns timed throughput in ops/s."""
+    Returns timed throughput in ops/s.
+
+    ``meter`` / ``audit`` wire the usage meter and audit log through the
+    same mutable hook attributes the tracer uses (tenant-plane clients,
+    tenant stores, sync-lane queues), so one rig can alternate
+    metering-on/off phases exactly like tracing phases (the
+    ``metering_overhead`` axis)."""
     syncer.tracer = tracer
     super_api.store.tracer = tracer
+    syncer.meter = meter
+    for p in planes:
+        p.api.meter = meter
+        p.api.audit = audit
+        p.api.store.meter = meter
     base = len(planes) * pop
     _fanout(planes, lambda p: [
         p.api.create(_mk_traced_unit(f"{tag}p{j:05d}", tracer, p.name))
@@ -567,6 +585,98 @@ def _run_tracing_overhead_sweep(smoke: bool, full: bool) -> Dict:
           f"ops/s vs on best {on_best:.0f} ops/s (gate tax "
           f"{(ratio - 1) * 100:+.1f}%), {stats['retained']} spans -> "
           f"{TRACE_EVENTS_PATH}", flush=True)
+    return out
+
+
+def _run_metering_overhead_sweep(smoke: bool, full: bool) -> Dict:
+    """Metering/audit-tax gate on the churn workload: a fresh
+    :class:`UsageMeter` + :class:`AuditLog` wired through the whole rig
+    (tenant-plane clients audit+meter every request, tenant stores meter
+    object bytes, sync-lane queues meter occupancy, downward/upward lanes
+    meter items and bandwidth) vs both off (``None`` — the guard-only
+    zero-cost path). Methodology is identical to
+    :func:`_run_tracing_overhead_sweep`: paired alternating phases inside
+    ONE rig, one discarded burn-in phase per arm, the min(best-vs-best,
+    median-of-paired-ratios) dual estimator, and adaptive extension up to
+    2x repeats while the read is over the 5% gate. The audit rings are
+    cleared between rounds (retained-dict allocator pressure is ring-size
+    cost, not per-record metering tax); the meter's rolling buckets
+    self-expire."""
+    if smoke:
+        tenants, pop, k, repeats = 6, 240, 120, 8
+    else:
+        tenants, pop, k, repeats = ((16, 300, 150, 8) if full
+                                    else (8, 240, 120, 8))
+    shards, batch = 2, 8
+    meter = UsageMeter()
+    audit = AuditLog()
+    super_api, syncer, planes, executor = _rig(shards, batch, tenants,
+                                               downward_workers=20,
+                                               mode="executor")
+    try:
+        # burn-in: same rationale as the tracing sweep — the first phase
+        # inherits turbo/thermal credit and cold caches, and the off arm
+        # would otherwise always collect that systematic edge
+        _churn_phase(super_api, syncer, planes, "mf", None, pop, k)
+        _churn_phase(super_api, syncer, planes, "mn", None, pop, k,
+                     meter=meter, audit=audit)
+        ratios: List[float] = []
+        offs: List[float] = []
+        ons: List[float] = []
+        r = 0
+
+        def gate_ratio() -> float:
+            best = max(offs) / max(1e-9, max(ons))
+            med = statistics.median(ratios)
+            return min(best, med)
+
+        while r < repeats or (r < repeats * 2 and gate_ratio() > 1.05):
+            audit.clear()
+            if r % 2 == 0:
+                off = _churn_phase(super_api, syncer, planes, f"m{r}f",
+                                   None, pop, k)
+                on = _churn_phase(super_api, syncer, planes, f"m{r}n",
+                                  None, pop, k, meter=meter, audit=audit)
+            else:
+                on = _churn_phase(super_api, syncer, planes, f"m{r}n",
+                                  None, pop, k, meter=meter, audit=audit)
+                off = _churn_phase(super_api, syncer, planes, f"m{r}f",
+                                   None, pop, k)
+            offs.append(off)
+            ons.append(on)
+            ratios.append(off / max(1e-9, on))
+            r += 1
+    finally:
+        syncer.stop()
+        if executor is not None:
+            executor.shutdown()
+        super_api.close()
+    off_best = max(offs)
+    on_best = max(ons)
+    ratio = min(off_best / max(1e-9, on_best), statistics.median(ratios))
+    astats = audit.stats()
+    noisy = meter.noisy()
+    out = {
+        "name": (f"syncer_shards/executor/metering_overhead/"
+                 f"s{shards}_b{batch}"),
+        "scenario": "metering_overhead", "mode": "executor",
+        "shards": shards, "batch": batch, "tenants": tenants,
+        "pop": pop, "k": k, "repeats": repeats,
+        "off_per_s": offs, "on_per_s": ons,
+        "paired_ratios": ratios,
+        "off_best_per_s": off_best, "on_best_per_s": on_best,
+        "overhead_ratio": ratio,
+        "audit_recorded": astats["recorded"],
+        "meter_samples": meter.adds,
+        "noisy_tenants": [n["tenant"] for n in noisy],
+        # lifetime exact totals — the symmetric workload should attribute
+        # near-identical usage to every tenant (eyeball check in the CI log)
+        "per_tenant_usage": meter.totals(),
+    }
+    print(f"  [executor] metering_overhead churn: off best {off_best:.0f} "
+          f"ops/s vs on best {on_best:.0f} ops/s (gate tax "
+          f"{(ratio - 1) * 100:+.1f}%), {astats['recorded']} audit records, "
+          f"{meter.adds} usage samples", flush=True)
     return out
 
 
@@ -1333,6 +1443,15 @@ def run(full: bool = False, smoke: bool = False,
         # CI gate: full-rate tracing must cost <= 5% churn throughput
         assert trec["overhead_ratio"] <= 1.05, (
             f"tracing tax {(trec['overhead_ratio'] - 1) * 100:.1f}% "
+            f"on churn (> 5%)")
+    # metering-tax axis: churn with audit + usage metering wired vs off
+    mrec = _run_metering_overhead_sweep(smoke, full)
+    record["metering_overhead"] = mrec
+    all_recs.append(mrec)
+    if smoke:
+        # CI gate: full audit + metering must cost <= 5% churn throughput
+        assert mrec["overhead_ratio"] <= 1.05, (
+            f"metering tax {(mrec['overhead_ratio'] - 1) * 100:.1f}% "
             f"on churn (> 5%)")
     record["peak_rss_kb"] = _peak_rss_kb()
     record["deepcopies_total"] = deepcopy_count()

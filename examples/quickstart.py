@@ -17,8 +17,11 @@ from repro.core import VirtualClusterFramework
 def main():
     # autoscale=True: the closed-loop autoscaler (sixth controller) sizes
     # the downward shard fleet and the executor pool from live load
+    # metering/audit: per-tenant usage attribution + request audit trail,
+    # surfaced at /usage and /audit (both default off, ~zero cost off)
     fw = VirtualClusterFramework(num_nodes=4, scan_interval=5.0,
-                                 heartbeat_interval=2.0, autoscale=True)
+                                 heartbeat_interval=2.0, autoscale=True,
+                                 metering=True, audit=True)
     with fw:
         # metrics over HTTP: counters/summaries/gauges as JSON (stdlib only)
         port = fw.serve_metrics()
@@ -95,6 +98,23 @@ def main():
         # tenant — multiplexes onto one fixed-size cooperative pool
         print("executor:", {k: int(v) for k, v in snap["gauges"].items()
                             if k.startswith("executor")})
+
+        # who used what: /usage attributes every resource axis per tenant
+        # (lifetime totals + rolling window) and scores noisy neighbors
+        usage = json.load(urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/usage"))
+        acme_usage = usage["totals"].get("acme", {})
+        print("acme usage:",
+              {k: round(v, 1) for k, v in sorted(acme_usage.items())})
+        print("noisy neighbors (score >= "
+              f"{usage['noisy_threshold']}):",
+              [f"{n['tenant']}@{n['score']:.2f}" for n in usage["noisy"]])
+        # and who did what: the audit trail, filterable per tenant/verb
+        audit = json.load(urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/audit?tenant=acme&verb=delete"))
+        for rec in audit["records"]:
+            print(f"[audit] {rec['tenant']} {rec['verb']} "
+                  f"{rec['kind']}/{rec['name']} -> {rec['outcome']}")
     print("done")
 
 

@@ -1,11 +1,13 @@
 """VirtualCluster core: the paper's multi-tenant control plane."""
 from .agent import CallableProvider, MockProvider, NodeAgent, Provider, VnAgent
 from .apiserver import APIClient, APIServer, TenantControlPlane
+from .audit import AuditLog
 from .autoscaler import Autoscaler, ScalingPolicy, SignalWindow
 from .cluster import VirtualClusterFramework
 from .executor import CooperativeExecutor, Task
 from .fairqueue import FairWorkQueue
 from .informer import Informer, InformerCache
+from .metering import DETECTOR_AXES, UsageMeter, obj_nbytes
 from .objects import (KINDS, ConfigMap, Event, Namespace, Node, Secret,
                       Service, VirtualClusterCR, VirtualNode, WorkUnit,
                       WorkUnitSpec)
@@ -30,6 +32,7 @@ __all__ = [
     "Controller", "ControllerManager", "MetricsRegistry", "Histogram",
     "RetryLater", "CooperativeExecutor", "Task",
     "Tracer", "Span", "TRACEPARENT_KEY", "SLOTracker", "SLO",
+    "AuditLog", "UsageMeter", "DETECTOR_AXES", "obj_nbytes",
     "Autoscaler", "ScalingPolicy", "SignalWindow",
     "FairWorkQueue", "WorkQueue", "DelayingQueue", "RateLimiter",
     "Informer", "InformerCache", "ObjectStore", "Syncer", "ns_prefix",

@@ -17,6 +17,7 @@ import threading
 import time
 from typing import Any, Callable, List, Optional, Tuple
 
+from . import trace as trace_mod
 from .executor import RetryLater, current_thread_pooled
 from .objects import new_uid
 from .store import ContinueToken, ObjectStore
@@ -78,43 +79,108 @@ class APIClient:
         self._lock = threading.Lock()
         self.request_count = 0
         self.request_latency_sum = 0.0
+        # Optional per-tenant accountability hooks (attached by the
+        # framework / AuditLog.attach). All three default to "off"; an
+        # unwired client pays two attribute loads per request and is
+        # otherwise the pre-audit code path.
+        self.audit: Optional[Any] = None
+        self.meter: Optional[Any] = None
+        self.obs_tenant = ""
 
-    def _req(self, fn: Callable[[], Any], tokens: int = 1) -> Any:
+    def _req(self, fn: Callable[[], Any], tokens: int = 1, verb: str = "",
+             kind: str = "", namespace: str = "", name: str = "",
+             obj: Any = None) -> Any:
+        if self.audit is None and self.meter is None:
+            t0 = time.monotonic()
+            self._bucket.take(n=tokens)
+            out = fn()
+            with self._lock:
+                self.request_count += 1
+                self.request_latency_sum += time.monotonic() - t0
+            return out
+        return self._req_observed(fn, tokens, verb, kind, namespace, name,
+                                  obj)
+
+    def _req_observed(self, fn: Callable[[], Any], tokens: int, verb: str,
+                      kind: str, namespace: str, name: str, obj: Any) -> Any:
         t0 = time.monotonic()
-        self._bucket.take(n=tokens)
-        out = fn()
+        try:
+            self._bucket.take(n=tokens)
+            out = fn()
+        except Exception as e:
+            # failures are audited but (as before) do not bump the
+            # request counters — the request never completed
+            self._observe(verb, kind, namespace, name, obj,
+                          type(e).__name__, time.monotonic() - t0, tokens)
+            raise
+        dt = time.monotonic() - t0
         with self._lock:
             self.request_count += 1
-            self.request_latency_sum += time.monotonic() - t0
+            self.request_latency_sum += dt
+        self._observe(verb, kind, namespace, name, obj, "ok", dt, tokens)
         return out
+
+    def _observe(self, verb: str, kind: str, namespace: str, name: str,
+                 obj: Any, outcome: str, latency_s: float,
+                 count: int) -> None:
+        """Extract ONLY scalars from the subject — ``obj`` may be a
+        ``copy=False`` store internal; retaining it (or any of its mutable
+        containers) past this hook would alias live store state."""
+        tenant = self.obs_tenant or self.name
+        if obj is not None:
+            if not kind:
+                kind = getattr(type(obj), "kind", "")
+            md = obj.metadata
+            namespace = md.namespace
+            name = md.name
+        meter = self.meter
+        if meter is not None:
+            meter.add(tenant, "api_requests", float(count))
+        audit = self.audit
+        if audit is not None:
+            tp: Optional[str] = None
+            if obj is not None:
+                tp = obj.metadata.annotations.get(trace_mod.TRACEPARENT_KEY)
+                if tp is not None and not trace_mod.sampled_carrier(tp):
+                    tp = None
+            audit.record(tenant, verb, kind, namespace, name, outcome,
+                         latency_s, count=count, traceparent=tp)
 
     # -- API surface ---------------------------------------------------------
 
     def create(self, obj: Any) -> Any:
-        return self._req(lambda: self.store.create(obj))
+        return self._req(lambda: self.store.create(obj),
+                         verb="create", obj=obj)
 
     def create_batch(self, objs: List[Any]) -> Tuple[List[Any], List[Any]]:
         """Batched create: one request, ``len(objs)`` rate-limit tokens.
         Returns ``(created, conflicted)`` (see ``ObjectStore.create_many``)."""
         return self._req(lambda: self.store.create_many(objs),
-                         tokens=max(1, len(objs)))
+                         tokens=max(1, len(objs)), verb="create_batch",
+                         obj=objs[0] if objs else None)
 
     def get(self, kind: str, namespace: str, name: str) -> Any:
-        return self._req(lambda: self.store.get(kind, namespace, name))
+        return self._req(lambda: self.store.get(kind, namespace, name),
+                         verb="get", kind=kind, namespace=namespace,
+                         name=name)
 
     def update(self, obj: Any, *, force: bool = False) -> Any:
-        return self._req(lambda: self.store.update(obj, force=force))
+        return self._req(lambda: self.store.update(obj, force=force),
+                         verb="update", obj=obj)
 
     def update_batch(self, objs: List[Any], *, force: bool = False
                      ) -> Tuple[List[Any], List[Any]]:
         """Batched update: one request, ``len(objs)`` rate-limit tokens.
         Returns ``(updated, conflicted)`` (see ``ObjectStore.update_many``)."""
         return self._req(lambda: self.store.update_many(objs, force=force),
-                         tokens=max(1, len(objs)))
+                         tokens=max(1, len(objs)), verb="update_batch",
+                         obj=objs[0] if objs else None)
 
     def update_status(self, kind: str, namespace: str, name: str,
                       mutate: Callable[[Any], None]) -> Any:
-        return self._req(lambda: self.store.update_status(kind, namespace, name, mutate))
+        return self._req(lambda: self.store.update_status(kind, namespace, name, mutate),
+                         verb="update_status", kind=kind,
+                         namespace=namespace, name=name)
 
     def update_status_batch(self, updates: List[Tuple[str, str, str,
                                                       Callable[[Any], None]]]
@@ -123,23 +189,31 @@ class APIClient:
         tokens. Returns ``(updated, missing)`` (see
         ``ObjectStore.update_status_many``)."""
         return self._req(lambda: self.store.update_status_many(updates),
-                         tokens=max(1, len(updates)))
+                         tokens=max(1, len(updates)),
+                         verb="update_status_batch",
+                         kind=updates[0][0] if updates else "",
+                         namespace=updates[0][1] if updates else "")
 
     def delete(self, kind: str, namespace: str, name: str) -> Any:
-        return self._req(lambda: self.store.delete(kind, namespace, name))
+        return self._req(lambda: self.store.delete(kind, namespace, name),
+                         verb="delete", kind=kind, namespace=namespace,
+                         name=name)
 
     def delete_batch(self, keys: List[Tuple[str, str, str]]
                      ) -> Tuple[List[Any], List[Tuple[str, str, str]]]:
         """Batched delete: one request, ``len(keys)`` rate-limit tokens.
         Returns ``(deleted, missing)`` (see ``ObjectStore.delete_many``)."""
         return self._req(lambda: self.store.delete_many(keys),
-                         tokens=max(1, len(keys)))
+                         tokens=max(1, len(keys)), verb="delete_batch",
+                         kind=keys[0][0] if keys else "",
+                         namespace=keys[0][1] if keys else "")
 
     def list(self, kind: str, namespace: Optional[str] = None, *,
              copy: bool = True) -> List[Any]:
         """Snapshot LIST. ``copy=False`` returns the stored refs (READ-ONLY
         contract) for trusted in-process consumers — zero deepcopy cost."""
-        return self._req(lambda: self.store.list(kind, namespace, copy=copy))
+        return self._req(lambda: self.store.list(kind, namespace, copy=copy),
+                         verb="list", kind=kind, namespace=namespace or "")
 
     def list_paged(self, kind: str, namespace: Optional[str] = None, *,
                    limit: int = 500,
@@ -152,7 +226,7 @@ class APIClient:
         token — a cold 100k-object LIST no longer starves the bucket."""
         return self._req(lambda: self.store.list_page(
             kind, namespace, limit=limit, continue_token=continue_token,
-            copy=copy))
+            copy=copy), verb="list", kind=kind, namespace=namespace or "")
 
     def list_all_pages(self, kind: str, namespace: Optional[str] = None, *,
                        limit: int = 500, copy: bool = True
@@ -181,7 +255,9 @@ class APIClient:
     def list_and_watch(self, kind: str, namespace: Optional[str] = None, *,
                        copy: bool = True):
         return self._req(lambda: self.store.list_and_watch(kind, namespace,
-                                                           copy=copy))
+                                                           copy=copy),
+                         verb="list_and_watch", kind=kind,
+                         namespace=namespace or "")
 
 
 class APIServer(APIClient):
@@ -197,10 +273,16 @@ class APIServer(APIClient):
 
     def client(self, name: str, qps: Optional[float] = None,
                burst: Optional[int] = None) -> APIClient:
-        """A dedicated client handle: same store, its own token bucket."""
-        return APIClient(f"{self.name}/{name}", self.store,
-                         qps if qps is not None else self.qps,
-                         burst if burst is not None else self.burst)
+        """A dedicated client handle: same store, its own token bucket.
+        Inherits the server's audit/meter attribution, so per-shard handles
+        over a tenant plane keep accounting to that tenant."""
+        c = APIClient(f"{self.name}/{name}", self.store,
+                      qps if qps is not None else self.qps,
+                      burst if burst is not None else self.burst)
+        c.audit = self.audit
+        c.meter = self.meter
+        c.obs_tenant = self.obs_tenant
+        return c
 
     def close(self) -> None:
         self.store.close()
@@ -217,6 +299,10 @@ class TenantControlPlane:
         self.name = name
         self.weight = weight
         self.api = APIServer(f"tenant:{name}")
+        # fixed attribution labels: a tenant plane is single-tenant by
+        # construction, so audit/meter hooks attached later need no lookup
+        self.api.obs_tenant = name
+        self.api.store.meter_tenant = name
 
     def kubeconfig(self) -> dict:
         """Access credential stored in the super cluster by the operator."""

@@ -199,6 +199,12 @@ class ScalingPolicy:
     autotune_weights: bool = True
     autotune_min_factor: float = 0.5
     autotune_max_factor: float = 4.0
+    # noisy-neighbor advisory (needs a UsageMeter attached): a tenant whose
+    # windowed dominant share crosses noisy_threshold has its autotune boost
+    # factor multiplied by noisy_dampen BEFORE clamping, so attribution
+    # feeds the WRR loop without overriding the operator's weight bounds
+    noisy_threshold: float = 2.0
+    noisy_dampen: float = 0.5
 
     def clamp_shards(self, n: int) -> int:
         return max(self.min_shards, min(self.max_shards, n))
@@ -314,6 +320,10 @@ class Autoscaler(Controller):
         # the serving data plane's engine fleet (fourth actuator); attached
         # post-construction by ServingFleet.attach via set_engine_fleet
         self.engine_fleet: Optional[Any] = None
+        # optional UsageMeter (framework-set): its dominant-share detector
+        # feeds the autotune pass as an advisory dampening input
+        self.meter: Optional[Any] = None
+        self._last_noisy: Dict[str, float] = {}
         self._prev_ttft = (0.0, 0.0)         # cumulative (sum, count)
         self.weight_retunes = 0
         # cumulative (sum, count) per shard-controller NAME: the registry
@@ -557,6 +567,16 @@ class Autoscaler(Controller):
             return 0
         sy = self.syncer
         changed = 0
+        # advisory noisy-neighbor input: dominant-share scores from the
+        # usage meter (when attached) dampen the boost of tenants already
+        # consuming well past their fair share on some resource axis
+        noisy: Dict[str, float] = {}
+        um = self.meter
+        if um is not None and p.noisy_dampen < 1.0:
+            noisy = {r["tenant"]: r["score"]
+                     for r in um.noisy(p.noisy_threshold)}
+        with self._state_lock:
+            self._last_noisy = dict(noisy)
         queues = ([c.queue for c in sy.shard_controllers]
                   + [c.queue for c in sy.upward.controllers])
         for q in queues:
@@ -575,6 +595,10 @@ class Autoscaler(Controller):
                     continue
                 base = max(1, int(reg.plane.weight))
                 factor = (mean_wait / overall) * (fair_n / max(1, n))
+                if tenant in noisy:
+                    factor *= p.noisy_dampen
+                    self.metrics.inc("autoscaler_noisy_dampened",
+                                     tenant=tenant)
                 factor = min(p.autotune_max_factor,
                              max(p.autotune_min_factor, factor))
                 if q.set_weight(tenant, round(base * factor)):
@@ -615,6 +639,7 @@ class Autoscaler(Controller):
             ticks = self.ticks
             contended = self.contended_resizes
             retunes = self.weight_retunes
+            noisy = dict(self._last_noisy)
         if last is not None:
             last["age_s"] = round(now - last.pop("t_monotonic"), 3)
         ex = self.pool_executor
@@ -643,6 +668,7 @@ class Autoscaler(Controller):
             "ticks": ticks,
             "contended_resizes": contended,
             "weight_retunes": retunes,
+            "noisy_neighbors": noisy,
         }
 
     def scale_events(self) -> List[Dict[str, Any]]:

@@ -17,11 +17,14 @@ from typing import Any, Callable, Dict, List, Optional
 
 from .agent import MockProvider, NodeAgent, Provider, VnAgent
 from .apiserver import APIServer, TenantControlPlane
+from .audit import AuditLog
 from .autoscaler import Autoscaler, ScalingPolicy
 from .executor import CooperativeExecutor
+from .metering import UsageMeter
 from .objects import VirtualClusterCR, WorkUnit, WorkUnitSpec
 from .router import MeshRouter
-from .runtime import ControllerManager, MetricsRegistry
+from .runtime import (PROMETHEUS_CONTENT_TYPE, ControllerManager,
+                      MetricsRegistry, prometheus_text)
 from .scheduler import SuperScheduler
 from .slo import SLOTracker
 from .store import NotFoundError
@@ -77,7 +80,11 @@ class VirtualClusterFramework:
                  autoscale_policy: Optional[ScalingPolicy] = None,
                  autoscale_interval: float = 0.5,
                  tracing: bool = False,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 metering: bool = False,
+                 meter: Optional[UsageMeter] = None,
+                 audit: bool = False,
+                 audit_log: Optional[AuditLog] = None):
         self.executor = (CooperativeExecutor(executor_pool, name="vc-exec")
                          if executor_mode else None)
         # distributed tracing is opt-in (tracing=True, or pass a configured
@@ -85,6 +92,16 @@ class VirtualClusterFramework:
         # so the default deployment is byte-identical to an untraced one
         self.tracer: Optional[Tracer] = (
             tracer if tracer is not None else (Tracer() if tracing else None))
+        # usage metering and the audit trail follow the same opt-in contract:
+        # every hook guards on `meter/audit is not None`, so metering=False
+        # (the default) leaves the hot paths byte-identical to the unmetered
+        # deployment
+        self.meter: Optional[UsageMeter] = (
+            meter if meter is not None else (UsageMeter() if metering
+                                             else None))
+        self.audit: Optional[AuditLog] = (
+            audit_log if audit_log is not None else (AuditLog() if audit
+                                                     else None))
         # per-tenant SLO accounting is always on: a handful of ints per
         # rolling bucket, fed by the upward pipeline and the serving plane
         self.slo = SLOTracker()
@@ -122,8 +139,18 @@ class VirtualClusterFramework:
                              executor=self.executor,
                              tracer=self.tracer)
         self.syncer.slo = self.slo
+        if self.meter is not None:
+            # sync-lane occupancy + per-item bandwidth, attributed per tenant
+            self.syncer.meter = self.meter
+            # windowed gauges (noisy-tenant count, tracked tenants) ride the
+            # shared registry so /metrics exports them alongside everything
+            self.meter.bind(self.manager.metrics)
         self.operator = TenantOperator(self.super_api, self.syncer,
                                        vn_agents=[self.vn_agent])
+        # the operator stamps audit/meter onto every tenant plane it
+        # provisions, before syncer registration — first request attributed
+        self.operator.audit = self.audit
+        self.operator.meter = self.meter
         # registration order == start order; stop runs in reverse
         self.manager.add(*self.agents.values())
         self.manager.add(self.router)
@@ -155,6 +182,9 @@ class VirtualClusterFramework:
             self.autoscaler = Autoscaler(self.syncer, self.executor,
                                          policy=policy,
                                          interval=autoscale_interval)
+            # advisory input only: the weight autotuner dampens tenants the
+            # dominant-share detector currently flags as noisy
+            self.autoscaler.meter = self.meter
             self.manager.add(self.autoscaler)
         self._started = False
         self._metrics_server: Optional[Any] = None
@@ -178,13 +208,25 @@ class VirtualClusterFramework:
 
         - ``/`` or ``/metrics`` — ``MetricsRegistry.snapshot()`` (counters,
           summaries, gauges, histograms — including the executor and
-          autoscaler gauges);
+          autoscaler gauges). With ``?format=prom`` — or an ``Accept``
+          header naming ``text/plain`` or ``openmetrics`` — the same
+          snapshot is rendered in Prometheus text exposition format 0.0.4
+          instead of JSON;
         - ``/healthz`` — ``{"controllers": <per-controller health map>,
           "autoscaler": <loop state or null>, "slo": <per-tenant SLO
-          compliance/burn-rate map>}``, 503 if any controller is unhealthy.
-          The autoscaler state (last decision, current targets, cooldown
-          remaining, signal windows) makes a wedged control loop visible
-          from outside the process;
+          compliance/burn-rate map>, "usage": <noisy-neighbor summary or
+          null>}``, 503 if any controller is unhealthy. The autoscaler
+          state (last decision, current targets, cooldown remaining,
+          signal windows) makes a wedged control loop visible from outside
+          the process;
+        - ``/usage`` — the :class:`UsageMeter` state: rolling-window
+          per-tenant consumption by resource axis, exact lifetime totals,
+          dominant-share scores and currently-noisy tenants
+          (``{"enabled": false}`` when metering is off);
+        - ``/audit`` — the :class:`AuditLog` state: per-tenant/verb counts
+          plus the retained record rings, filterable with
+          ``?tenant=&verb=&kind=&limit=`` query params
+          (``{"enabled": false}`` when auditing is off);
         - ``/traces`` — the tracer's retained span ring as JSON
           (``{"enabled", "stats", "spans"}``; empty when tracing is off);
           ``/traces/chrome`` (or ``/traces?format=chrome``) returns the
@@ -200,18 +242,59 @@ class VirtualClusterFramework:
         fw = self
 
         class Handler(BaseHTTPRequestHandler):
+            def _wants_prom(self, query: str) -> bool:
+                if "format=prom" in query:
+                    return True
+                accept = (self.headers.get("Accept") or "").lower()
+                return "text/plain" in accept or "openmetrics" in accept
+
             def do_GET(self) -> None:
                 path, _, query = self.path.partition("?")
                 tr = fw.tracer
+                ctype = "application/json"
                 if path in ("/", "/metrics"):
-                    code, payload = 200, fw.metrics.snapshot()
+                    snap = fw.metrics.snapshot()
+                    if self._wants_prom(query):
+                        code = 200
+                        body = prometheus_text(snap).encode()
+                        ctype = PROMETHEUS_CONTENT_TYPE
+                        self._reply(code, body, ctype)
+                        return
+                    code, payload = 200, snap
                 elif path == "/healthz":
                     health = fw.healthy()
                     code = 200 if all(health.values()) else 503
                     payload = {"controllers": health,
                                "autoscaler": (fw.autoscaler.state()
                                               if fw.autoscaler else None),
-                               "slo": fw.slo.state()}
+                               "slo": fw.slo.state(),
+                               "usage": (fw.meter.noisy_state()
+                                         if fw.meter is not None else None)}
+                elif path == "/usage":
+                    code = 200
+                    payload = (fw.meter.state() if fw.meter is not None
+                               else {"enabled": False})
+                elif path == "/audit":
+                    code = 200
+                    au = fw.audit
+                    if au is None:
+                        payload = {"enabled": False}
+                    else:
+                        import urllib.parse
+                        q = urllib.parse.parse_qs(query)
+
+                        def first(key: str) -> Optional[str]:
+                            vals = q.get(key)
+                            return vals[0] if vals else None
+
+                        try:
+                            limit = int(first("limit") or 256)
+                        except ValueError:
+                            limit = 256
+                        payload = au.state(tenant=first("tenant"),
+                                           verb=first("verb"),
+                                           kind=first("kind"),
+                                           limit=limit)
                 elif path == "/traces/chrome" or (
                         path == "/traces" and "format=chrome" in query):
                     code = 200
@@ -224,9 +307,12 @@ class VirtualClusterFramework:
                                "spans": tr.spans() if tr is not None else []}
                 else:
                     code, payload = 404, {"error": f"no route {self.path}"}
-                body = json.dumps(payload, default=str).encode()
+                self._reply(code, json.dumps(payload, default=str).encode(),
+                            ctype)
+
+            def _reply(self, code: int, body: bytes, ctype: str) -> None:
                 self.send_response(code)
-                self.send_header("Content-Type", "application/json")
+                self.send_header("Content-Type", ctype)
                 self.send_header("Content-Length", str(len(body)))
                 self.end_headers()
                 self.wfile.write(body)

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Dict, Hashable, List, Optional, Tuple
+from typing import Any, Dict, Hashable, List, Optional, Tuple
 
 from .workqueue import WakerSubscriptions
 
@@ -56,6 +56,11 @@ class FairWorkQueue(WakerSubscriptions):
         self.deduped = 0
         self._enqueue_time: Dict[Item, float] = {}
         self.per_tenant_wait: Dict[str, List[float]] = {}
+        # optional UsageMeter: dequeues account queue occupancy (items +
+        # summed wait) per tenant. The meter is invoked AFTER releasing
+        # ``_cv`` — never under the queue lock — and one attr check per
+        # dequeue is the whole cost when unset.
+        self.meter: Optional[Any] = None
 
     # -- tenant management ----------------------------------------------------
 
@@ -175,8 +180,12 @@ class FairWorkQueue(WakerSubscriptions):
             if not self._wait_for_items(timeout):
                 return None
             item = self._fifo.pop(0) if not self.fair else self._wrr_pop_locked()
-            self._mark_dequeued(item)
-            return item
+            wait = self._mark_dequeued(item)
+        m = self.meter
+        if m is not None:
+            m.add_many(item[0], (("queue_items", 1.0),
+                                 ("queue_wait_s", wait)))
+        return item
 
     def get_batch(self, max_items: int, timeout: Optional[float] = None
                   ) -> List[Item]:
@@ -192,30 +201,35 @@ class FairWorkQueue(WakerSubscriptions):
                 return []
             if not self.fair:
                 out = [self._fifo.pop(0)]
-                self._mark_dequeued(out[0])
+                wait_sum = self._mark_dequeued(out[0])
                 # batches stay single-tenant in FIFO mode too (consumers
                 # coalesce per tenant): stop at the first tenant change
                 while (self._fifo and len(out) < max_items
                        and self._fifo[0][0] == out[0][0]):
                     item = self._fifo.pop(0)
-                    self._mark_dequeued(item)
+                    wait_sum += self._mark_dequeued(item)
                     out.append(item)
-                return out
-            first = self._wrr_pop_locked()
-            self._mark_dequeued(first)
-            out = [first]
-            tenant = first[0]
-            sub = self._subs.get(tenant)
-            while sub is not None and sub.items and len(out) < max_items:
-                item: Item = (tenant, sub.items.pop(0))
-                self._mark_dequeued(item)
-                out.append(item)
-            if sub is not None and not sub.items and tenant in self._active:
-                i = self._active.index(tenant)
-                self._active.pop(i)
-                if i < self._cursor:
-                    self._cursor -= 1
-            return out
+            else:
+                first = self._wrr_pop_locked()
+                wait_sum = self._mark_dequeued(first)
+                out = [first]
+                tenant = first[0]
+                sub = self._subs.get(tenant)
+                while sub is not None and sub.items and len(out) < max_items:
+                    item: Item = (tenant, sub.items.pop(0))
+                    wait_sum += self._mark_dequeued(item)
+                    out.append(item)
+                if sub is not None and not sub.items and tenant in self._active:
+                    i = self._active.index(tenant)
+                    self._active.pop(i)
+                    if i < self._cursor:
+                        self._cursor -= 1
+        m = self.meter
+        if m is not None:
+            # batches are single-tenant by construction: one meter round
+            m.add_many(out[0][0], (("queue_items", float(len(out))),
+                                   ("queue_wait_s", wait_sum)))
+        return out
 
     def _wait_for_items(self, timeout: Optional[float]) -> bool:
         """Block (under ``_cv``) until items exist or shutdown; True if items."""
@@ -227,16 +241,20 @@ class FairWorkQueue(WakerSubscriptions):
             self._cv.wait(remaining)
         return self._has_items()
 
-    def _mark_dequeued(self, item: Item) -> None:
+    def _mark_dequeued(self, item: Item) -> float:
+        """Bookkeep a dequeue (under ``_cv``); returns the item's queue wait
+        so callers can meter it after releasing the lock."""
         self._dirty.discard(item)
         self._processing.add(item)
         t0 = self._enqueue_time.pop(item, None)
-        if t0 is not None:
-            wait = time.monotonic() - t0
-            samples = self.per_tenant_wait.setdefault(item[0], [])
-            samples.append(wait)
-            if len(samples) > self._WAIT_SAMPLES_CAP:   # unconsumed: bound it
-                del samples[:self._WAIT_SAMPLES_CAP // 2]
+        if t0 is None:
+            return 0.0
+        wait = time.monotonic() - t0
+        samples = self.per_tenant_wait.setdefault(item[0], [])
+        samples.append(wait)
+        if len(samples) > self._WAIT_SAMPLES_CAP:   # unconsumed: bound it
+            del samples[:self._WAIT_SAMPLES_CAP // 2]
+        return wait
 
     def done(self, item: Item) -> None:
         with self._cv:

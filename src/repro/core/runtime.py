@@ -45,7 +45,8 @@ from .workqueue import DelayingQueue, RateLimiter, WorkQueue
 # syncer.py, tests); the class itself moved to executor.py so leaf modules
 # (apiserver.py) can raise it without importing the controller runtime.
 __all__ = ["RetryLater", "MetricsRegistry", "Histogram", "Controller",
-           "ControllerManager"]
+           "ControllerManager", "prometheus_text",
+           "PROMETHEUS_CONTENT_TYPE"]
 
 
 # --------------------------------------------------------------------- metrics
@@ -251,6 +252,103 @@ class MetricsRegistry:
         return {"counters": counters, "summaries": summaries,
                 "gauges": out_gauges,
                 "histograms": {k: h.state() for k, h in hists}}
+
+
+# ------------------------------------------------- Prometheus text exposition
+
+#: Content type of the rendered exposition (text format 0.0.4).
+PROMETHEUS_CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+
+
+def _prom_name(name: str) -> str:
+    out = []
+    for ch in name:
+        out.append(ch if (ch.isalnum() or ch in "_:") else "_")
+    s = "".join(out)
+    return s if s and not s[0].isdigit() else "_" + s
+
+
+def _prom_parse_key(key: str) -> Tuple[str, List[Tuple[str, str]]]:
+    """Split a registry key ``name{a=b,c=d}`` into (name, label pairs).
+    Label values in this codebase never contain ``,``/``=`` (tenant,
+    controller, and informer names), so the flat split is exact."""
+    name, brace, rest = key.partition("{")
+    labels: List[Tuple[str, str]] = []
+    if brace:
+        for pair in rest.rstrip("}").split(","):
+            k, _, v = pair.partition("=")
+            labels.append((k, v))
+    return _prom_name(name), labels
+
+
+def _prom_sample(name: str, labels: List[Tuple[str, str]],
+                 value: Any) -> str:
+    v = float(value)
+    val = "NaN" if v != v else repr(v)
+    if not labels:
+        return f"{name} {val}"
+    inner = ",".join(
+        '{}="{}"'.format(_prom_name(k),
+                         str(v2).replace("\\", "\\\\").replace('"', '\\"')
+                         .replace("\n", "\\n"))
+        for k, v2 in labels)
+    return f"{name}{{{inner}}} {val}"
+
+
+def prometheus_text(snapshot: Dict[str, Any]) -> str:
+    """Render a :meth:`MetricsRegistry.snapshot` in Prometheus text
+    exposition format (0.0.4), for standard scrapers.
+
+    Counters and gauges map 1:1. Summaries render as ``TYPE summary``
+    (``<name>_sum``/``<name>_count``), histograms as quantile summaries
+    under the ``<name>_hist`` family — a histogram may share its base name
+    with a summary (e.g. ``serving_ttft_seconds``), so the suffix keeps
+    the two families distinct. ``max`` fields land in trailing
+    ``*_max`` gauge families.
+    """
+    lines: List[str] = []
+    max_families: Dict[str, List[Tuple[List[Tuple[str, str]], float]]] = {}
+
+    def grouped(section: Dict[str, Any]
+                ) -> List[Tuple[str, List[Tuple[List[Tuple[str, str]], Any]]]]:
+        groups: Dict[str, List[Tuple[List[Tuple[str, str]], Any]]] = {}
+        for key, val in section.items():
+            name, labels = _prom_parse_key(key)
+            groups.setdefault(name, []).append((labels, val))
+        return [(n, sorted(groups[n], key=lambda e: e[0]))
+                for n in sorted(groups)]
+
+    for mtype, section_name in (("counter", "counters"),
+                                ("gauge", "gauges")):
+        for name, entries in grouped(snapshot.get(section_name, {})):
+            lines.append(f"# TYPE {name} {mtype}")
+            for labels, val in entries:
+                lines.append(_prom_sample(name, labels, val))
+    for name, entries in grouped(snapshot.get("summaries", {})):
+        lines.append(f"# TYPE {name} summary")
+        for labels, s in entries:
+            lines.append(_prom_sample(name + "_sum", labels, s.get("sum", 0.0)))
+            lines.append(_prom_sample(name + "_count", labels,
+                                      s.get("count", 0.0)))
+            max_families.setdefault(name + "_max", []).append(
+                (labels, float(s.get("max", 0.0))))
+    for name, entries in grouped(snapshot.get("histograms", {})):
+        fam = name + "_hist"
+        lines.append(f"# TYPE {fam} summary")
+        for labels, h in entries:
+            for q, field in (("0.5", "p50"), ("0.9", "p90"), ("0.99", "p99")):
+                lines.append(_prom_sample(
+                    fam, labels + [("quantile", q)], h.get(field, 0.0)))
+            lines.append(_prom_sample(fam + "_sum", labels, h.get("sum", 0.0)))
+            lines.append(_prom_sample(fam + "_count", labels,
+                                      h.get("count", 0.0)))
+            max_families.setdefault(fam + "_max", []).append(
+                (labels, float(h.get("max", 0.0))))
+    for name in sorted(max_families):
+        lines.append(f"# TYPE {name} gauge")
+        for labels, val in sorted(max_families[name], key=lambda e: e[0]):
+            lines.append(_prom_sample(name, labels, val))
+    return "\n".join(lines) + "\n"
 
 
 # ------------------------------------------------------------------ controller

@@ -44,6 +44,7 @@ v2 rebuilds the READ path for the O(1k)-tenant / O(100k)-object regime:
 """
 from __future__ import annotations
 
+import sys
 import threading
 import time
 from collections import deque
@@ -259,6 +260,12 @@ class ObjectStore:
         # annotation record an instant "store.commit" child span. One attr
         # check per write when unset — tracing off costs nothing.
         self.tracer: Optional[Any] = None
+        # optional UsageMeter + fixed tenant attribution: tenant stores are
+        # single-tenant, so every committed write meters object-bytes under
+        # meter_tenant. The super store stays unmetered (its traffic is
+        # attributed at the sync lanes instead). Same cost model as tracer.
+        self.meter: Optional[Any] = None
+        self.meter_tenant = ""
 
     # -- index maintenance (call under lock) --------------------------------
 
@@ -287,6 +294,21 @@ class ObjectStore:
 
     # -- CRUD ---------------------------------------------------------------
 
+    def _meter_commit(self, objs: Any) -> None:
+        """Meter committed object-bytes — OUTSIDE the store lock, one meter
+        round per write call regardless of batch size (a per-item hook under
+        the lock would stretch every writer's critical section)."""
+        m = self.meter
+        if m is None:
+            return
+        if isinstance(objs, list):
+            if not objs:
+                return
+            nbytes = sum(sys.getsizeof(o) for o in objs) + 512 * len(objs)
+        else:
+            nbytes = sys.getsizeof(objs) + 512
+        m.add(self.meter_tenant, "object_bytes", float(nbytes))
+
     def create(self, obj: Any) -> Any:
         with self._lock:
             key = obj_key(obj)
@@ -300,7 +322,9 @@ class ObjectStore:
                 stored.metadata.creation_timestamp or time.time())
             self._index_put(key, stored)
             self._notify_stored(ADDED, stored, self._rv)
-            return deepcopy_obj(stored)
+            out = deepcopy_obj(stored)
+        self._meter_commit(out)
+        return out
 
     def create_many(self, objs: List[Any]) -> Tuple[List[Any], List[Any]]:
         """Batched create under ONE lock round (etcd-txn analogue).
@@ -326,6 +350,7 @@ class ObjectStore:
                 self._index_put(key, stored)
                 self._notify_stored(ADDED, stored, self._rv)
                 created.append(deepcopy_obj(stored))
+        self._meter_commit(created)
         return created, conflicted
 
     def get(self, kind: str, namespace: str, name: str) -> Any:
@@ -353,7 +378,9 @@ class ObjectStore:
             stored.metadata.resource_version = self._rv
             self._index_put(key, stored)
             self._notify_stored(MODIFIED, stored, self._rv)
-            return deepcopy_obj(stored)
+            out = deepcopy_obj(stored)
+        self._meter_commit(out)
+        return out
 
     def update_status(self, kind: str, namespace: str, name: str,
                       mutate: Callable[[Any], None]) -> Any:
@@ -369,7 +396,9 @@ class ObjectStore:
             stored.metadata.resource_version = self._rv
             self._index_put(key, stored)
             self._notify_stored(MODIFIED, stored, self._rv)
-            return deepcopy_obj(stored)
+            out = deepcopy_obj(stored)
+        self._meter_commit(out)
+        return out
 
     def delete(self, kind: str, namespace: str, name: str) -> Any:
         with self._lock:
@@ -378,7 +407,9 @@ class ObjectStore:
                 raise NotFoundError(f"{kind} {namespace}/{name} not found")
             self._rv += 1
             self._notify_stored(DELETED, obj, self._rv)
-            return deepcopy_obj(obj)
+            out = deepcopy_obj(obj)
+        self._meter_commit(out)
+        return out
 
     def update_many(self, objs: List[Any], *, force: bool = False
                     ) -> Tuple[List[Any], List[Any]]:
@@ -409,6 +440,7 @@ class ObjectStore:
                 self._index_put(key, stored)
                 self._notify_stored(MODIFIED, stored, self._rv)
                 updated.append(deepcopy_obj(stored))
+        self._meter_commit(updated)
         return updated, conflicted
 
     def update_status_many(self, updates: List[Tuple[str, str, str,
@@ -428,6 +460,7 @@ class ObjectStore:
         """
         updated: List[Tuple[str, str, str]] = []
         missing: List[Tuple[str, str, str]] = []
+        nbytes = 0
         with self._lock:
             for kind, namespace, name, mutate in updates:
                 key = (kind, namespace, name)
@@ -441,7 +474,13 @@ class ObjectStore:
                 stored.metadata.resource_version = self._rv
                 self._index_put(key, stored)
                 self._notify_stored(MODIFIED, stored, self._rv)
+                nbytes += sys.getsizeof(stored)
                 updated.append(key)
+        m = self.meter
+        if m is not None and updated:
+            # no object copies survive this call — size accumulated in-loop
+            m.add(self.meter_tenant, "object_bytes",
+                  float(nbytes + 512 * len(updated)))
         return updated, missing
 
     def delete_many(self, keys: List[Tuple[str, str, str]]
@@ -463,6 +502,7 @@ class ObjectStore:
                 self._rv += 1
                 self._notify_stored(DELETED, obj, self._rv)
                 deleted.append(deepcopy_obj(obj))
+        self._meter_commit(deleted)
         return deleted, missing
 
     # -- snapshot reads -----------------------------------------------------

@@ -52,6 +52,7 @@ from typing import Any, Dict, List, Optional, Tuple
 from .apiserver import APIServer, TenantControlPlane
 from .fairqueue import FairWorkQueue
 from .informer import Informer
+from .metering import obj_nbytes
 from .objects import (SYNCED_KINDS_DOWNWARD, SYNCED_KINDS_UPWARD, Namespace,
                       deepcopy_obj, obj_kind, spec_equal, status_equal)
 from .ring import ShardRing, shard_for  # noqa: F401  (re-export: public API)
@@ -177,6 +178,8 @@ class _DownwardShard(Controller):
         self.syncer = syncer
         self.shard_id = shard_id
         self.api = syncer.super_api.client(f"dws-{shard_id}")
+        # shards created after wiring (resize) inherit the live meter
+        self.queue.meter = syncer._meter
 
     def _retry_queue(self, item: Any) -> Any:
         """Retries re-enter the tenant's CURRENT shard: if resize_shards
@@ -290,6 +293,10 @@ class Syncer:
         # optional SLOTracker (set by the framework): the upward pipeline
         # feeds the end-to-end propagation latency into it
         self.slo: Optional[Any] = None
+        # optional UsageMeter (set via the `meter` property, which also
+        # propagates to every shard queue): sync lanes account per-tenant
+        # items/bytes, queues account occupancy. None = zero-cost guards.
+        self._meter: Optional[Any] = None
         # per-informer cache byte budget for tenant-side informers (None =
         # unbounded); evicted keys read through the apiserver on access
         self.informer_cache_budget = informer_cache_budget
@@ -455,6 +462,21 @@ class Syncer:
     def stop(self) -> None:
         for c in reversed(self.controllers):
             c.stop()
+
+    @property
+    def meter(self) -> Optional[Any]:
+        """Optional :class:`~repro.core.metering.UsageMeter`. Assigning
+        propagates to every live shard queue (downward + upward); shards
+        created by a later resize inherit it at construction."""
+        return self._meter
+
+    @meter.setter
+    def meter(self, m: Optional[Any]) -> None:
+        self._meter = m
+        for c in self.shard_controllers:
+            c.queue.meter = m
+        for uc in self.upward.controllers:
+            uc.queue.meter = m
 
     # --------------------------------------------------------------- resizing
 
@@ -672,6 +694,9 @@ class Syncer:
             if kind == "WorkUnit":
                 self.vnodes.unbind(reg.plane, ns, name)
             self.metrics.inc_downward()
+            m = self._meter
+            if m is not None:
+                m.add(tenant, "down_items", 1.0)
             return
 
         self._ensure_super_namespace(reg, super_ns, tenant, ns, api=api)
@@ -682,6 +707,11 @@ class Syncer:
             try:
                 api.create(projected)
                 self.metrics.inc_downward()
+                m = self._meter
+                if m is not None:
+                    m.add_many(tenant, (("down_items", 1.0),
+                                        ("down_bytes",
+                                         float(obj_nbytes(projected)))))
                 self._trace_down(tenant_obj, t0, tenant, kind, ns, name)
             except AlreadyExistsError:
                 pass
@@ -693,6 +723,11 @@ class Syncer:
                 projected.status = existing.status  # status is super-owned
             api.update(projected)
             self.metrics.inc_downward()
+            m = self._meter
+            if m is not None:
+                m.add_many(tenant, (("down_items", 1.0),
+                                    ("down_bytes",
+                                     float(obj_nbytes(projected)))))
             self._trace_down(tenant_obj, t0, tenant, kind, ns, name)
 
     def _trace_down(self, tenant_obj: Any, t0: float, tenant: str, kind: str,
@@ -787,6 +822,8 @@ class Syncer:
                     tp = tenant_obj.metadata.annotations.get(TRACEPARENT_KEY)
                     if tp and sampled_carrier(tp):
                         traced[key] = tenant_obj
+        m = self._meter
+
         def route_write(keys_projs: List[Tuple[DownItem, Any]],
                         applied: int, conflicted: List[Any]) -> None:
             # cache races (create conflict / stale update rv) go slow for
@@ -794,15 +831,22 @@ class Syncer:
             self.metrics.inc_downward(applied)
             lost = {(obj_kind(o), o.metadata.namespace, o.metadata.name)
                     for o in conflicted}
+            nbytes = 0
             for key, proj in keys_projs:
                 if (key[0], proj.metadata.namespace, key[2]) in lost:
                     slow.append(key)
                 else:
                     fast.append(key)
+                    nbytes += obj_nbytes(proj)
                     tobj = traced.pop(key, None)
                     if tobj is not None:
                         self._trace_down(tobj, t0, tenant, key[0], key[1],
                                          key[2], batch=len(keys))
+            if m is not None and applied:
+                # one meter round for the whole batched write: items land
+                # under the burst's tenant with the batch's byte volume
+                m.add_many(tenant, (("down_items", float(applied)),
+                                    ("down_bytes", float(nbytes))))
 
         if to_create:
             created, conflicted = api.create_batch(to_create)
@@ -815,6 +859,8 @@ class Syncer:
         if to_delete:
             deleted, _missing = api.delete_batch(to_delete)
             self.metrics.inc_downward(len(deleted))
+            if m is not None and deleted:
+                m.add(tenant, "down_items", float(len(deleted)))
             gone = {(obj_kind(o), o.metadata.namespace, o.metadata.name)
                     for o in deleted}
             for skey, key in zip(to_delete, delete_keys):

@@ -42,6 +42,11 @@ class TenantOperator(Controller):
                                           name="operator/vc")
         self.planes: Dict[str, TenantControlPlane] = {}
         self._lock = threading.Lock()
+        # optional accountability hooks (framework-set): applied to every
+        # plane at provisioning, BEFORE syncer registration, so informer
+        # pumps and sync lanes are attributed from the first request
+        self.audit: Optional[Any] = None
+        self.meter: Optional[Any] = None
 
     def _on_vc(self, ev_type: str, vc: VirtualClusterCR) -> None:
         self.queue.add((ev_type == DELETED, vc.metadata.name))
@@ -62,6 +67,11 @@ class TenantOperator(Controller):
             if name in self.planes:
                 return
             plane = TenantControlPlane(name, weight=vc.weight)
+            if self.audit is not None:
+                plane.api.audit = self.audit
+            if self.meter is not None:
+                plane.api.meter = self.meter
+                plane.api.store.meter = self.meter
             self.planes[name] = plane
         # persist the kubeconfig in the super cluster (paper: "stores the
         # kubeconfig ... so that the syncer controller can access all tenant

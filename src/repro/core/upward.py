@@ -128,6 +128,8 @@ class UpwardShard(Controller):
         self.syncer = syncer
         self.shard_id = shard_id
         self.api = syncer.super_api.client(f"uws-{shard_id}")
+        # shards created after wiring (resize) inherit the live meter
+        self.queue.meter = syncer._meter
 
     def _retry_queue(self, item: Any) -> Any:
         """Retries re-enter the tenant's CURRENT upward shard (a resize may
@@ -341,6 +343,9 @@ class UpwardPipeline:
         elif kind == "Event":
             self._sync_event_up(reg, tenant_ns, name, super_obj)
         sy.metrics.inc_upward()
+        m = sy._meter
+        if m is not None:
+            m.add(tenant, "up_items", 1.0)
 
     def reconcile_fast(self, tenant: str, keys: List[UpKey],
                        api: Optional[Any] = None
@@ -467,6 +472,11 @@ class UpwardPipeline:
                         fast.append(key)
         if synced:
             sy.metrics.inc_upward(synced)
+            m = sy._meter
+            if m is not None:
+                # the whole coalesced burst attributes to its (single)
+                # tenant: N landed commits -> N up_items, exactly
+                m.add(tenant, "up_items", float(synced))
         return fast, slow
 
     # -------------------------------------------------------------- tracing

@@ -174,6 +174,7 @@ class ServingFleet(Controller):
         # observability wiring (set by attach(): adopted from the framework)
         self.tracer: Optional[Any] = None
         self.slo: Optional[Any] = None
+        self.meter: Optional[Any] = None
 
     # -- wiring ------------------------------------------------------------
 
@@ -185,6 +186,7 @@ class ServingFleet(Controller):
         self.api = fw.super_api
         self.tracer = getattr(fw, "tracer", None)
         self.slo = getattr(fw, "slo", None)
+        self.meter = getattr(fw, "meter", None)
         for agent in fw.agents.values():
             assert isinstance(agent, NodeAgent)
             agent.provider = EngineProvider(self, agent.node_name,
@@ -239,6 +241,18 @@ class ServingFleet(Controller):
         m.observe("serving_request_latency_seconds",
                   max(0.0, req.finished_at - req.submitted_at),
                   tenant=req.tenant)
+        um = self.meter
+        if um is not None:
+            # slot-seconds: wall time the request held an engine slot
+            # (admission -> finish; zero timestamps fall back to the
+            # previous boundary, same convention as the span tree)
+            admit0 = (req.admit_started_at or req.dequeued_at
+                      or req.submitted_at)
+            um.add_many(req.tenant, (
+                ("serving_requests", 1.0),
+                ("tokens", float(len(req.tokens))),
+                ("slot_seconds", max(0.0, req.finished_at - admit0)),
+                ("ttft_s", ttft)))
         if self.slo is not None:
             self.slo.observe("serving_ttft", req.tenant, ttft)
         if self.tracer is not None:
@@ -422,10 +436,17 @@ class ServingFleet(Controller):
         """Periodic anti-entropy: converge units toward desired count and
         flush scheduler wait stats into per-tenant summaries."""
         self._converge()
+        um = self.meter
         for tenant, (n, mean_wait) in \
                 self.scheduler.tenant_wait_stats().items():
+            # observe_n takes the PER-OBSERVATION value (it multiplies by
+            # n itself); passing mean_wait*n here used to inflate the
+            # summary to sum=mean*n^2 and max=mean*n
             self.metrics.observe_n("serving_queue_wait_seconds",
-                                   mean_wait * n, n, tenant=tenant)
+                                   mean_wait, n, tenant=tenant)
+            if um is not None:
+                um.add_many(tenant, (("queue_items", float(n)),
+                                     ("queue_wait_s", mean_wait * n)))
         return 0
 
     def on_stop(self) -> None:

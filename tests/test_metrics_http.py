@@ -1,7 +1,8 @@
-"""The metrics/traces HTTP endpoint under concurrency: parallel scrapes
-of every route must each see a consistent JSON document, and a framework
-shutdown racing in-flight scrapes must neither hang nor corrupt — late
-requests simply fail with a connection error."""
+"""The metrics/traces/audit/usage HTTP endpoint under concurrency: parallel
+scrapes of every route must each see a consistent JSON document (or
+Prometheus text for content-negotiated /metrics), and a framework shutdown
+racing in-flight scrapes must neither hang nor corrupt — late requests
+simply fail with a connection error."""
 import json
 import threading
 import time
@@ -10,7 +11,8 @@ import urllib.request
 
 from repro.core.cluster import VirtualClusterFramework
 
-ROUTES = ("/metrics", "/healthz", "/traces", "/traces/chrome")
+ROUTES = ("/metrics", "/healthz", "/traces", "/traces/chrome",
+          "/usage", "/audit")
 
 
 def _get(port, route, timeout=5):
@@ -22,14 +24,32 @@ def _get(port, route, timeout=5):
         return e.code, json.loads(e.read())
 
 
+def _get_raw(port, route, accept=None, timeout=5):
+    req = urllib.request.Request(f"http://127.0.0.1:{port}{route}")
+    if accept:
+        req.add_header("Accept", accept)
+    with urllib.request.urlopen(req, timeout=timeout) as resp:
+        return resp.status, resp.headers.get("Content-Type"), resp.read()
+
+
 def test_concurrent_scrapes_see_consistent_documents():
     fw = VirtualClusterFramework(num_nodes=2, scan_interval=0.0,
-                                 heartbeat_interval=0.5, tracing=True)
+                                 heartbeat_interval=0.5, tracing=True,
+                                 metering=True, audit=True)
     with fw:
         plane = fw.add_tenant("acme")
         fw.submit(plane, fw.make_unit("probe", chips=1))
         port = fw.serve_metrics(port=0)
         errors = []
+        stop = threading.Event()
+
+        def churn():
+            # keep audit/usage WRITES racing the scrapes below
+            i = 0
+            while not stop.is_set():
+                fw.submit(plane, fw.make_unit(f"w{i:04d}", chips=0))
+                i += 1
+                time.sleep(0.002)
 
         def scrape(worker):
             try:
@@ -41,24 +61,83 @@ def test_concurrent_scrapes_see_consistent_documents():
                         assert set(doc) == {"counters", "summaries",
                                             "gauges", "histograms"}
                     elif route == "/healthz":
-                        assert set(doc) >= {"controllers", "slo"}
+                        assert set(doc) >= {"controllers", "slo", "usage"}
+                        assert doc["usage"]["noisy_threshold"] == 2.0
                     elif route == "/traces":
                         assert doc["enabled"] is True
                         for s in doc["spans"]:
                             assert "trace_id" in s and "name" in s
+                    elif route == "/usage":
+                        assert doc["window_s"] > 0
+                        assert "acme" in doc["totals"]
+                        assert doc["totals"]["acme"]["api_requests"] >= 1
+                    elif route == "/audit":
+                        assert doc["enabled"] is True
+                        assert doc["counts"]["acme"]["create"] >= 1
+                        for r in doc["records"]:
+                            assert r["tenant"] == "acme"
                     else:
                         assert "traceEvents" in doc
             except Exception as e:
                 errors.append(e)
 
+        writer = threading.Thread(target=churn)
         threads = [threading.Thread(target=scrape, args=(w,))
                    for w in range(4)]
+        writer.start()
         for t in threads:
             t.start()
         for t in threads:
             t.join(timeout=60)
+        stop.set()
+        writer.join(timeout=30)
         assert not any(t.is_alive() for t in threads)
         assert not errors
+
+
+def test_audit_query_filters_and_prometheus_negotiation():
+    fw = VirtualClusterFramework(num_nodes=2, scan_interval=0.0,
+                                 heartbeat_interval=0.5,
+                                 metering=True, audit=True)
+    with fw:
+        plane = fw.add_tenant("acme")
+        fw.submit(plane, fw.make_unit("probe", chips=1))
+        port = fw.serve_metrics(port=0)
+        # verb/kind/tenant/limit filters map straight onto AuditLog.records
+        code, doc = _get(port, "/audit?tenant=acme&verb=create&kind=WorkUnit")
+        assert code == 200
+        assert doc["filters"]["verb"] == "create"
+        assert len(doc["records"]) >= 1
+        assert all(r["verb"] == "create" and r["kind"] == "WorkUnit"
+                   for r in doc["records"])
+        code, doc = _get(port, "/audit?tenant=acme&limit=1")
+        assert len(doc["records"]) == 1
+        code, doc = _get(port, "/audit?tenant=ghost")
+        assert doc["records"] == []
+        # Prometheus text exposition via query param and via Accept header
+        for probe in (lambda: _get_raw(port, "/metrics?format=prom"),
+                      lambda: _get_raw(port, "/metrics",
+                                       accept="text/plain")):
+            code, ctype, body = probe()
+            assert code == 200
+            assert ctype.startswith("text/plain")
+            text = body.decode()
+            assert "# TYPE" in text
+            assert "usage_tracked_tenants" in text
+        # default (no Accept preference) stays JSON
+        code, doc = _get(port, "/metrics")
+        assert code == 200 and "gauges" in doc
+
+
+def test_usage_audit_disabled_payloads():
+    fw = VirtualClusterFramework(num_nodes=2, scan_interval=0.0,
+                                 heartbeat_interval=0.5)
+    with fw:
+        port = fw.serve_metrics(port=0)
+        assert _get(port, "/usage")[1] == {"enabled": False}
+        assert _get(port, "/audit")[1] == {"enabled": False}
+        code, doc = _get(port, "/healthz")
+        assert doc["usage"] is None
 
 
 def test_shutdown_races_inflight_scrapes_without_hanging():

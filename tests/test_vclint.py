@@ -20,7 +20,8 @@ from vclint.rules_blocking import BlockingCallRule             # noqa: E402
 from vclint.rules_excepts import SilentExceptRule              # noqa: E402
 from vclint.rules_locks import LockedElsewhereRule, LockOrderRule  # noqa: E402
 from vclint.rules_trace import SpanContextRule                 # noqa: E402
-from vclint.rules_zerocopy import ZeroCopyMutationRule         # noqa: E402
+from vclint.rules_zerocopy import (ZeroCopyMutationRule,       # noqa: E402
+                                   ZeroCopyRetentionRule)
 
 from repro.core import sanitize                                # noqa: E402
 from repro.core.objects import WorkUnit, deepcopy_obj, spec_equal  # noqa: E402
@@ -359,6 +360,49 @@ def test_vcl006_with_and_exempt_factories_clean():
         "            sp.close()",
         "            pass")
     assert check(SpanContextRule, src) == []
+
+
+# ---------------------------------------------------------------- VCL007
+
+def test_vcl007_retained_refs_flagged():
+    src = """
+        class Hooked:
+            def bad(self, store, meter, audit):
+                objs = store.list("WorkUnit", copy=False)
+                audit.record("t", "get", "WorkUnit", obj=objs[0])
+                for o in objs:
+                    meter.add("t", "object_bytes", o.metadata)
+                head = store.peek()
+                audit.record_from(head.status)
+    """
+    findings = check(ZeroCopyRetentionRule, src)
+    assert [f.detail for f in findings] == [
+        "retain:record:objs", "retain:add:o...metadata",
+        "retain:record_from:head...status"]
+    assert all("retain" in f.message or "hook" in f.message
+               for f in findings)
+
+
+def test_vcl007_scalars_and_copies_clean():
+    src = """
+        from repro.core import deepcopy_obj, obj_nbytes
+
+        class Hooked:
+            def fine(self, store, meter, audit, seen):
+                objs = store.list("WorkUnit", copy=False)
+                # extracted scalars: no live ref crosses the hook boundary
+                audit.record("t", "get", "WorkUnit",
+                             name=objs[0].metadata.name)
+                meter.add("t", "object_bytes", float(obj_nbytes(objs[0])))
+                mine = deepcopy_obj(objs[0])
+                audit.record("t", "get", "WorkUnit", obj=mine)
+                # set.add on a non-meter receiver is not a sink
+                seen.add(objs[0])
+                # copy=True reads are never tainted
+                safe = store.list("WorkUnit")
+                audit.record("t", "list", "WorkUnit", obj=safe[0])
+    """
+    assert check(ZeroCopyRetentionRule, src) == []
 
 
 # ------------------------------------------------- baseline + pragma engine

@@ -1,6 +1,6 @@
 """vclint — repo-specific concurrency lint for the control plane.
 
-Six rules prove the invariants ARCHITECTURE.md documents under
+Seven rules prove the invariants ARCHITECTURE.md documents under
 "Concurrency invariants":
 
 - VCL001 lock-order violations (cycles, store-lock-under-watch-lock)
@@ -9,6 +9,7 @@ Six rules prove the invariants ARCHITECTURE.md documents under
 - VCL004 silent ``except Exception`` swallows
 - VCL005 fields written both under a lock and bare
 - VCL006 tracer ``start_span`` not used as a context manager
+- VCL007 zero-copy refs retained past an audit/metering hook boundary
 
 Run as ``PYTHONPATH=tools python -m vclint src`` from the repo root.
 Deliberate violations live in ``tools/vclint/baseline.txt`` (one
@@ -20,11 +21,13 @@ from .rules_blocking import BlockingCallRule
 from .rules_excepts import SilentExceptRule
 from .rules_locks import LockedElsewhereRule, LockOrderRule
 from .rules_trace import SpanContextRule
-from .rules_zerocopy import ZeroCopyMutationRule
+from .rules_zerocopy import ZeroCopyMutationRule, ZeroCopyRetentionRule
 
 ALL_RULES = [LockOrderRule, BlockingCallRule, ZeroCopyMutationRule,
-             SilentExceptRule, LockedElsewhereRule, SpanContextRule]
+             SilentExceptRule, LockedElsewhereRule, SpanContextRule,
+             ZeroCopyRetentionRule]
 
 __all__ = ["Finding", "Rule", "run", "load_baseline", "ALL_RULES",
            "LockOrderRule", "BlockingCallRule", "ZeroCopyMutationRule",
-           "SilentExceptRule", "LockedElsewhereRule", "SpanContextRule"]
+           "SilentExceptRule", "LockedElsewhereRule", "SpanContextRule",
+           "ZeroCopyRetentionRule"]

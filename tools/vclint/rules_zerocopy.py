@@ -1,4 +1,4 @@
-"""VCL003: mutation of zero-copy (``copy=False``) store references.
+"""VCL003/VCL007: misuse of zero-copy (``copy=False``) store references.
 
 Function-local taint tracking: a variable is tainted when bound from a
 call with a literal ``copy=False`` keyword (``list`` / ``watch`` /
@@ -7,9 +7,19 @@ store APIs) or from ``.peek()``. Taint propagates through assignment,
 tuple unpacking, for-loop targets over tainted iterables, and
 subscript/attribute reads; it is cleansed by an explicit copy
 (``deepcopy_obj`` / ``copy.deepcopy`` / ``list()`` / ``dict()`` /
-``sorted()``). Flagged: attribute/item assignment whose target roots at
-a tainted name, and mutating-method calls (``append`` / ``update`` /
-``sort`` / ...) on tainted receivers.
+``sorted()``). VCL003 flags: attribute/item assignment whose target
+roots at a tainted name, and mutating-method calls (``append`` /
+``update`` / ``sort`` / ...) on tainted receivers.
+
+VCL007 guards the observability hook boundary: audit records and usage
+samples outlive the request that produced them (they sit in retention
+rings scraped later by ``/audit`` and ``/usage``), so a hook call must
+only be handed scalars. Passing a tainted object itself — or one of its
+mutable container fields (``metadata``, ``annotations``, ``status``,
+...) — into ``record`` / ``record_from`` / ``add`` / ``add_many``
+retains a live reference to shared store state past the hook boundary:
+a later writer mutates what the scrape returns. Extract the scalar
+(``obj.metadata.name``, ``float(n)``) at the call site instead.
 """
 from __future__ import annotations
 
@@ -27,6 +37,16 @@ MUTATORS = {"append", "extend", "insert", "remove", "pop", "clear", "sort",
             "set_condition", "__setitem__"}
 CLEANSERS = {"deepcopy_obj", "deepcopy", "list", "dict", "sorted", "tuple",
              "set", "frozenset", "copy_obj"}
+# VCL007: observability hooks whose arguments are RETAINED (audit rings,
+# usage series) — handing them a live zero-copy ref outlives the read
+SINK_METHODS = {"record", "record_from", "add_many"}
+# `.add(...)` doubles as set.add(); only treat it as a sink when the
+# receiver looks like a meter/audit handle, not a collection
+SINK_ADD_RECEIVERS = {"meter", "audit", "m", "um", "au", "_meter", "_audit"}
+# container-valued object fields: retaining one of these is retaining
+# shared mutable state even though the chain "looks" field-scoped
+MUTABLE_FIELDS = {"metadata", "annotations", "labels", "status", "spec",
+                  "conditions", "endpoints", "payload", "attrs", "data"}
 
 
 def _has_copy_false(call: ast.Call) -> bool:
@@ -140,3 +160,102 @@ class ZeroCopyMutationRule(Rule):
             self.id, relpath, line, qualname, detail=detail,
             message=(f"{what} — copy=False returns shared READ-ONLY store "
                      f"state; deepcopy_obj() it before mutating"))
+
+
+class ZeroCopyRetentionRule(Rule):
+    id = "VCL007"
+    description = ("zero-copy reference retained past an audit/metering "
+                   "hook boundary")
+
+    def check(self, project: Project) -> List[Finding]:
+        findings: List[Finding] = []
+        for mod in project.modules:
+            for qualname, _ci, fn in iter_functions(mod):
+                findings.extend(self._check_fn(mod.relpath, qualname, fn))
+        return findings
+
+    def _check_fn(self, relpath: str, qualname: str,
+                  fn: ast.FunctionDef) -> List[Finding]:
+        tainted: Set[str] = set()
+        findings: List[Finding] = []
+
+        def expr_tainted(expr: ast.expr) -> bool:
+            if isinstance(expr, ast.Call):
+                return _is_taint_source(expr)
+            if isinstance(expr, (ast.Attribute, ast.Subscript, ast.Name,
+                                 ast.Starred)):
+                r = root_name(expr)
+                return r is not None and r in tainted
+            if isinstance(expr, ast.IfExp):
+                return expr_tainted(expr.body) or expr_tainted(expr.orelse)
+            return False
+
+        def bind(target: ast.expr, value_tainted: bool) -> None:
+            if isinstance(target, ast.Name):
+                if value_tainted:
+                    tainted.add(target.id)
+                else:
+                    tainted.discard(target.id)
+            elif isinstance(target, (ast.Tuple, ast.List)):
+                for elt in target.elts:
+                    bind(elt, value_tainted)
+            elif isinstance(target, ast.Starred):
+                bind(target.value, value_tainted)
+
+        def is_sink(call: ast.Call) -> bool:
+            f = call.func
+            if not isinstance(f, ast.Attribute):
+                return False
+            if f.attr in SINK_METHODS:
+                return True
+            if f.attr == "add":
+                recv = f.value
+                leaf = (recv.id if isinstance(recv, ast.Name)
+                        else recv.attr if isinstance(recv, ast.Attribute)
+                        else "")
+                return leaf in SINK_ADD_RECEIVERS
+            return False
+
+        def retained_ref(arg: ast.expr) -> str:
+            """Return a description if ``arg`` hands the sink a live
+            mutable ref rooted in a tainted name, else ''."""
+            if isinstance(arg, ast.Starred):
+                return retained_ref(arg.value)
+            if isinstance(arg, ast.Name):
+                return arg.id if arg.id in tainted else ""
+            if isinstance(arg, ast.Subscript):
+                # objs[0] hands over the whole object, not a field of it
+                r = root_name(arg)
+                return r if r is not None and r in tainted else ""
+            if isinstance(arg, ast.Attribute):
+                r = root_name(arg)
+                if r is not None and r in tainted \
+                        and arg.attr in MUTABLE_FIELDS:
+                    return f"{r}...{arg.attr}"
+            return ""
+
+        for node in walk_in_scope(fn):
+            if isinstance(node, ast.Assign):
+                vt = expr_tainted(node.value)
+                for tgt in node.targets:
+                    if isinstance(tgt, (ast.Name, ast.Tuple, ast.List,
+                                        ast.Starred)):
+                        bind(tgt, vt)
+            elif isinstance(node, ast.For):
+                bind(node.target, expr_tainted(node.iter))
+            elif isinstance(node, ast.Call) and is_sink(node):
+                args = list(node.args) + [kw.value for kw in node.keywords]
+                for arg in args:
+                    ref = retained_ref(arg)
+                    if ref:
+                        fname = node.func.attr   # type: ignore[attr-defined]
+                        findings.append(Finding(
+                            self.id, relpath, node.lineno, qualname,
+                            detail=f"retain:{fname}:{ref}",
+                            message=(
+                                f"zero-copy ref '{ref}' passed to "
+                                f".{fname}() — audit/usage hooks retain "
+                                f"their arguments past the request; pass "
+                                f"extracted scalars, not live store "
+                                f"objects")))
+        return findings
